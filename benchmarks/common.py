@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: cached perf tables, timing, row printing."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.core import A100, DECODE_CHIP, H100, H100_PCAP, PREFILL_CHIP, Parallelism
+from repro.core.cluster import ModelPerf
+
+FAST = os.environ.get("BENCH_FAST", "") not in ("", "0")
+SIM_DURATION = 25.0 if FAST else 40.0
+RATE = 70.0
+
+_CACHE: Dict[tuple, ModelPerf] = {}
+
+
+def perf(chip, model: str = "bloom-176b", tp: int = 8, ep: int = 1, w_bytes: float = 2.0) -> ModelPerf:
+    key = (chip.name, model, tp, ep, w_bytes)
+    if key not in _CACHE:
+        _CACHE[key] = ModelPerf(
+            chip, get_config(model), Parallelism(tp=tp, ep=ep), w_bytes=w_bytes
+        )
+    return _CACHE[key]
+
+
+class Bench:
+    """Collects (name, value, derived) rows and prints a table."""
+
+    def __init__(self, title: str):
+        self.title = title
+        self.rows: List[tuple] = []
+        self.t0 = time.time()
+
+    def row(self, name: str, value, derived: str = ""):
+        self.rows.append((name, value, derived))
+
+    def dump(self) -> List[str]:
+        out = [f"== {self.title} ==  ({time.time()-self.t0:.1f}s)"]
+        for name, value, derived in self.rows:
+            if isinstance(value, float):
+                value = f"{value:.4g}"
+            out.append(f"{name},{value},{derived}")
+        print("\n".join(out), flush=True)
+        return out

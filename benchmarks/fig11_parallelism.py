@@ -1,0 +1,28 @@
+"""Fig. 11: chip performance under various TP / PP configurations."""
+from repro.configs import get_config
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP, Parallelism
+from repro.core.opgraph import phase_ops
+from repro.core.perfmodel import run_graph
+
+from .common import Bench
+
+
+def main():
+    b = Bench("fig11_parallelism")
+    bloom = get_config("bloom-176b")
+    for tp, pp in [(8, 1), (4, 2), (2, 4)]:
+        par = Parallelism(tp=tp, pp=pp)
+        for phase, batch, chip in [
+            ("prefill", 2, PREFILL_CHIP),
+            ("decode", 64, DECODE_CHIP),
+        ]:
+            ops = phase_ops(bloom, phase=phase, batch=batch, seq=1024, par=par)
+            ours = run_graph(chip, ops).total
+            h = run_graph(H100, ops).total
+            b.row(f"tp{tp}_pp{pp}_{chip.name}_{phase}_rel", h / ours,
+                  "paper fig11: consistent across parallelisms")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 1: arithmetic intensity of prefill vs decode against chip rooflines."""
+from repro.configs import get_config
+from repro.core import A100, DECODE_CHIP, H100, PREFILL_CHIP, Parallelism
+from repro.core.opgraph import phase_ops
+from repro.core.perfmodel import run_graph
+
+from .common import Bench
+
+
+def main():
+    b = Bench("fig1_intensity")
+    bloom = get_config("bloom-176b")
+    par = Parallelism(tp=8)
+    for phase, batch in [("prefill", 2), ("decode", 64)]:
+        ops = phase_ops(bloom, phase=phase, batch=batch, seq=1024, par=par)
+        r = run_graph(H100, ops)
+        mm = [o for o in r.ops if o.kind == "matmul"]
+        flops = sum(o.flops for o in mm)
+        byts = sum(o.bytes for o in mm)
+        b.row(f"{phase}_intensity_flops_per_byte", flops / byts,
+              f"paper fig1: prefill >> decode (batch={batch})")
+    for chip in (H100, A100, PREFILL_CHIP, DECODE_CHIP):
+        b.row(f"{chip.name}_ridge_flops_per_byte", chip.tensor_flops / chip.mem_bw,
+              "compute/bandwidth ridge point")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Fig. 2: simulated prefill latency under varying memory bandwidth."""
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import H100, Parallelism
+from repro.core.opgraph import phase_ops
+from repro.core.perfmodel import run_graph
+
+from .common import Bench
+
+
+def main():
+    b = Bench("fig2_prefill_bw")
+    bloom = get_config("bloom-176b")
+    ops = phase_ops(bloom, phase="prefill", batch=2, seq=1024, par=Parallelism(tp=8))
+    base = run_graph(H100, ops).total
+    b.row("h100_prefill_ms", base * 1e3, "B=2 S=1024 TP=8 FP16")
+    paper = {2500: "+8%", 2000: "+17%", 1500: "+32%"}
+    for bw in [1000, 1500, 2000, 2500, 3000, 3352, 4000]:
+        t = run_graph(dataclasses.replace(H100, mem_bw_override_gbs=float(bw)), ops).total
+        b.row(f"bw_{bw}GBs_rel_latency", t / base,
+              f"paper: {paper.get(bw, '')}")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 3: simulated decode latency under varying core counts."""
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import H100, Parallelism
+from repro.core.opgraph import phase_ops
+from repro.core.perfmodel import run_graph
+
+from .common import Bench
+
+
+def main():
+    b = Bench("fig3_decode_cores")
+    bloom = get_config("bloom-176b")
+    ops = phase_ops(bloom, phase="decode", batch=64, seq=1024, par=Parallelism(tp=8))
+    base = run_graph(H100, ops).total
+    b.row("h100_decode_ms", base * 1e3, "B=64 S=1024 TP=8 FP16")
+    paper = {108: "+2%", 66: "+22%"}
+    for cores in [160, 132, 108, 88, 66, 44]:
+        t = run_graph(dataclasses.replace(H100, core_count=cores), ops).total
+        b.row(f"cores_{cores}_rel_latency", t / base, f"paper: {paper.get(cores, '')}")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

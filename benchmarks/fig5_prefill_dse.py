@@ -1,0 +1,32 @@
+"""Fig. 5: Prefill Chip design space exploration (area vs prefill latency)."""
+from repro.configs import get_config
+from repro.core import PREFILL_CHIP
+from repro.core.dse import pareto, prefill_candidates, sweep
+
+from .common import Bench, FAST
+
+
+def main():
+    b = Bench("fig5_prefill_dse")
+    cands = prefill_candidates()
+    if FAST:
+        cands = cands[:: max(1, len(cands) // 48)]
+    pts = sweep(cands, get_config("bloom-176b"), phase="prefill", batch=2, seq=1024)
+    front = pareto(pts)
+    b.row("candidates", len(pts))
+    b.row("pareto_points", len(front))
+    for p in front[:12]:
+        b.row(f"pareto_{p.chip.name}", p.norm_latency, f"area={p.area_mm2:.0f}mm2")
+    chosen = sweep([PREFILL_CHIP], get_config("bloom-176b"), phase="prefill", batch=2, seq=1024)[0]
+    b.row("chosen_prefill_chip", chosen.norm_latency,
+          f"area={chosen.area_mm2:.0f}mm2 (paper: 1.08x faster at 784mm2)")
+    # the chosen chip must not be dominated by any candidate
+    dominated = any(
+        p.area_mm2 < chosen.area_mm2 and p.latency_s < chosen.latency_s for p in pts
+    )
+    b.row("chosen_dominated", int(dominated), "0 = on/near the frontier")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Fig. 6: Decode Chip design space exploration (area vs decode latency)."""
+from repro.configs import get_config
+from repro.core import DECODE_CHIP
+from repro.core.dse import decode_candidates, pareto, sweep
+
+from .common import Bench, FAST
+
+
+def main():
+    b = Bench("fig6_decode_dse")
+    cands = decode_candidates()
+    if FAST:
+        cands = cands[:: max(1, len(cands) // 48)]
+    pts = sweep(cands, get_config("bloom-176b"), phase="decode", batch=64, seq=1024)
+    front = pareto(pts)
+    b.row("candidates", len(pts))
+    b.row("pareto_points", len(front))
+    for p in front[:12]:
+        b.row(f"pareto_{p.chip.name}", p.norm_latency, f"area={p.area_mm2:.0f}mm2")
+    chosen = sweep([DECODE_CHIP], get_config("bloom-176b"), phase="decode", batch=64, seq=1024)[0]
+    b.row("chosen_decode_chip", chosen.norm_latency,
+          f"area={chosen.area_mm2:.0f}mm2 (paper: 0.97x perf at 520mm2)")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

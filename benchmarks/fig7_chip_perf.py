@@ -1,0 +1,48 @@
+"""Fig. 7: chip performance grids (batch x seq), normalized to modeled H100."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP, Parallelism
+from repro.core.opgraph import kv_bytes_per_token, phase_ops, weight_bytes
+from repro.core.perfmodel import run_graph
+
+from .common import Bench
+
+PB, PS = [1, 2, 4, 8, 16], [64, 256, 1024, 2048, 4096, 8192, 12288, 16384]
+DB, DS = [16, 32, 64, 128, 256], [256, 1024, 2048, 4096, 8192]
+
+
+def grid(chip, phase, batches, seqs, cfg, par):
+    rows = []
+    for b_ in batches:
+        for s in seqs:
+            need = weight_bytes(cfg) + kv_bytes_per_token(cfg) * b_ * s
+            if need > min(8 * chip.mem_capacity, 8 * H100.mem_capacity) * 0.9:
+                continue
+            ops = phase_ops(cfg, phase=phase, batch=b_, seq=s, par=par)
+            rows.append((b_, s, run_graph(H100, ops).total / run_graph(chip, ops).total))
+    return rows
+
+
+def main():
+    b = Bench("fig7_chip_perf")
+    cfg = get_config("bloom-176b")
+    par = Parallelism(tp=8)
+    cases = [
+        ("7a_prefill_chip_prefill", PREFILL_CHIP, "prefill", PB, PS, "paper avg 1.08"),
+        ("7b_prefill_chip_decode", PREFILL_CHIP, "decode", DB, DS, "paper avg 0.80"),
+        ("7c_decode_chip_prefill", DECODE_CHIP, "prefill", PB, PS, "paper avg 0.69"),
+        ("7d_decode_chip_decode", DECODE_CHIP, "decode", DB, DS, "paper avg 0.97"),
+    ]
+    for name, chip, phase, bb, ss, note in cases:
+        rows = grid(chip, phase, bb, ss, cfg, par)
+        vals = np.array([r[2] for r in rows])
+        b.row(f"{name}_mean", float(vals.mean()), note)
+        b.row(f"{name}_min", float(vals.min()),
+              f"worst cell B={rows[int(vals.argmin())][0]} S={rows[int(vals.argmin())][1]}")
+        b.row(f"{name}_max", float(vals.max()), "")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Kernel microbenchmarks: XLA-path wall time (CPU) + modeled TPU roofline
+properties of each Pallas kernel's BlockSpec tiling."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from .common import Bench
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    b = Bench("kernels_bench")
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    # flash attention (XLA reference path on CPU; Pallas targets TPU)
+    B, S, H, KV, d = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.bfloat16)
+    fa = jax.jit(lambda a, c, e: ref.flash_attention_ref(a, c, e, causal=True))
+    t = _time(fa, q, k, v)
+    flops = 4 * B * S * S * H * d / 2  # causal
+    b.row("flash_attn_ref_us", t * 1e6, f"{flops/t/1e9:.1f} GFLOP/s CPU (B1 S1024 H8 d64)")
+    # Pallas tiling properties (TPU target): VMEM working set per block
+    bq = bk = 512
+    vmem = (bq * d + 2 * bk * d) * 2 + bq * d * 4 + 2 * bq * 4
+    b.row("flash_attn_vmem_block_kb", vmem / 1024, "bq=bk=512 q+k+v+acc+m/l")
+    b.row("flash_attn_block_intensity", (2 * bq * bk * d * 2) / ((bq + 2 * bk) * d * 2),
+          "flops/byte per block >> v5e ridge 240")
+
+    # decode attention
+    L = 8192
+    kc = jax.random.normal(ks[1], (4, L, KV, d), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (4, L, KV, d), jnp.bfloat16)
+    qd = jax.random.normal(ks[0], (4, H, d), jnp.bfloat16)
+    lens = jnp.full((4,), L, jnp.int32)
+    da = jax.jit(ref.decode_attention_ref)
+    t = _time(da, qd, kc, vc, lens)
+    bytes_ = 2 * 4 * L * KV * d * 2
+    b.row("decode_attn_ref_us", t * 1e6, f"{bytes_/t/1e9:.1f} GB/s CPU (B4 L8192)")
+    b.row("decode_attn_intensity", (2 * 2 * H * d * L * 4) / bytes_,
+          "flops/byte ~ G: bandwidth-bound by design")
+
+    # SSD
+    b_, L2, h, p, g, n = 2, 2048, 8, 64, 1, 128
+    x = jax.random.normal(ks[0], (b_, L2, h, p), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b_, L2, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(ks[3], (b_, L2, g, n), jnp.bfloat16)
+    Cm = jax.random.normal(ks[4], (b_, L2, g, n), jnp.bfloat16)
+    sf = jax.jit(lambda *a: ref.ssd_ref(*a, chunk=128))
+    t = _time(sf, x, dt, A, Bm, Cm)
+    b.row("ssd_ref_us", t * 1e6, f"B2 L2048 h8 p64 n128 chunk128")
+    Q = 128
+    vmem_ssd = (Q * p + 2 * Q * n + Q) * 4 + p * n * 4 + Q * Q * 4
+    b.row("ssd_vmem_block_kb", vmem_ssd / 1024, "x+B/C+dt + state + Q^2 scratch")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

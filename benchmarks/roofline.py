@@ -1,0 +1,49 @@
+"""Roofline report (deliverable g): reads the dry-run artifacts and prints
+the three-term roofline per (arch x shape) on the single-pod mesh."""
+import os
+
+from repro.launch.roofline import RESULTS_DIR, load_all, report
+
+from .common import Bench
+
+
+def main():
+    b = Bench("roofline")
+    d = os.path.abspath(RESULTS_DIR)
+    cells = load_all(d, mesh="single", sharding="baseline")
+    if not cells:
+        b.row("status", "no dry-run artifacts",
+              "run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return b.dump()
+    opt = {(c.arch, c.shape): c for c in load_all(d, mesh="single", sharding="optimized")}
+    for c in cells:
+        o = opt.get((c.arch, c.shape))
+        extra = f" | OPT bound={o.bound_s:.2f}s ({c.bound_s/max(o.bound_s,1e-9):.1f}x)" if o else ""
+        b.row(
+            f"{c.arch}__{c.shape}",
+            round(c.bound_s, 4),
+            f"dom={c.dominant} comp={c.t_compute*1e3:.1f}ms mem={c.t_memory*1e3:.1f}ms "
+            f"coll={c.t_collective*1e3:.1f}ms useful={c.useful_ratio:.3f}{extra}",
+        )
+    doms = {}
+    for c in cells:
+        doms[c.dominant] = doms.get(c.dominant, 0) + 1
+    b.row("dominant_histogram", str(doms).replace(",", ";"), "")
+    if opt:
+        import math
+
+        ratios = [
+            c.bound_s / max(opt[(c.arch, c.shape)].bound_s, 1e-9)
+            for c in cells
+            if (c.arch, c.shape) in opt
+        ]
+        if ratios:
+            gm = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+            b.row("optimized_geomean_speedup", round(gm, 2),
+                  f"over {len(ratios)} cells (roofline bound, single mesh)")
+    print(report(d, mesh="single"))
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

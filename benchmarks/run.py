@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig2 table4
+  BENCH_FAST=1 ... python -m benchmarks.run          # reduced sweeps
+
+Output: CSV-ish ``name,value,derived`` rows per benchmark (paper reference
+in the derived column).
+"""
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig1_intensity",
+    "fig2_prefill_bw",
+    "fig3_decode_cores",
+    "fig5_prefill_dse",
+    "fig6_decode_dse",
+    "fig7_chip_perf",
+    "table3_chips",
+    "table9_hbm_cost",
+    "fig11_parallelism",
+    "kernels_bench",
+    "roofline",
+    "table4_provisioning",
+    "table6_slos",
+    "table7_realloc_workload",
+    "table8_realloc_model",
+]
+
+
+def main() -> None:
+    picks = [a for a in sys.argv[1:] if not a.startswith("-")]
+    mods = [m for m in MODULES if not picks or any(p in m for p in picks)]
+    t0 = time.time()
+    failures = []
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"== {name} ==\nERROR,{e!r}", flush=True)
+        print(flush=True)
+    print(f"benchmarks: {len(mods) - len(failures)}/{len(mods)} ok in {time.time()-t0:.0f}s")
+    if failures:
+        for n, e in failures:
+            print(f"  FAILED {n}: {e}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

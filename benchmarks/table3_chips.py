@@ -1,0 +1,37 @@
+"""Table 3: full chip specification + cost/TDP model reproduction."""
+from repro.core import A100, DECODE_CHIP, H100, H100_PCAP, PREFILL_CHIP
+from repro.core.hardware import (
+    die_area_mm2,
+    die_cost,
+    hw_cost,
+    memory_cost,
+    norm_hw_cost,
+    norm_tdp,
+    tdp_w,
+)
+
+from .common import Bench
+
+PAPER = {  # (PFLOPs, vecTF, area, die$, mem$, tdp, norm_cost)
+    "PrefillChip": (1.92, 32.4, 784, 301, 192, 596, 0.48),
+    "DecodeChip": (0.54, 18.2, 520, 187, 720, 507, 0.88),
+    "H100": (0.99, 66.9, 814, 315, 720, 700, 1.00),
+}
+
+
+def main():
+    b = Bench("table3_chips")
+    for chip in (PREFILL_CHIP, DECODE_CHIP, H100):
+        p = PAPER[chip.name]
+        b.row(f"{chip.name}_tensor_pflops", chip.tensor_flops / 1e15, f"paper {p[0]}")
+        b.row(f"{chip.name}_vector_tflops", chip.vector_flops / 1e12, f"paper {p[1]}")
+        b.row(f"{chip.name}_die_area_mm2", die_area_mm2(chip), f"paper {p[2]}")
+        b.row(f"{chip.name}_die_cost_usd", die_cost(chip), f"paper {p[3]}")
+        b.row(f"{chip.name}_mem_cost_usd", memory_cost(chip), f"paper {p[4]}")
+        b.row(f"{chip.name}_tdp_w", tdp_w(chip), f"paper {p[5]}")
+        b.row(f"{chip.name}_norm_hw_cost", norm_hw_cost(chip), f"paper {p[6]}")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Table 6: provisioning under loose / normal / tight SLOs (SPAD vs homo)."""
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP
+from repro.core.cluster import SLOS
+from repro.core.provision import provision_disagg
+from repro.core.trace import WORKLOADS
+
+from .common import RATE, SIM_DURATION, Bench, perf
+
+PAPER = {
+    ("coding", "loose"): "homo 24, spad 18+6 (42%)",
+    ("coding", "normal"): "homo 25, spad 18+7 (41%)",
+    ("coding", "tight"): "homo 27, spad 21+7 (40%)",
+    ("conversation", "loose"): "homo 22, spad 8+17 (15-28%)",
+    ("conversation", "normal"): "homo 23, spad 8+17 (19-31%)",
+    ("conversation", "tight"): "homo 27, spad 13+14 (32-46%)",
+}
+
+
+def main():
+    b = Bench("table6_slos")
+    h100 = perf(H100)
+    for wl_name, wl in WORKLOADS.items():
+        for slo_name in ("loose", "normal", "tight"):
+            kw = dict(workload=wl, rate=RATE, slo=SLOS[slo_name], ref_perf=h100,
+                      duration=SIM_DURATION)
+            homo = provision_disagg(name="homo", prefill_perf=h100, decode_perf=h100, **kw)
+            spad = provision_disagg(name="spad", prefill_perf=perf(PREFILL_CHIP),
+                                    decode_perf=perf(DECODE_CHIP), **kw)
+            note = f"paper: {PAPER[(wl_name, slo_name)]}"
+            if homo and spad:
+                save = 1 - spad.norm_cost / homo.norm_cost
+                b.row(f"{wl_name}_{slo_name}_saving", save,
+                      f"homo {homo.describe()} vs spad {spad.describe()} | {note}")
+            else:
+                b.row(f"{wl_name}_{slo_name}", "infeasible", note)
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

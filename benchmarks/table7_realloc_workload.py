@@ -1,0 +1,59 @@
+"""Table 7: adaptive reallocation after a workload change (model fixed).
+
+A SPAD cluster provisioned for coding@70 (paper: 18P+7D) is repurposed for
+conversation by flipping prefill machines to decode duty (and vice versa);
+the achievable rate is compared against the minimum homogeneous-H100 cluster
+reaching the same rate.
+"""
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP
+from repro.core.cluster import SLOS
+from repro.core.provision import best_realloc_split, max_rate, provision_disagg, reallocate
+from repro.core.trace import CODING, CONVERSATION
+
+from .common import SIM_DURATION, Bench, perf
+
+
+def realloc_case(b, name, n_p, n_d, target_wl, paper_note):
+    h100 = perf(H100)
+    slo = SLOS["normal"]
+    design, rate = best_realloc_split(
+        name=name,
+        perf_p_prefill=perf(PREFILL_CHIP),
+        perf_p_decode=perf(PREFILL_CHIP),
+        perf_d_prefill=perf(DECODE_CHIP),
+        perf_d_decode=perf(DECODE_CHIP),
+        n_p_machines=n_p,
+        n_d_machines=n_d,
+        workload=target_wl,
+        slo=slo,
+        ref_perf=h100,
+        duration=SIM_DURATION,
+    )
+    b.row(f"{name}_realloc_rate_rps", rate, f"{design.describe()} | {paper_note}")
+    if rate <= 0:
+        return
+    # homogeneous baseline reaching the same rate
+    baseline = provision_disagg(
+        name="homo", prefill_perf=h100, decode_perf=h100,
+        workload=target_wl, rate=max(rate, 5.0), slo=slo, ref_perf=h100,
+        duration=SIM_DURATION,
+    )
+    if baseline:
+        b.row(f"{name}_hw_saving", 1 - design.norm_cost / baseline.norm_cost,
+              f"baseline {baseline.describe()} ({baseline.norm_cost:.1f})")
+        b.row(f"{name}_tdp_saving", 1 - design.norm_tdp / baseline.norm_tdp, "")
+
+
+def main():
+    b = Bench("table7_realloc_workload")
+    # paper: coding-opt 18P+7D -> conversation @55 rps, saving (23%, -7%)
+    realloc_case(b, "coding_opt_to_conversation", 18, 7, CONVERSATION,
+                 "paper: 55 rps, 23% HW saving")
+    # paper: conversation-opt 8P+17D -> coding @60 rps, saving (11%, 9%)
+    realloc_case(b, "conversation_opt_to_coding", 8, 17, CODING,
+                 "paper: 60 rps, 11% HW saving")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

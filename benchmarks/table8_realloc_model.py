@@ -1,0 +1,60 @@
+"""Table 8: adaptive reallocation after a model change (workload fixed).
+
+SPAD clusters provisioned for BLOOM-176B serve Llama3-70B (GQA, TP=4 -> 2
+replicas/machine) and DeepSeek-V2 (MLA+MoE, FP8, EP=8) after reallocation.
+"""
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP
+from repro.core.cluster import SLOS
+from repro.core.provision import best_realloc_split, provision_disagg
+from repro.core.trace import CODING, CONVERSATION
+
+from .common import SIM_DURATION, Bench, perf
+
+CASES = [
+    # (cluster tag, nP, nD, model, tp, ep, w_bytes, workload, paper note)
+    ("18P7D_llama3", 18, 7, "llama3-70b", 4, 1, 2.0, CODING,
+     "paper: 188 rps, 43% HW / 22% TDP saving"),
+    ("8P17D_llama3", 8, 17, "llama3-70b", 4, 1, 2.0, CONVERSATION,
+     "paper: 171 rps, 31% HW / 29% TDP saving"),
+    ("18P7D_deepseek", 18, 7, "deepseek-v2-236b", 1, 8, 1.0, CODING,
+     "paper: 103 rps, 36% HW / 11% TDP saving"),
+    ("8P17D_deepseek", 8, 17, "deepseek-v2-236b", 1, 8, 1.0, CONVERSATION,
+     "paper: 183 rps, 22% HW / 20% TDP saving"),
+]
+
+
+def main():
+    b = Bench("table8_realloc_model")
+    slo = SLOS["normal"]
+    for tag, n_p, n_d, model, tp, ep, wb, wl, note in CASES:
+        ref = perf(H100, model, tp=tp, ep=ep, w_bytes=wb)
+        design, rate = best_realloc_split(
+            name=tag,
+            perf_p_prefill=perf(PREFILL_CHIP, model, tp=tp, ep=ep, w_bytes=wb),
+            perf_p_decode=perf(PREFILL_CHIP, model, tp=tp, ep=ep, w_bytes=wb),
+            perf_d_prefill=perf(DECODE_CHIP, model, tp=tp, ep=ep, w_bytes=wb),
+            perf_d_decode=perf(DECODE_CHIP, model, tp=tp, ep=ep, w_bytes=wb),
+            n_p_machines=n_p,
+            n_d_machines=n_d,
+            workload=wl,
+            slo=slo,
+            ref_perf=ref,
+            duration=SIM_DURATION,
+        )
+        b.row(f"{tag}_rate_rps", rate, f"{design.describe() if design else '-'} | {note}")
+        if rate <= 0:
+            continue
+        baseline = provision_disagg(
+            name="homo", prefill_perf=ref, decode_perf=ref,
+            workload=wl, rate=max(rate, 5.0), slo=slo, ref_perf=ref,
+            duration=SIM_DURATION,
+        )
+        if baseline:
+            b.row(f"{tag}_hw_saving", 1 - design.norm_cost / baseline.norm_cost,
+                  f"baseline {baseline.describe()}")
+            b.row(f"{tag}_tdp_saving", 1 - design.norm_tdp / baseline.norm_tdp, "")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table 9: chip cost under various HBM cost assumptions ($6/$9/$12 per GB)."""
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP
+from repro.core.hardware import hw_cost
+
+from .common import Bench
+
+PAPER = {6: (667, 795), 9: (907, 1035), 12: (1147, 1275)}
+
+
+def main():
+    b = Bench("table9_hbm_cost")
+    for price, (dec, h100) in PAPER.items():
+        b.row(f"decode_chip_cost_hbm{price}", hw_cost(DECODE_CHIP, price), f"paper ${dec}")
+        b.row(f"h100_cost_hbm{price}", hw_cost(H100, price), f"paper ${h100}")
+        b.row(f"prefill_chip_cost_hbm{price}", hw_cost(PREFILL_CHIP, price),
+              "GDDR: insensitive to HBM price")
+        b.row(f"decode_vs_h100_hbm{price}",
+              hw_cost(DECODE_CHIP, price) / hw_cost(H100, price), "")
+    return b.dump()
+
+
+if __name__ == "__main__":
+    main()

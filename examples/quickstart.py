@@ -1,0 +1,66 @@
+"""Quickstart: the three layers of the repo in ~60 lines.
+
+1. The paper's chip models: cost/TDP of the SPAD chips vs an H100.
+2. The analytical cluster story: provision a small SPAD cluster for a trace.
+3. The executable JAX layer: generate tokens through the disaggregated
+   prefill/decode server on a reduced architecture.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+# ---- 1. chips (paper Table 3) --------------------------------------------
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP
+from repro.core.hardware import die_area_mm2, hw_cost, tdp_w
+
+print("== SPAD chips vs H100 ==")
+for chip in (PREFILL_CHIP, DECODE_CHIP, H100):
+    print(
+        f"{chip.name:12s} {chip.tensor_flops/1e15:5.2f} PFLOP/s "
+        f"{chip.mem_bw/1e12:5.2f} TB/s  {die_area_mm2(chip):4.0f} mm^2  "
+        f"${hw_cost(chip):6.0f}  {tdp_w(chip):4.0f} W"
+    )
+
+# ---- 2. provisioning (paper Table 4, miniature) ---------------------------
+from repro.configs import get_config
+from repro.core import Parallelism
+from repro.core.cluster import SLOS, ModelPerf
+from repro.core.provision import provision_disagg
+from repro.core.trace import CONVERSATION
+
+bloom = get_config("bloom-176b")
+par = Parallelism(tp=8)
+h100 = ModelPerf(H100, bloom, par)
+design = provision_disagg(
+    name="spad",
+    prefill_perf=ModelPerf(PREFILL_CHIP, bloom, par),
+    decode_perf=ModelPerf(DECODE_CHIP, bloom, par),
+    workload=CONVERSATION,
+    rate=20,
+    slo=SLOS["normal"],
+    ref_perf=h100,
+    duration=20,
+)
+print(f"\n== provisioning (conversation @ 20 req/s) ==\n"
+      f"SPAD design: {design.describe()}  "
+      f"cost={design.norm_cost:.1f} H100-machines-equivalent, tdp={design.norm_tdp:.1f}")
+
+# ---- 3. disaggregated serving (executable) --------------------------------
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import DecodeEngine, DisaggregatedServer, GenRequest, PrefillEngine
+
+cfg = reduced(ARCHS["qwen1.5-4b"])
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+server = DisaggregatedServer(
+    [PrefillEngine(params, cfg)],
+    [DecodeEngine(params, cfg, max_slots=4, max_len=128)],
+)
+rng = np.random.default_rng(0)
+for i in range(4):
+    server.submit(GenRequest(i, rng.integers(0, cfg.vocab_size, size=16), max_new_tokens=8))
+results = server.run()
+print("\n== disaggregated generation (reduced qwen1.5-4b) ==")
+for rid, toks in sorted(results.items()):
+    print(f"request {rid}: {toks}")

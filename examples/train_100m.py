@@ -1,0 +1,73 @@
+"""End-to-end training driver: a ~100M-parameter model for a few hundred steps.
+
+This is the assignment's training-side E2E example: a real (not reduced)
+granite-style decoder scaled to ~100M params, synthetic corpus, AdamW +
+cosine, checkpointing every 50 steps, loss curve printed.  ~20-40 min on 1
+CPU core at the default 200 steps; pass --steps 20 for a quick look.
+
+Run: PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.training import DataConfig, Trainer, TrainerConfig
+
+
+def model_100m():
+    base = get_config("granite-8b")
+    return dataclasses.replace(
+        base,
+        name="granite-100m",
+        n_layers=8,
+        d_model=640,
+        n_heads=10,
+        n_kv_heads=2,
+        d_head=64,
+        d_ff=2560,
+        vocab_size=49_152,
+        tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/spad_train_100m")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    n_params = sum(
+        x.size for x in jax.tree.leaves(M.init_params(jax.random.PRNGKey(0), cfg))
+    )
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                         ckpt_dir=args.ckpt_dir, base_lr=6e-4,
+                         warmup=max(args.steps // 10, 5))
+    tr = Trainer(cfg, dcfg, tcfg, seed=0)
+    if tr.resume():
+        print(f"resumed from step {tr.step}")
+    t0 = time.time()
+    tr.run()
+    for h in tr.history[:: max(len(tr.history) // 20, 1)]:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  lr {h['lr']:.2e}")
+    dt = time.time() - t0
+    print(json.dumps({
+        "params_m": round(n_params / 1e6, 1),
+        "steps": tr.step,
+        "final_loss": round(tr.history[-1]["loss"], 4),
+        "tokens_per_s": round(args.batch * args.seq * len(tr.history) / dt, 1),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""arctic-480b — 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual.  [hf:Snowflake/snowflake-arctic-base; hf]
+
+Arctic's signature dense-MoE hybrid: a dense FFN residual branch runs in
+parallel with the routed top-2 MoE on every layer.
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=4864,
+    vocab_size=32_000,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="gqa",
+    pos_emb="rope",
+    block_pattern=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=128, top_k=2, d_expert=4864),
+    dense_residual=True,
+    d_ff_dense=4864,
+    notes="full quadratic attention -> long_500k skipped; dense residual branch",
+)

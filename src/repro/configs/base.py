@@ -1,0 +1,311 @@
+"""Model / shape configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``.  The layer stack
+is described by ``block_pattern`` — a repeating unit of ``(mixer, ffn)`` pairs —
+so that dense, MoE, hybrid (Jamba) and attention-free (Mamba-2) stacks all share
+one generic scan-over-layers implementation.
+
+mixer ∈ {"attn", "mamba"};  ffn ∈ {"mlp", "moe", "none"}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # load-balancing aux loss coefficient (used in training)
+    aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3)."""
+
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Main model config
+# ---------------------------------------------------------------------------
+
+BlockSpec = Tuple[str, str]  # (mixer, ffn)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+
+    activation: str = "silu"  # silu | gelu | sq_relu
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    attn_type: str = "gqa"  # gqa | mla | none
+    pos_emb: str = "rope"  # rope | alibi | learned | none
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    causal: bool = True
+    tie_embeddings: bool = False
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+
+    # Repeating unit of (mixer, ffn) pairs; n_layers % len(block_pattern) == 0.
+    block_pattern: Tuple[BlockSpec, ...] = (("attn", "mlp"),)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # Arctic-style dense FFN residual branch run in parallel with the MoE FFN.
+    dense_residual: bool = False
+    d_ff_dense: int = 0
+
+    frontend: str = "none"  # none | vision_stub | audio_stub
+    max_seq_len: int = 524_288
+    dtype: str = "bfloat16"
+
+    # notes recorded for DESIGN.md §Arch-applicability
+    notes: str = ""
+
+    # ---------------- derived quantities ----------------
+    @property
+    def n_repeats(self) -> int:
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern length {len(self.block_pattern)}"
+        )
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def attn_free(self) -> bool:
+        return all(m != "attn" for m, _ in self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can run 500k-token decode (SSM / hybrid)."""
+        return any(m == "mamba" for m, _ in self.block_pattern) or self.attn_free
+
+    @property
+    def encoder_only(self) -> bool:
+        return not self.causal
+
+    def mixer_counts(self) -> dict:
+        c: dict = {}
+        for m, _ in self.block_pattern:
+            c[m] = c.get(m, 0) + 1
+        return {k: v * self.n_repeats for k, v in c.items()}
+
+    # ---------------- parameter counting ----------------
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.attn_type == "mla":
+            a = self.mla
+            qh = a.qk_nope_head_dim + a.qk_rope_head_dim
+            p = d * a.q_lora_rank + a.q_lora_rank * self.n_heads * qh
+            p += d * (a.kv_lora_rank + a.qk_rope_head_dim)
+            p += a.kv_lora_rank * self.n_heads * (a.qk_nope_head_dim + a.v_head_dim)
+            p += self.n_heads * a.v_head_dim * d
+            return p
+        p = d * self.n_heads * self.d_head  # q
+        p += 2 * d * self.n_kv_heads * self.d_head  # k, v
+        p += self.n_heads * self.d_head * d  # o
+        if self.qkv_bias:
+            p += (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        return p
+
+    def _mamba_params(self) -> int:
+        s = self.ssm
+        d = self.d_model
+        di = s.d_inner(d)
+        nh = s.n_heads(d)
+        gdn = s.n_groups * s.d_state
+        p = d * (2 * di + 2 * gdn + nh)  # in_proj
+        p += s.d_conv * (di + 2 * gdn)  # conv
+        p += 3 * nh  # A_log, D, dt_bias
+        p += di  # gated norm
+        p += di * d  # out_proj
+        return p
+
+    def _mlp_params(self, d_ff: int) -> int:
+        mult = 3 if self.gated_mlp else 2
+        return mult * self.d_model * d_ff
+
+    def _moe_params(self) -> Tuple[int, int]:
+        """(total, active) params of one MoE FFN layer."""
+        m = self.moe
+        per_expert = self._mlp_params(m.d_expert)
+        total = self.d_model * m.n_experts + m.n_experts * per_expert
+        active = self.d_model * m.n_experts + m.top_k * per_expert
+        if m.n_shared_experts:
+            shared = m.n_shared_experts * per_expert
+            total += shared
+            active += shared
+        if self.dense_residual:
+            dense = self._mlp_params(self.d_ff_dense or self.d_ff)
+            total += dense
+            active += dense
+        return total, active
+
+    def param_count(self) -> Tuple[int, int]:
+        """(total_params, active_params) excluding embeddings? -> including."""
+        total = active = 0
+        for mixer, ffn in self.block_pattern:
+            if mixer == "attn":
+                p = self._attn_params()
+            elif mixer == "mamba":
+                p = self._mamba_params()
+            else:
+                raise ValueError(mixer)
+            total += p
+            active += p
+            if ffn == "mlp":
+                p = self._mlp_params(self.d_ff)
+                total += p
+                active += p
+            elif ffn == "moe":
+                t, a = self._moe_params()
+                total += t
+                active += a
+            total += 2 * self.d_model  # 2 norms (approx; counts scale only)
+            active += 2 * self.d_model
+        total *= self.n_repeats
+        active *= self.n_repeats
+        emb = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        total += emb + head + self.d_model
+        active += emb + head + self.d_model
+        return total, active
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def pad_heads_for_tp(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Beyond-paper optimization: pad attention head counts up to a multiple
+    of the tensor-parallel degree so heads shard cleanly (Megatron-style).
+
+    Extra heads are functionally inert when their q/o projections are zero;
+    for the dry-run (shape-level) this is a pure layout transform.  No-op
+    when heads already divide tp or the arch is attention-free."""
+    if cfg.attn_type == "none" or cfg.n_heads == 0 or cfg.n_heads % tp == 0:
+        return cfg
+    Hp = -(-cfg.n_heads // tp) * tp
+    KVp = Hp if cfg.n_kv_heads == cfg.n_heads else cfg.n_kv_heads
+    if KVp and Hp % KVp:
+        KVp = Hp  # degenerate fallback: MHA
+    return dataclasses.replace(cfg, n_heads=Hp, n_kv_heads=KVp)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell is well-defined, and why not if not."""
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (full-attention arch)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ModelConfig, *, d_model: int = 64, n_layers: Optional[int] = None) -> ModelConfig:
+    """A tiny config of the same family, runnable on CPU in a smoke test."""
+    pat = len(cfg.block_pattern)
+    if n_layers is None:
+        n_layers = pat  # one repeat of the full pattern
+    n_heads = 4
+    n_kv = max(1, min(cfg.n_kv_heads, (n_heads if cfg.n_kv_heads >= cfg.n_heads else 2)))
+    changes = dict(
+        name=cfg.name + "-reduced",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_head=16,
+        d_ff=d_model * 2,
+        vocab_size=256,
+        max_seq_len=512,
+    )
+    if cfg.moe is not None:
+        changes["moe"] = MoEConfig(
+            n_experts=4,
+            top_k=min(2, cfg.moe.top_k),
+            d_expert=d_model,
+            n_shared_experts=min(1, cfg.moe.n_shared_experts),
+            capacity_factor=2.0,
+        )
+    if cfg.mla is not None:
+        changes["mla"] = MLAConfig(
+            q_lora_rank=32,
+            kv_lora_rank=16,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        )
+    if cfg.ssm is not None:
+        changes["ssm"] = SSMConfig(
+            d_state=16, d_conv=4, expand=2, head_dim=16, n_groups=1, chunk_size=16
+        )
+    if cfg.dense_residual:
+        changes["d_ff_dense"] = d_model * 2
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,27 @@
+"""BLOOM-176B — the paper's primary evaluation model (Table 3 / Figs 2,3,5-7).
+[arXiv:2211.05100]
+
+70L, d_model=14336, 112 MHA heads, ALiBi positions, GELU MLP (ungated),
+LayerNorm, tied embeddings, vocab 250880.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="bloom-176b",
+    family="dense",
+    n_layers=70,
+    d_model=14_336,
+    n_heads=112,
+    n_kv_heads=112,
+    d_head=128,
+    d_ff=57_344,
+    vocab_size=250_880,
+    activation="gelu",
+    gated_mlp=False,
+    qkv_bias=True,
+    attn_type="gqa",
+    pos_emb="alibi",
+    norm_type="layernorm",
+    tie_embeddings=True,
+    notes="paper's primary model; MHA",
+)

@@ -1,0 +1,33 @@
+"""DeepSeek-V2-236B — paper reallocation study model (Table 8).  [arXiv:2405.04434]
+
+MLA + DeepSeekMoE (160 routed experts top-6 + 2 shared).  The paper deploys it
+FP8/EP=8.  The first dense layer of the real model is approximated by using the
+MoE pattern throughout (same dominant compute/communication shape; noted here).
+"""
+from .base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_head=192,  # nope+rope
+    d_ff=1536,
+    vocab_size=102_400,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="mla",
+    pos_emb="rope",
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    block_pattern=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=160, top_k=6, d_expert=1536, n_shared_experts=2),
+    notes="paper reallocation model (MLA + MoE)",
+)

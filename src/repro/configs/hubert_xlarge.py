@@ -1,0 +1,29 @@
+"""hubert-xlarge — 48L d_model=1280 16H (MHA kv=16) d_ff=5120 vocab=504,
+encoder-only, same arch as wav2vec2.  [arXiv:2106.07447; unverified]
+
+Encoder-only (bidirectional) transformer; the convolutional waveform frontend is
+a stub — ``input_specs()`` provides precomputed frame embeddings.  vocab=504 is
+the HuBERT masked-unit-prediction codebook.  No decode phase exists.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=80,
+    d_ff=5120,
+    vocab_size=504,
+    activation="gelu",
+    gated_mlp=False,
+    attn_type="gqa",
+    pos_emb="learned",
+    causal=False,
+    norm_type="layernorm",
+    frontend="audio_stub",
+    max_seq_len=32_768,
+    notes="encoder-only: decode shapes skipped; audio frontend stubbed",
+)

@@ -1,0 +1,26 @@
+"""internvl2-2b — 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553,
+InternViT + InternLM2.  [arXiv:2404.16821; hf]
+
+Per the assignment, only the transformer BACKBONE (InternLM2-1.8B-style decoder)
+is modeled; the InternViT frontend is a stub — ``input_specs()`` provides
+precomputed patch embeddings of shape [batch, seq, d_model].
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=92_553,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="gqa",
+    pos_emb="rope",
+    frontend="vision_stub",
+    notes="vision frontend stubbed; quadratic attn -> long_500k skipped",
+)

@@ -1,0 +1,42 @@
+"""jamba-1.5-large-398b — 72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536,
+MoE 16e top-2, Mamba:attn 7:1 interleave.  [arXiv:2403.19887; hf]
+
+Layout follows the Jamba paper: attention every 8th layer (offset 4), MoE every
+2nd layer (offset 1).  Modeling simplification (noted in DESIGN.md): the Mamba
+layers use our Mamba-2 (SSD) block with d_state=128 instead of Mamba-1 d_state=16;
+this preserves the state-size-independent-of-seq-len property the assignment
+exercises (long_500k) while sharing one SSM implementation.
+"""
+from .base import ModelConfig, MoEConfig, SSMConfig
+
+# period-8 unit: pos4 = attention; odd positions are MoE
+_PATTERN = (
+    ("mamba", "mlp"),
+    ("mamba", "moe"),
+    ("mamba", "mlp"),
+    ("mamba", "moe"),
+    ("attn", "mlp"),
+    ("mamba", "moe"),
+    ("mamba", "mlp"),
+    ("mamba", "moe"),
+)
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24_576,
+    vocab_size=65_536,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="gqa",
+    pos_emb="none",  # Jamba uses no positional embedding (Mamba provides position)
+    block_pattern=_PATTERN,
+    moe=MoEConfig(n_experts=16, top_k=2, d_expert=24_576),
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=128, n_groups=1),
+    notes="hybrid: long_500k runs (sub-quadratic); attn 1:7 interleave",
+)

@@ -1,0 +1,20 @@
+"""Llama3-70B — paper reallocation study model (Table 8).  [arXiv:2407.21783]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-70b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28_672,
+    vocab_size=128_256,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="gqa",
+    pos_emb="rope",
+    rope_theta=500_000.0,
+    notes="paper reallocation model (GQA)",
+)

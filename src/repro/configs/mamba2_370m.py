@@ -1,0 +1,24 @@
+"""mamba2-370m — 48L d_model=1024 (attn-free) vocab=50280, ssm_state=128,
+SSD (state-space duality).  [arXiv:2405.21060; unverified]
+
+Pure Mamba-2: no attention, no FFN (the Mamba block doubles as the mixer+MLP).
+"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=0,
+    n_kv_heads=0,
+    d_head=0,
+    d_ff=0,
+    vocab_size=50_280,
+    attn_type="none",
+    pos_emb="none",
+    tie_embeddings=True,
+    block_pattern=(("mamba", "none"),),
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1),
+    notes="attn-free: all shapes incl. long_500k run; decode state is O(1) in seq_len",
+)

@@ -1,0 +1,32 @@
+"""minicpm3-4b — 62L d_model=2560 40H d_ff=6400 vocab=73448, MLA.
+[hf:openbmb/MiniCPM3-4B; hf]
+
+Multi-head Latent Attention with MiniCPM3's ranks (q_lora=768, kv_lora=256,
+nope=64, rope=32, v=64).  MiniCPM's mup-style residual/embedding scaling is
+omitted (noted in DESIGN.md) — it does not change compute/communication shape.
+"""
+from .base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,  # MLA: effective per-head KV after expansion
+    d_head=96,  # nope+rope for q/k
+    d_ff=6400,
+    vocab_size=73_448,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="mla",
+    pos_emb="rope",
+    mla=MLAConfig(
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+    notes="MLA compresses KV cache ~(kv_lora+rope)/(2*H*dh); quadratic attn -> long_500k skipped",
+)

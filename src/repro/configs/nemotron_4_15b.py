@@ -1,0 +1,24 @@
+"""nemotron-4-15b — 32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000,
+GQA, squared-ReLU.  [arXiv:2402.16819; unverified]
+
+Nemotron-4 uses an ungated squared-ReLU MLP and LayerNorm.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24_576,
+    vocab_size=256_000,
+    activation="sq_relu",
+    gated_mlp=False,
+    attn_type="gqa",
+    pos_emb="rope",
+    norm_type="layernorm",
+    notes="full quadratic attention -> long_500k skipped",
+)

@@ -1,0 +1,22 @@
+"""qwen1.5-4b — 40L d_model=2560 20H (GQA kv=20 = MHA) d_ff=6912 vocab=151936,
+QKV bias.  [hf:Qwen/Qwen1.5-0.5B family; hf]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_head=128,
+    d_ff=6912,
+    vocab_size=151_936,
+    activation="silu",
+    gated_mlp=True,
+    qkv_bias=True,
+    attn_type="gqa",
+    pos_emb="rope",
+    notes="full quadratic attention -> long_500k skipped",
+)

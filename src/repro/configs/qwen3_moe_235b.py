@@ -1,0 +1,28 @@
+"""qwen3-moe-235b-a22b — 94L d_model=4096 64H (GQA kv=4) d_ff=1536 vocab=151936,
+MoE 128e top-8.  [hf:Qwen/Qwen3-30B-A3B family; hf]
+
+Qwen3 specifics modeled: head_dim=128 (> d_model/n_heads), QK-norm, RoPE theta 1e6,
+no shared expert, gated SiLU experts.
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=1536,  # per-expert FFN width
+    vocab_size=151_936,
+    activation="silu",
+    gated_mlp=True,
+    attn_type="gqa",
+    pos_emb="rope",
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    block_pattern=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=128, top_k=8, d_expert=1536),
+    notes="full quadratic attention -> long_500k skipped",
+)

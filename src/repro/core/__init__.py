@@ -1,0 +1,13 @@
+"""The paper's primary contribution: SPAD phase-specialized hardware models.
+
+  hardware    chip specs, area / cost / TDP models (Table 3)
+  perfmodel   LLMCompass-lite analytical operator latency model
+  opgraph     ModelConfig -> operator graphs per phase/parallelism
+  dse         less-is-more design space exploration (Figs 5/6)
+  trace       workload synthesis calibrated to the Azure traces
+  cluster     event-driven cluster simulator (Splitwise- & Sarathi-style)
+  provision   SLO-constrained provisioning + adaptive reallocation (Tables 4-8)
+"""
+from . import cluster, dse, hardware, opgraph, perfmodel, provision, trace  # noqa: F401
+from .hardware import A100, CHIPS, DECODE_CHIP, H100, H100_PCAP, PREFILL_CHIP  # noqa: F401
+from .opgraph import Parallelism  # noqa: F401

@@ -1,0 +1,480 @@
+"""Event-driven cluster simulator (paper §6.2).
+
+Two scheduler families, both driven by the same analytical chip model
+(the repo's LLMCompass-lite) so comparisons are apples-to-apples:
+
+  * ``simulate_disaggregated`` — Splitwise-style: prefill machine pool +
+    decode machine pool, KV-cache transfer over the scale-out fabric,
+    continuous batching on decode machines (join at iteration boundaries,
+    KV-capacity-limited admission).
+  * ``simulate_colocated`` — Sarathi-style: one homogeneous pool, chunked
+    prefills mixed with decode batches every iteration (prefill-decode
+    interference shows up as inflated TBT, exactly the paper's critique).
+
+Latencies come from ``ModelPerf`` lookup tables precomputed from the
+analytical model (log-log interpolation), so a full provisioning sweep runs
+in seconds.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .hardware import ChipSpec, MachineSpec
+from .opgraph import Parallelism, kv_bytes_per_token, phase_ops, weight_bytes
+from .perfmodel import run_graph
+from .trace import Request
+
+# ---------------------------------------------------------------------------
+# Cached analytical latencies
+# ---------------------------------------------------------------------------
+
+_PREFILL_GRID = [64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768]
+_DECODE_B_GRID = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+_DECODE_CTX_GRID = [64, 256, 1024, 4096, 16384, 32768]
+
+
+class ModelPerf:
+    """Latency lookup tables for (chip, model, parallelism)."""
+
+    def __init__(
+        self,
+        chip: ChipSpec,
+        cfg: ModelConfig,
+        par: Parallelism,
+        *,
+        w_bytes: float = 2.0,
+        a_bytes: float = 2.0,
+        mem_util: float = 0.9,
+    ):
+        self.chip = chip
+        self.cfg = cfg
+        self.par = par
+        self.w_bytes = w_bytes
+        self.a_bytes = a_bytes
+        self.replicas_per_machine = max(1, 8 // par.n_chips)
+
+        self._pre = np.array(
+            [
+                run_graph(chip, phase_ops(cfg, phase="prefill", batch=1, seq=s, par=par,
+                                          w_bytes=w_bytes, a_bytes=a_bytes)).total
+                for s in _PREFILL_GRID
+            ]
+        )
+        # batched prefill (2 requests fused — Splitwise-style iteration batching;
+        # indexed by TOTAL tokens)
+        self._pre2 = np.array(
+            [
+                run_graph(chip, phase_ops(cfg, phase="prefill", batch=2, seq=max(s // 2, 32),
+                                          par=par, w_bytes=w_bytes, a_bytes=a_bytes)).total
+                for s in _PREFILL_GRID
+            ]
+        )
+        self._dec = np.array(
+            [
+                [
+                    run_graph(chip, phase_ops(cfg, phase="decode", batch=b, seq=c, par=par,
+                                              w_bytes=w_bytes, a_bytes=a_bytes)).total
+                    for c in _DECODE_CTX_GRID
+                ]
+                for b in _DECODE_B_GRID
+            ]
+        )
+        # capacity per replica: weights first, then mem_util of the remainder
+        # for KV (paper §B.1: 8xH100 ~66K BLOOM tokens, 8xPrefillChip ~35K)
+        replica_mem = par.n_chips * chip.mem_capacity
+        self.kv_per_token = kv_bytes_per_token(cfg, a_bytes)
+        free = (replica_mem - weight_bytes(cfg, w_bytes)) * mem_util
+        self.max_kv_tokens = int(max(0, free) / max(self.kv_per_token, 1.0)) if self.kv_per_token else 10**9
+        self.fits = free > 0
+        # scale-out transfer bandwidth for a whole replica (KV leaves via all chips)
+        self.scaleout_bw = par.n_chips * chip.scaleout_gbs * 1e9
+
+    # ---- lookups (log-space interpolation) ----
+    def prefill_time(self, n_tokens: int) -> float:
+        x = math.log(min(max(n_tokens, _PREFILL_GRID[0]), _PREFILL_GRID[-1]))
+        xs = np.log(_PREFILL_GRID)
+        return float(np.interp(x, xs, self._pre))
+
+    def prefill_batch_time(self, total_tokens: int, n_reqs: int) -> float:
+        if n_reqs <= 1:
+            return self.prefill_time(total_tokens)
+        x = math.log(min(max(total_tokens, _PREFILL_GRID[0]), _PREFILL_GRID[-1]))
+        xs = np.log(_PREFILL_GRID)
+        return float(np.interp(x, xs, self._pre2))
+
+    def decode_time(self, batch: int, ctx: float) -> float:
+        b = min(max(batch, 1), _DECODE_B_GRID[-1])
+        c = min(max(ctx, _DECODE_CTX_GRID[0]), _DECODE_CTX_GRID[-1])
+        lb = math.log(b)
+        lc = math.log(c)
+        bs = np.log(_DECODE_B_GRID)
+        cs = np.log(_DECODE_CTX_GRID)
+        i = min(np.searchsorted(bs, lb) - 1, len(bs) - 2)
+        i = max(i, 0)
+        j = min(np.searchsorted(cs, lc) - 1, len(cs) - 2)
+        j = max(j, 0)
+        tb = (lb - bs[i]) / (bs[i + 1] - bs[i])
+        tc = (lc - cs[j]) / (cs[j + 1] - cs[j])
+        d = self._dec
+        return float(
+            d[i, j] * (1 - tb) * (1 - tc)
+            + d[i + 1, j] * tb * (1 - tc)
+            + d[i, j + 1] * (1 - tb) * tc
+            + d[i + 1, j + 1] * tb * tc
+        )
+
+    def kv_transfer_time(self, n_tokens: int) -> float:
+        return n_tokens * self.kv_per_token / self.scaleout_bw
+
+    def kv_read_time(self, batch: int, ctx: float) -> float:
+        """Marginal decode-attention cost for mixed (Sarathi) batches."""
+        bytes_ = batch * ctx * self.kv_per_token / self.par.n_chips
+        return bytes_ / self.chip.effective_mem_bw * self.par.n_chips / max(self.par.tp, 1)
+
+
+# ---------------------------------------------------------------------------
+# Request bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReqState:
+    req: Request
+    solo_ttft: float
+    solo_tbt: float
+    ttft: float = -1.0
+    tbts: List[float] = field(default_factory=list)
+    # decode runtime
+    ctx: int = 0
+    remaining: int = 0
+    t_last: float = 0.0
+
+
+@dataclass
+class SimResult:
+    n_requests: int
+    n_completed: int
+    norm_ttft: np.ndarray
+    norm_tbt: np.ndarray
+
+    def percentile(self, which: str, p: float) -> float:
+        arr = self.norm_ttft if which == "ttft" else self.norm_tbt
+        if len(arr) == 0:
+            return float("inf")
+        return float(np.percentile(arr, p))
+
+    def meets(self, slo: "SLO") -> bool:
+        return (
+            self.n_completed == self.n_requests
+            and self.percentile("tbt", 90) <= slo.p90_tbt
+            and self.percentile("ttft", 90) <= slo.p90_ttft
+            and self.percentile("tbt", 99) <= slo.p99_tbt
+            and self.percentile("ttft", 99) <= slo.p99_ttft
+        )
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Slowdowns relative to unbatched modeled-H100 execution (paper Table 5)."""
+
+    name: str
+    p90_tbt: float
+    p90_ttft: float
+    p99_tbt: float
+    p99_ttft: float
+
+
+SLOS = {
+    "loose": SLO("loose", 2.5, 4.0, 6.0, 8.0),
+    "normal": SLO("normal", 2.0, 3.0, 5.0, 6.0),
+    "tight": SLO("tight", 1.5, 2.0, 3.0, 4.0),
+}
+
+
+def _prepare(reqs: Sequence[Request], ref: ModelPerf) -> List[ReqState]:
+    """Solo-H100 reference latencies for SLO normalization."""
+    out = []
+    for r in reqs:
+        solo_ttft = ref.prefill_time(r.n_in)
+        solo_tbt = ref.decode_time(1, r.n_in + r.n_out / 2)
+        out.append(ReqState(r, solo_ttft, solo_tbt))
+    return out
+
+
+def _collect(states: List[ReqState], duration: float) -> SimResult:
+    """Metrics over the steady-state window (drop 10% warmup / 5% tail)."""
+    t0, t1 = 0.10 * duration, 0.95 * duration
+    ttfts, tbts = [], []
+    completed = 0
+    for s in states:
+        if s.ttft >= 0 and s.remaining == 0:
+            completed += 1
+        if not (t0 <= s.req.t_arrival <= t1):
+            continue
+        if s.ttft >= 0:
+            ttfts.append(s.ttft / s.solo_ttft)
+            tbts.extend(t / s.solo_tbt for t in s.tbts)
+        else:
+            ttfts.append(float("inf"))
+    return SimResult(len(states), completed, np.array(ttfts), np.array(tbts))
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated (Splitwise-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _DecodeReplica:
+    rid: int
+    perf: ModelPerf
+    active: List[ReqState] = field(default_factory=list)
+    tokens: int = 0
+    busy: bool = False
+
+    def capacity_ok(self, s: ReqState) -> bool:
+        need = s.req.n_in + s.req.n_out
+        return self.tokens + need <= self.perf.max_kv_tokens and len(self.active) < 256
+
+
+@dataclass
+class _PrefillReplica:
+    rid: int
+    perf: ModelPerf
+    queue: List[ReqState] = field(default_factory=list)
+    busy: bool = False
+    running: List[ReqState] = field(default_factory=list)
+
+    def backlog_s(self) -> float:
+        return sum(self.perf.prefill_time(s.req.n_in) for s in self.queue)
+
+
+PREFILL_MAX_BATCH = 2  # Splitwise-style iteration batching (paper Fig 2 uses B=2)
+
+
+def simulate_disaggregated(
+    reqs: Sequence[Request],
+    *,
+    prefill_pool: Sequence[ModelPerf],  # one entry per machine (heterogeneous ok)
+    decode_pool: Sequence[ModelPerf],
+    ref_perf: ModelPerf,
+    duration: float,
+    max_sim_time_factor: float = 4.0,
+) -> SimResult:
+    states = _prepare(reqs, ref_perf)
+    idx_of = {id(s): i for i, s in enumerate(states)}
+    horizon = duration * max_sim_time_factor
+
+    pre_reps: List[_PrefillReplica] = []
+    for p in prefill_pool:
+        for _ in range(p.replicas_per_machine):
+            pre_reps.append(_PrefillReplica(len(pre_reps), p))
+    dec_reps: List[_DecodeReplica] = []
+    for p in decode_pool:
+        for _ in range(p.replicas_per_machine):
+            dec_reps.append(_DecodeReplica(len(dec_reps), p))
+
+    pending: List[ReqState] = []  # decode-ready but no KV capacity yet
+    events: List[Tuple[float, int, str, int]] = []
+    seq = 0
+
+    def push(t: float, kind: str, ident: int):
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, ident))
+        seq += 1
+
+    for i, s in enumerate(states):
+        push(s.req.t_arrival, "arrive", i)
+
+    # ---- prefill side ----
+    def start_prefill(rep: _PrefillReplica, t: float):
+        if rep.busy or not rep.queue:
+            return
+        batch = rep.queue[:PREFILL_MAX_BATCH]
+        del rep.queue[: len(batch)]
+        rep.running = batch
+        rep.busy = True
+        total = sum(s.req.n_in for s in batch)
+        push(t + rep.perf.prefill_batch_time(total, len(batch)), "pre_done", rep.rid)
+
+    # ---- decode side ----
+    def kick(rep: _DecodeReplica, t: float):
+        if rep.active and not rep.busy:
+            rep.busy = True
+            ctx = sum(x.ctx for x in rep.active) / len(rep.active)
+            push(t + rep.perf.decode_time(len(rep.active), ctx), "iter", rep.rid)
+
+    def place(s: ReqState, t: float) -> bool:
+        cands = [r for r in dec_reps if r.capacity_ok(s)]
+        if not cands:
+            return False
+        rep = max(cands, key=lambda r: r.perf.max_kv_tokens - r.tokens)
+        rep.active.append(s)
+        rep.tokens += s.req.n_in + s.req.n_out
+        s.t_last = t
+        kick(rep, t)
+        return True
+
+    while events:
+        t, _, kind, ident = heapq.heappop(events)
+        if t > horizon:
+            break
+        if kind == "arrive":
+            s = states[ident]
+            rep = min(pre_reps, key=lambda r: r.backlog_s() + (0.05 if r.busy else 0.0))
+            rep.queue.append(s)
+            start_prefill(rep, t)
+        elif kind == "pre_done":
+            rep = pre_reps[ident]
+            batch, rep.running, rep.busy = rep.running, [], False
+            for s in batch:
+                s.ttft = t - s.req.t_arrival
+                s.ctx = s.req.n_in
+                s.remaining = max(s.req.n_out - 1, 0)  # first token from prefill
+                if s.remaining > 0:
+                    push(t + rep.perf.kv_transfer_time(s.req.n_in), "ready", idx_of[id(s)])
+            start_prefill(rep, t)
+        elif kind == "ready":
+            if not place(states[ident], t):
+                pending.append(states[ident])
+        else:  # decode iteration complete
+            rep = dec_reps[ident]
+            rep.busy = False
+            done = []
+            for s in rep.active:
+                s.tbts.append(t - s.t_last)
+                s.t_last = t
+                s.ctx += 1
+                s.remaining -= 1
+                if s.remaining <= 0:
+                    done.append(s)
+            for s in done:
+                rep.active.remove(s)
+                rep.tokens -= s.req.n_in + s.req.n_out
+            while pending and place(pending[0], t):
+                pending.pop(0)
+            kick(rep, t)
+
+    return _collect(states, duration)
+
+
+# ---------------------------------------------------------------------------
+# Co-located (Sarathi-style chunked prefill + piggybacked decode)
+# ---------------------------------------------------------------------------
+
+
+def simulate_colocated(
+    reqs: Sequence[Request],
+    *,
+    perf: ModelPerf,
+    n_machines: int,
+    ref_perf: ModelPerf,
+    duration: float,
+    chunk: int = 1024,
+    max_sim_time_factor: float = 4.0,
+) -> SimResult:
+    states = _prepare(reqs, ref_perf)
+    horizon = duration * max_sim_time_factor
+    n_rep = n_machines * perf.replicas_per_machine
+
+    @dataclass
+    class Rep:
+        rid: int
+        prefill_q: List[List] = field(default_factory=list)  # [state, done] pairs
+        active: List[ReqState] = field(default_factory=list)
+        tokens: int = 0
+        busy: bool = False
+        backlog: float = 0.0  # outstanding prefill tokens (for placement)
+        plan_takes: List[Tuple[List, int]] = field(default_factory=list)
+        plan_active: List[ReqState] = field(default_factory=list)
+
+    reps = [Rep(r) for r in range(n_rep)]
+    events: List[Tuple[float, int, str, int]] = []
+    seq = 0
+
+    def schedule_iter(rep: Rep, t: float):
+        """Plan one mixed iteration: a prefill chunk + all currently-active
+        decodes.  The plan is frozen here; arrivals during the iteration wait."""
+        nonlocal seq
+        if rep.busy or (not rep.prefill_q and not rep.active):
+            return
+        rep.busy = True
+        budget = chunk
+        takes: List[Tuple[List, int]] = []
+        for entry in rep.prefill_q:
+            if budget <= 0:
+                break
+            s, done = entry
+            take = min(budget, s.req.n_in - done)
+            if take > 0:
+                takes.append((entry, take))
+                budget -= take
+        chunk_tokens = sum(tk for _, tk in takes)
+        rep.plan_takes = takes
+        rep.plan_active = list(rep.active)
+        n_active = len(rep.plan_active)
+        avg_ctx = (sum(x.ctx for x in rep.plan_active) / n_active) if n_active else 0
+        if chunk_tokens:
+            # decode tokens piggyback on the chunk's weight streaming: their
+            # marginal cost is the KV-cache attention reads (Sarathi's claim)
+            t_iter = perf.prefill_time(chunk_tokens)
+            if n_active:
+                t_iter += perf.kv_read_time(n_active, avg_ctx)
+        else:
+            t_iter = perf.decode_time(n_active, avg_ctx)
+        heapq.heappush(events, (t + t_iter, seq, "iter", rep.rid))
+        seq += 1
+
+    for i, s in enumerate(states):
+        heapq.heappush(events, (s.req.t_arrival, seq, "arrive", i))
+        seq += 1
+
+    while events:
+        t, _, kind, ident = heapq.heappop(events)
+        if t > horizon:
+            break
+        if kind == "arrive":
+            s = states[ident]
+            rep = min(reps, key=lambda r: r.backlog + 50.0 * len(r.active))
+            rep.prefill_q.append([s, 0])
+            rep.backlog += s.req.n_in
+            schedule_iter(rep, t)
+        else:
+            rep = reps[ident]
+            rep.busy = False
+            # 1) decode tokens for the active set the iteration actually ran
+            done_reqs = []
+            for s in rep.plan_active:
+                s.tbts.append(t - s.t_last)
+                s.t_last = t
+                s.ctx += 1
+                s.remaining -= 1
+                if s.remaining <= 0:
+                    done_reqs.append(s)
+            for s in done_reqs:
+                rep.active.remove(s)
+                rep.tokens -= s.req.n_in + s.req.n_out
+            # 2) apply the planned prefill chunk
+            for entry, take in rep.plan_takes:
+                s = entry[0]
+                entry[1] += take
+                rep.backlog -= take
+                if entry[1] >= s.req.n_in:
+                    s.ttft = t - s.req.t_arrival
+                    s.ctx = s.req.n_in
+                    s.remaining = max(s.req.n_out - 1, 0)
+                    s.t_last = t
+                    if s.remaining > 0:
+                        rep.active.append(s)
+                        rep.tokens += s.req.n_in + s.req.n_out
+            rep.prefill_q = [e for e in rep.prefill_q if e[1] < e[0].req.n_in]
+            rep.plan_takes, rep.plan_active = [], []
+            schedule_iter(rep, t)
+
+    return _collect(states, duration)

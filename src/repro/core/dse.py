@@ -1,0 +1,126 @@
+"""Less-is-more design space exploration (paper §5.1-5.3, Figures 5 & 6).
+
+Sweeps architectural knobs (core count, systolic array size, vector width,
+L1/L2, memory system) around the H100 reference, evaluating each candidate's
+prefill / decode latency (analytical model) and die area (area model).
+The paper's Prefill / Decode Chips are Pareto points of these sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from .hardware import H100, ChipSpec, die_area_mm2, hw_cost, tdp_w
+from .opgraph import Parallelism, phase_ops
+from .perfmodel import run_graph
+
+
+@dataclass(frozen=True)
+class DSEPoint:
+    chip: ChipSpec
+    area_mm2: float
+    latency_s: float
+    norm_latency: float  # vs H100
+    hw_cost: float
+    tdp_w: float
+
+
+def _latency(chip: ChipSpec, cfg: ModelConfig, phase: str, batch: int, seq: int,
+             par: Parallelism) -> float:
+    return run_graph(chip, phase_ops(cfg, phase=phase, batch=batch, seq=seq, par=par)).total
+
+
+def sweep(
+    candidates: Iterable[ChipSpec],
+    cfg: ModelConfig,
+    *,
+    phase: str,
+    batch: int,
+    seq: int = 1024,
+    par: Optional[Parallelism] = None,
+) -> List[DSEPoint]:
+    par = par or Parallelism(tp=8)
+    base = _latency(H100, cfg, phase, batch, seq, par)
+    out = []
+    for c in candidates:
+        lat = _latency(c, cfg, phase, batch, seq, par)
+        out.append(
+            DSEPoint(
+                chip=c,
+                area_mm2=die_area_mm2(c),
+                latency_s=lat,
+                norm_latency=lat / base,
+                hw_cost=hw_cost(c),
+                tdp_w=tdp_w(c),
+            )
+        )
+    return out
+
+
+def prefill_candidates() -> List[ChipSpec]:
+    """Fig. 5 sweep: GDDR7 memory system, vary compute fabric."""
+    cands = []
+    for cores in (96, 112, 128, 144):
+        for sys in ((16, 16), (16, 32), (32, 32), (32, 64)):
+            for vw in (8, 16, 32):
+                for l2 in (24, 32, 40):
+                    l1 = 128 + 64 * (sys[0] * sys[1] // 512)  # scale L1 with array
+                    cands.append(
+                        dataclasses.replace(
+                            H100,
+                            name=f"P-c{cores}-s{sys[0]}x{sys[1]}-v{vw}-l2_{l2}",
+                            core_count=cores,
+                            systolic_rows=sys[0],
+                            systolic_cols=sys[1],
+                            vector_width=vw,
+                            l1_kb_per_core=min(l1, 512),
+                            l2_mb=l2,
+                            mem_protocol="GDDR7",
+                            mem_bus_bits=512,
+                            pin_speed_gbps=32.0,
+                            mem_packages=16,
+                            capacity_per_package_gb=4,
+                            mem_bw_override_gbs=None,
+                            reported_area_mm2=None,
+                            reported_tdp_w=None,
+                        )
+                    )
+    return cands
+
+
+def decode_candidates() -> List[ChipSpec]:
+    """Fig. 6 sweep: keep HBM3, cut compute/caches."""
+    cands = []
+    for cores in (96, 120, 144, 160):
+        for sys in ((8, 8), (8, 16), (16, 16), (16, 32)):
+            for vw in (4, 8, 16):
+                for l2 in (20, 30, 40, 50):
+                    cands.append(
+                        dataclasses.replace(
+                            H100,
+                            name=f"D-c{cores}-s{sys[0]}x{sys[1]}-v{vw}-l2_{l2}",
+                            core_count=cores,
+                            systolic_rows=sys[0],
+                            systolic_cols=sys[1],
+                            vector_width=vw,
+                            l1_kb_per_core=128,
+                            l2_mb=l2,
+                            reported_area_mm2=None,
+                            reported_tdp_w=None,
+                        )
+                    )
+    return cands
+
+
+def pareto(points: List[DSEPoint]) -> List[DSEPoint]:
+    """Area-latency Pareto frontier."""
+    pts = sorted(points, key=lambda p: (p.area_mm2, p.latency_s))
+    out: List[DSEPoint] = []
+    best = float("inf")
+    for p in pts:
+        if p.latency_s < best:
+            out.append(p)
+            best = p.latency_s
+    return out

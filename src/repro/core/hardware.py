@@ -1,0 +1,309 @@
+"""Chip specifications + area / cost / TDP models (paper §5-6, Table 3).
+
+``ChipSpec`` is an LLMCompass-style architectural description.  Derived
+quantities (tensor PFLOPs, vector TFLOPs, bandwidth, capacity) follow the
+paper's formulas and reproduce Table 3 exactly:
+
+  tensor FLOP/s = cores * lanes * sys_rows * sys_cols * 2 * f_tensor
+  vector FLOP/s = cores * lanes * vector_width * 2 * f_vector
+  mem BW        = bus_bits * pin_Gbps / 8     (HBM3 uses the reported 3352)
+
+The area model is a linear component model (per-MAC, per-vector-lane, per-KB
+SRAM, per-package PHY, fixed uncore) *calibrated* so that the H100
+configuration evaluates to its reported 814 mm^2 and the paper's Prefill /
+Decode Chips evaluate to their published 784 / 520 mm^2 estimates (raw
+component sum x 1.10 white-space overhead).  Die cost uses the classic
+dies-per-300mm-wafer formula at $20k/wafer; memory cost is $/GB by protocol;
+TDP = (die_area * H100 power density + memory power) / 0.90.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Chip spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    core_count: int
+    lanes_per_core: int
+    vector_width: int  # fp32 lanes per vector unit
+    systolic_rows: int
+    systolic_cols: int
+    l1_kb_per_core: int
+    l2_mb: float
+    mem_protocol: str  # "GDDR7" | "HBM3" | "HBM2e"
+    mem_bus_bits: int
+    pin_speed_gbps: float
+    mem_packages: int
+    capacity_per_package_gb: int
+    clock_tensor_ghz: float = 1.83
+    clock_vector_ghz: float = 1.98
+    mem_bw_override_gbs: Optional[float] = None  # use reported value if set
+    scaleup_gbs: float = 900.0  # NVLink-class total per chip
+    scaleout_gbs: float = 50.0  # Infiniband-class per chip
+    reported_area_mm2: Optional[float] = None  # for reference chips (H100)
+    reported_tdp_w: Optional[float] = None
+    # bandwidth a single core can keep in flight (memory-level parallelism cap)
+    per_core_bw_gbs: float = 45.0
+
+    # ------------- derived -------------
+    @property
+    def lanes(self) -> int:
+        return self.core_count * self.lanes_per_core
+
+    @property
+    def tensor_flops(self) -> float:
+        return (
+            self.lanes
+            * self.systolic_rows
+            * self.systolic_cols
+            * 2
+            * self.clock_tensor_ghz
+            * 1e9
+        )
+
+    @property
+    def vector_flops(self) -> float:
+        return self.lanes * self.vector_width * 2 * self.clock_vector_ghz * 1e9
+
+    @property
+    def mem_bw(self) -> float:
+        if self.mem_bw_override_gbs is not None:
+            return self.mem_bw_override_gbs * 1e9
+        return self.mem_bus_bits * self.pin_speed_gbps / 8 * 1e9
+
+    @property
+    def mem_capacity(self) -> float:
+        return self.mem_packages * self.capacity_per_package_gb * 1e9
+
+    @property
+    def effective_mem_bw(self) -> float:
+        """Bandwidth cap from per-core memory-level parallelism."""
+        return min(self.mem_bw, self.core_count * self.per_core_bw_gbs * 1e9)
+
+
+# ---------------------------------------------------------------------------
+# Area model (calibrated to Table 3)
+# ---------------------------------------------------------------------------
+
+# fixed literature-guided constants (mm^2 @ TSMC 4nm)
+A_L1_PER_KB = 0.0015
+A_L2_PER_MB = 1.0
+A_HBM_PHY_PER_PKG = 7.7
+A_GDDR_PHY_PER_32B = 3.0
+A_CORE_BASE = 0.3
+WHITESPACE = 1.10
+
+# calibrated (solved so H100 -> 814, Prefill -> 784, Decode -> 520 mm^2)
+A_PER_MAC = 3.902e-4
+A_PER_VEC_LANE = 1.4637e-2
+A_UNCORE_FIXED = 208.4
+
+
+def die_area_mm2(c: ChipSpec) -> float:
+    """Modeled die area (includes the 10% white-space overhead)."""
+    macs = c.lanes * c.systolic_rows * c.systolic_cols
+    vec = c.lanes * c.vector_width
+    per_core = A_CORE_BASE * c.core_count + A_L1_PER_KB * c.l1_kb_per_core * c.core_count
+    phy = (
+        A_HBM_PHY_PER_PKG * c.mem_packages
+        if c.mem_protocol.startswith("HBM")
+        else A_GDDR_PHY_PER_32B * (c.mem_bus_bits / 32)
+    )
+    raw = (
+        A_UNCORE_FIXED
+        + per_core
+        + A_PER_MAC * macs
+        + A_PER_VEC_LANE * vec
+        + A_L2_PER_MB * c.l2_mb
+        + phy
+    )
+    return raw * WHITESPACE
+
+
+# ---------------------------------------------------------------------------
+# Cost model (paper §6.1)
+# ---------------------------------------------------------------------------
+
+WAFER_COST = 20_000.0  # $ per 300mm 4nm wafer
+WAFER_DIAMETER_MM = 300.0
+
+MEM_COST_PER_GB = {"GDDR7": 3.0, "HBM3": 9.0, "HBM2e": 9.0}
+HBM_PKG_POWER_W = 30.0
+GDDR_PJ_PER_BIT = 4.5
+TDP_OVERHEAD = 0.90  # VRM loss & peripherals: TDP = raw / 0.90
+
+# H100 die power density: (700 * 0.9 - 30 * 5) W over 814 mm^2
+H100_DIE_POWER_DENSITY = (700.0 * 0.90 - HBM_PKG_POWER_W * 5) / 814.0  # W/mm^2
+
+
+def dies_per_wafer(area_mm2: float) -> float:
+    d = WAFER_DIAMETER_MM
+    return math.pi * (d / 2) ** 2 / area_mm2 - math.pi * d / math.sqrt(2 * area_mm2)
+
+
+def die_cost(c: ChipSpec, *, use_reported_area: bool = True) -> float:
+    area = c.reported_area_mm2 if (use_reported_area and c.reported_area_mm2) else die_area_mm2(c)
+    return WAFER_COST / dies_per_wafer(area)
+
+
+def memory_cost(c: ChipSpec, hbm_cost_per_gb: float = 9.0) -> float:
+    gb = c.mem_capacity / 1e9
+    if c.mem_protocol.startswith("HBM"):
+        return hbm_cost_per_gb * gb
+    return MEM_COST_PER_GB[c.mem_protocol] * gb
+
+
+def hw_cost(c: ChipSpec, hbm_cost_per_gb: float = 9.0) -> float:
+    return die_cost(c) + memory_cost(c, hbm_cost_per_gb)
+
+
+def mem_power_w(c: ChipSpec) -> float:
+    if c.mem_protocol.startswith("HBM"):
+        return HBM_PKG_POWER_W * c.mem_packages
+    # GDDR: pJ/bit * bits/s
+    return GDDR_PJ_PER_BIT * 1e-12 * c.mem_bw * 8
+
+
+def tdp_w(c: ChipSpec) -> float:
+    if c.reported_tdp_w is not None:
+        return c.reported_tdp_w
+    area = c.reported_area_mm2 or die_area_mm2(c)
+    return (area * H100_DIE_POWER_DENSITY + mem_power_w(c)) / TDP_OVERHEAD
+
+
+# ---------------------------------------------------------------------------
+# The chips (paper Table 3 + baselines)
+# ---------------------------------------------------------------------------
+
+H100 = ChipSpec(
+    name="H100",
+    core_count=132,
+    lanes_per_core=4,
+    vector_width=32,
+    systolic_rows=16,
+    systolic_cols=32,  # "equivalent to 16x32"
+    l1_kb_per_core=256,
+    l2_mb=50,
+    mem_protocol="HBM3",
+    mem_bus_bits=5120,
+    pin_speed_gbps=5.2,
+    mem_packages=5,
+    capacity_per_package_gb=16,
+    mem_bw_override_gbs=3352.0,
+    reported_area_mm2=814.0,
+    reported_tdp_w=700.0,
+)
+
+PREFILL_CHIP = ChipSpec(
+    name="PrefillChip",
+    core_count=128,
+    lanes_per_core=4,
+    vector_width=16,
+    systolic_rows=32,
+    systolic_cols=32,
+    l1_kb_per_core=320,
+    l2_mb=32,
+    mem_protocol="GDDR7",
+    mem_bus_bits=512,
+    pin_speed_gbps=32.0,
+    mem_packages=16,
+    capacity_per_package_gb=4,
+)
+
+DECODE_CHIP = ChipSpec(
+    name="DecodeChip",
+    core_count=144,
+    lanes_per_core=4,
+    vector_width=8,
+    systolic_rows=16,
+    systolic_cols=16,
+    l1_kb_per_core=128,
+    l2_mb=30,
+    mem_protocol="HBM3",
+    mem_bus_bits=5120,
+    pin_speed_gbps=5.2,
+    mem_packages=5,
+    capacity_per_package_gb=16,
+    mem_bw_override_gbs=3352.0,
+)
+
+# A100 (Splitwise-hetero decode baseline): 108 SMs @1.41GHz, 312 TF fp16,
+# 19.5 TF fp32, 2039 GB/s HBM2e, 80 GB.  Cost/TDP modeled as half an H100
+# (paper Table 4 footnote).
+A100 = ChipSpec(
+    name="A100",
+    core_count=108,
+    lanes_per_core=4,
+    vector_width=16,
+    systolic_rows=16,
+    systolic_cols=16,
+    l1_kb_per_core=192,
+    l2_mb=40,
+    mem_protocol="HBM2e",
+    mem_bus_bits=5120,
+    pin_speed_gbps=3.2,
+    mem_packages=5,
+    capacity_per_package_gb=16,
+    clock_tensor_ghz=1.41,
+    clock_vector_ghz=1.41,
+    mem_bw_override_gbs=2039.0,
+    scaleup_gbs=600.0,
+    reported_tdp_w=400.0,
+)
+
+# Hypothetical power-capped H100 (Splitwise-pcap decode baseline): 450 W,
+# 76% of peak tensor FLOPs, same memory/interconnect as the 700 W H100.
+H100_PCAP = replace(
+    H100,
+    name="H100-pcap450",
+    clock_tensor_ghz=1.83 * 0.76,
+    clock_vector_ghz=1.98 * 0.76,
+    reported_tdp_w=450.0,
+)
+
+CHIPS = {c.name: c for c in [H100, PREFILL_CHIP, DECODE_CHIP, A100, H100_PCAP]}
+
+
+def norm_hw_cost(c: ChipSpec, hbm_cost_per_gb: float = 9.0) -> float:
+    """Hardware cost normalized to an H100 (paper Table 3 bottom)."""
+    if c.name == "A100":
+        return 0.5  # paper's assumption
+    return hw_cost(c, hbm_cost_per_gb) / hw_cost(H100, hbm_cost_per_gb)
+
+
+def norm_tdp(c: ChipSpec) -> float:
+    if c.name == "A100":
+        return 0.5
+    return tdp_w(c) / tdp_w(H100)
+
+
+@dataclass(frozen=True)
+class MachineSpec:
+    """An 8-chip inference machine (paper Fig. 4)."""
+
+    chip: ChipSpec
+    n_chips: int = 8
+
+    @property
+    def name(self) -> str:
+        return f"8x{self.chip.name}"
+
+    @property
+    def mem_capacity(self) -> float:
+        return self.n_chips * self.chip.mem_capacity
+
+    def hw_cost(self, hbm_cost_per_gb: float = 9.0) -> float:
+        return self.n_chips * hw_cost(self.chip, hbm_cost_per_gb)
+
+    def norm_hw_cost(self) -> float:
+        return norm_hw_cost(self.chip)
+
+    def norm_tdp(self) -> float:
+        return norm_tdp(self.chip)

@@ -1,0 +1,277 @@
+"""Operator graphs: ModelConfig x (phase, batch, seq, parallelism) -> [Op].
+
+These graphs feed the analytical chip model (``perfmodel``) — they are the
+paper's LLMCompass-style workload description, built from the *same*
+``ModelConfig`` objects that drive the executable JAX models, so the
+simulated and executed systems cannot drift apart.
+
+Conventions: all shapes are per-chip after parallelism is applied.
+  tp — tensor parallel (heads / mlp sharded, 2 all-reduces per layer)
+  ep — expert parallel (experts sharded, 2 all-to-alls per MoE layer;
+       attention is data-parallel over ep)
+  pp — pipeline parallel (layers divided; p2p activations between stages)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+from ..configs.base import ModelConfig
+from .perfmodel import Op
+
+# per-element cost constants (calibrated; see DESIGN.md §perf-model)
+NORM_FLOPS_PER_ELT = 8.0
+NORM_BYTES_PER_ELT = 6.0  # read + write + stats pass (fp16)
+SOFTMAX_FLOPS_PER_ELT = 6.0
+SOFTMAX_BYTES_PER_ELT = 12.0  # fp32 scores materialized + fp16 probs (LLMCompass-style)
+ACT_FLOPS_PER_ELT = 4.0
+ROPE_FLOPS_PER_ELT = 6.0
+
+
+@dataclass(frozen=True)
+class Parallelism:
+    tp: int = 8
+    ep: int = 1
+    pp: int = 1
+
+    @property
+    def n_chips(self) -> int:
+        return self.tp * self.ep * self.pp
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-graphs
+# ---------------------------------------------------------------------------
+
+
+def _attn_ops(cfg: ModelConfig, T: int, B: int, S_q: int, S_kv: int, par: Parallelism,
+              ab: float, wb: float, decode: bool) -> List[Op]:
+    """T = B*S_q tokens on this chip; S_kv = context length."""
+    ops: List[Op] = []
+    tp = par.tp
+    d = cfg.d_model
+
+    if cfg.attn_type == "mla":
+        a = cfg.mla
+        qh = a.qk_nope_head_dim + a.qk_rope_head_dim
+        H = cfg.n_heads
+        ops.append(Op("matmul", "attn_q_a", m=T, k=d, n=a.q_lora_rank, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+        ops.append(Op("matmul", "attn_q_b", m=T, k=a.q_lora_rank, n=H * qh // tp, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+        ops.append(Op("matmul", "attn_kv_a", m=T, k=d, n=a.kv_lora_rank + a.qk_rope_head_dim, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+        if decode:
+            # matmul-absorbed decode over the compressed cache
+            r = a.kv_lora_rank + a.qk_rope_head_dim
+            ops.append(Op("matmul", "attn_q_absorb", m=T, k=qh, n=a.kv_lora_rank, batch=H // tp, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+            ops.append(Op("matmul", "attn_scores", m=H // tp, k=r, n=S_kv, batch=B, a_bytes=ab, w_bytes=ab, o_bytes=4))
+            ops.append(Op("vector", "attn_softmax",
+                          flops=SOFTMAX_FLOPS_PER_ELT * B * (H // tp) * S_kv,
+                          bytes=SOFTMAX_BYTES_PER_ELT * B * (H // tp) * S_kv))
+            ops.append(Op("matmul", "attn_av", m=H // tp, k=S_kv, n=a.kv_lora_rank, batch=B, a_bytes=ab, w_bytes=ab, o_bytes=ab))
+            ops.append(Op("matmul", "attn_v_absorb", m=T, k=a.kv_lora_rank, n=a.v_head_dim, batch=H // tp, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+        else:
+            ops.append(Op("matmul", "attn_kv_b", m=T, k=a.kv_lora_rank, n=H * (a.qk_nope_head_dim + a.v_head_dim) // tp, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+            ops.append(Op("matmul", "attn_scores", m=S_q, k=qh, n=S_kv, batch=B * H // tp, a_bytes=ab, w_bytes=ab, o_bytes=4))
+            ops.append(Op("vector", "attn_softmax",
+                          flops=SOFTMAX_FLOPS_PER_ELT * B * (H // tp) * S_q * S_kv,
+                          bytes=SOFTMAX_BYTES_PER_ELT * B * (H // tp) * S_q * S_kv))
+            ops.append(Op("matmul", "attn_av", m=S_q, k=S_kv, n=a.v_head_dim, batch=B * H // tp, a_bytes=ab, w_bytes=ab, o_bytes=ab))
+        ops.append(Op("matmul", "attn_o", m=T, k=cfg.n_heads * a.v_head_dim // tp, n=d, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+        ops.append(Op("vector", "attn_rope", flops=ROPE_FLOPS_PER_ELT * T * (H // tp) * a.qk_rope_head_dim,
+                      bytes=2 * ab * T * (H // tp) * a.qk_rope_head_dim))
+        return ops
+
+    # GQA / MHA
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    Ht, KVt = H // tp, max(1, KV // tp)
+    G = H // KV
+    ops.append(Op("matmul", "attn_qkv", m=T, k=d, n=(Ht + 2 * KVt) * dh, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    if cfg.pos_emb == "rope":
+        ops.append(Op("vector", "attn_rope", flops=ROPE_FLOPS_PER_ELT * T * (Ht + KVt) * dh,
+                      bytes=2 * ab * T * (Ht + KVt) * dh))
+    if decode:
+        ops.append(Op("matmul", "attn_scores", m=G, k=dh, n=S_kv, batch=B * KVt, a_bytes=ab, w_bytes=ab, o_bytes=4))
+        smax_e = B * Ht * S_kv
+        ops.append(Op("vector", "attn_softmax", flops=SOFTMAX_FLOPS_PER_ELT * smax_e,
+                      bytes=SOFTMAX_BYTES_PER_ELT * smax_e))
+        ops.append(Op("matmul", "attn_av", m=G, k=S_kv, n=dh, batch=B * KVt, a_bytes=ab, w_bytes=ab, o_bytes=ab))
+        ops.append(Op("memory", "kv_append", bytes=2 * B * KVt * dh * ab))
+    else:
+        ops.append(Op("matmul", "attn_scores", m=S_q, k=dh, n=S_kv, batch=B * Ht, a_bytes=ab, w_bytes=ab, o_bytes=4))
+        smax_e = B * Ht * S_q * S_kv
+        ops.append(Op("vector", "attn_softmax", flops=SOFTMAX_FLOPS_PER_ELT * smax_e,
+                      bytes=SOFTMAX_BYTES_PER_ELT * smax_e))
+        ops.append(Op("matmul", "attn_av", m=S_q, k=S_kv, n=dh, batch=B * Ht, a_bytes=ab, w_bytes=ab, o_bytes=ab))
+    ops.append(Op("matmul", "attn_o", m=T, k=Ht * dh, n=d, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-graphs
+# ---------------------------------------------------------------------------
+
+
+def _mlp_ops(cfg: ModelConfig, T: int, par: Parallelism, ab: float, wb: float,
+             d_ff: Optional[int] = None, tag: str = "mlp") -> List[Op]:
+    d = cfg.d_model
+    f = (d_ff or cfg.d_ff) // par.tp
+    ops = [Op("matmul", f"{tag}_up", m=T, k=d, n=f, a_bytes=ab, w_bytes=wb, o_bytes=ab)]
+    if cfg.gated_mlp:
+        ops.append(Op("matmul", f"{tag}_gate", m=T, k=d, n=f, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    ops.append(Op("vector", f"{tag}_act", flops=ACT_FLOPS_PER_ELT * T * f, bytes=3 * ab * T * f))
+    ops.append(Op("matmul", f"{tag}_down", m=T, k=f, n=d, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    return ops
+
+
+def _moe_ops(cfg: ModelConfig, T: int, par: Parallelism, ab: float, wb: float) -> List[Op]:
+    """T tokens on this chip *before* dispatch; experts sharded over ep."""
+    m = cfg.moe
+    d = cfg.d_model
+    ops: List[Op] = [Op("matmul", "moe_router", m=T, k=d, n=m.n_experts, a_bytes=ab, w_bytes=4, o_bytes=4)]
+    if par.ep > 1:
+        ops.append(Op("alltoall", "moe_dispatch", comm_bytes=T * m.top_k * d * ab, parties=par.ep))
+    # balanced dispatch: this chip hosts E/ep experts and receives T*top_k
+    # token-slots total (same in as out under balance)
+    e_local = max(1, m.n_experts // par.ep)
+    tok_per_expert = _ceil_div(T * m.top_k, m.n_experts)
+    f = m.d_expert // max(1, par.tp // par.ep) if par.tp > par.ep else m.d_expert
+    ops.append(Op("matmul", "moe_up", m=tok_per_expert, k=d, n=f, batch=e_local, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    if cfg.gated_mlp:
+        ops.append(Op("matmul", "moe_gate", m=tok_per_expert, k=d, n=f, batch=e_local, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    ops.append(Op("vector", "moe_act", flops=ACT_FLOPS_PER_ELT * tok_per_expert * f * e_local,
+                  bytes=3 * ab * tok_per_expert * f * e_local))
+    ops.append(Op("matmul", "moe_down", m=tok_per_expert, k=f, n=d, batch=e_local, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    if par.ep > 1:
+        ops.append(Op("alltoall", "moe_combine", comm_bytes=T * m.top_k * d * ab, parties=par.ep))
+    if m.n_shared_experts:
+        ops += _mlp_ops(cfg, T, par, ab, wb, d_ff=m.n_shared_experts * m.d_expert, tag="moe_shared")
+    if cfg.dense_residual:
+        ops += _mlp_ops(cfg, T, par, ab, wb, d_ff=cfg.d_ff_dense or cfg.d_ff, tag="moe_dense")
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Mamba sub-graph
+# ---------------------------------------------------------------------------
+
+
+def _mamba_ops(cfg: ModelConfig, T: int, B: int, par: Parallelism, ab: float, wb: float,
+               decode: bool) -> List[Op]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d) // par.tp
+    nh = max(1, s.n_heads(d) // par.tp)
+    gdn = s.n_groups * s.d_state
+    conv_ch = di + 2 * gdn
+    ops: List[Op] = [
+        Op("matmul", "ssm_in", m=T, k=d, n=2 * di + 2 * gdn + nh, a_bytes=ab, w_bytes=wb, o_bytes=ab),
+        Op("vector", "ssm_conv", flops=2 * s.d_conv * T * conv_ch, bytes=3 * ab * T * conv_ch),
+    ]
+    if decode:
+        # state update: B*nh states of [hd, N]
+        elems = B * nh * s.head_dim * s.d_state
+        ops.append(Op("vector", "ssm_step", flops=6 * elems, bytes=2 * 4 * elems))
+    else:
+        Q = s.chunk_size
+        nc = _ceil_div(T // max(B, 1), Q) * B
+        # intra-chunk: CB [Q,Q] + M@x [Q,hd]; inter-chunk: state rank-Q update
+        ops.append(Op("matmul", "ssm_cb", m=Q, k=s.d_state, n=Q, batch=nc * s.n_groups, a_bytes=ab, w_bytes=ab, o_bytes=4))
+        ops.append(Op("matmul", "ssm_diag", m=Q, k=Q, n=s.head_dim, batch=nc * nh, a_bytes=4, w_bytes=ab, o_bytes=ab))
+        ops.append(Op("matmul", "ssm_state", m=s.head_dim, k=Q, n=s.d_state, batch=nc * nh, a_bytes=ab, w_bytes=ab, o_bytes=4))
+        ops.append(Op("vector", "ssm_decay", flops=8 * T * nh * Q, bytes=4 * T * nh))
+    ops.append(Op("vector", "ssm_gate_norm", flops=NORM_FLOPS_PER_ELT * T * di, bytes=NORM_BYTES_PER_ELT * T * di))
+    ops.append(Op("matmul", "ssm_out", m=T, k=di, n=d, a_bytes=ab, w_bytes=wb, o_bytes=ab))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Full-phase graphs
+# ---------------------------------------------------------------------------
+
+
+def phase_ops(
+    cfg: ModelConfig,
+    *,
+    phase: str,  # "prefill" | "decode"
+    batch: int,
+    seq: int,  # prompt length (prefill) or context length (decode)
+    par: Parallelism,
+    w_bytes: float = 2.0,
+    a_bytes: float = 2.0,
+) -> List[Op]:
+    decode = phase == "decode"
+    # attention data-parallel over ep (MoE deployments)
+    B = _ceil_div(batch, par.ep)
+    S_q = 1 if decode else seq
+    S_kv = seq + 1 if decode else seq
+    T = B * S_q
+    d = cfg.d_model
+
+    per_pattern: List[Op] = []
+    for mixer, ffn in cfg.block_pattern:
+        per_pattern.append(Op("vector", "norm", flops=NORM_FLOPS_PER_ELT * T * d, bytes=NORM_BYTES_PER_ELT * T * d))
+        if mixer == "attn":
+            per_pattern += _attn_ops(cfg, T, B, S_q, S_kv, par, a_bytes, w_bytes, decode)
+            if par.tp > 1:
+                per_pattern.append(Op("allreduce", "attn_ar", comm_bytes=T * d * a_bytes, parties=par.tp))
+        elif mixer == "mamba":
+            per_pattern += _mamba_ops(cfg, T, B, par, a_bytes, w_bytes, decode)
+            if par.tp > 1:
+                per_pattern.append(Op("allreduce", "ssm_ar", comm_bytes=T * d * a_bytes, parties=par.tp))
+        if ffn != "none":
+            per_pattern.append(Op("vector", "norm", flops=NORM_FLOPS_PER_ELT * T * d, bytes=NORM_BYTES_PER_ELT * T * d))
+            if ffn == "mlp":
+                per_pattern += _mlp_ops(cfg, T, par, a_bytes, w_bytes)
+            else:
+                per_pattern += _moe_ops(cfg, T, par, a_bytes, w_bytes)
+            if par.tp > 1:
+                per_pattern.append(Op("allreduce", "ffn_ar", comm_bytes=T * d * a_bytes, parties=par.tp))
+
+    layers_per_stage = cfg.n_repeats // par.pp
+    ops = per_pattern * layers_per_stage
+    if par.pp > 1:
+        ops.append(Op("p2p", "pp_send", comm_bytes=T * d * a_bytes, parties=2))
+
+    # embedding lookup + final norm + LM head (last stage only; counted once)
+    ops.insert(0, Op("memory", "embed", bytes=T * d * a_bytes))
+    ops.append(Op("vector", "final_norm", flops=NORM_FLOPS_PER_ELT * T * d, bytes=NORM_BYTES_PER_ELT * T * d))
+    T_head = B if not decode else T  # prefill only needs last-position logits
+    ops.append(Op("matmul", "lm_head", m=T_head, k=d, n=cfg.vocab_size // par.tp, a_bytes=a_bytes, w_bytes=w_bytes, o_bytes=4))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Sizes (capacity / transfer modeling)
+# ---------------------------------------------------------------------------
+
+
+def kv_bytes_per_token(cfg: ModelConfig, a_bytes: float = 2.0) -> float:
+    """KV-cache bytes per token across ALL chips (whole model)."""
+    total = 0.0
+    for mixer, _ in cfg.block_pattern:
+        if mixer != "attn":
+            continue
+        if cfg.attn_type == "mla":
+            total += (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * a_bytes
+        else:
+            total += 2 * cfg.n_kv_heads * cfg.d_head * a_bytes
+    return total * cfg.n_repeats
+
+
+def ssm_state_bytes(cfg: ModelConfig, batch: int) -> float:
+    """Fixed-size recurrent state bytes (Mamba layers), whole model."""
+    if cfg.ssm is None:
+        return 0.0
+    s = cfg.ssm
+    n_mamba = cfg.mixer_counts().get("mamba", 0)
+    per = s.n_heads(cfg.d_model) * s.head_dim * s.d_state * 4.0
+    conv = (s.d_conv - 1) * (s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state) * 2.0
+    return n_mamba * batch * (per + conv)
+
+
+def weight_bytes(cfg: ModelConfig, w_bytes: float = 2.0) -> float:
+    return cfg.param_count()[0] * w_bytes

@@ -1,0 +1,161 @@
+"""LLMCompass-lite: an analytical per-operator chip performance model.
+
+Modeling choices (validated against the paper's own sensitivity claims in
+``tests/test_paper_claims.py`` and ``benchmarks/fig2_prefill_bw.py`` etc.):
+
+* **Matmul**: systolic-array tile mapping.  An output tile of
+  (sys_rows x sys_cols) is produced per lane by streaming K values plus a
+  pipeline fill of (rows + cols) cycles; tiles round-robin over all lanes.
+  Memory time moves A, B, and C exactly once at their storage widths
+  (weights are read once per op - perfect L2 blocking).
+* **Serialization**: per-op latency = t_compute + t_memory (conservative
+  no-overlap, like LLMCompass's staged tile pipeline).  This single choice
+  reproduces BOTH headline sensitivities of paper §3: prefill latency
+  +17% at 0.6x bandwidth (memory share ~25%) and decode latency +22% at
+  0.5x cores (compute share ~15%), which a max(comp, mem) roofline cannot.
+* **Vector ops** (softmax/LayerNorm/activations): elementwise streams with a
+  flops term on the vector units and a bytes term on HBM; softmax
+  materializes fp32 scores (pre-FlashAttention kernel behaviour, matching
+  LLMCompass's operator library and the paper's "Softmax becomes the new
+  bottleneck" observation for long prefills).
+* **Memory-level parallelism**: effective bandwidth is capped at
+  cores * per_core_bw (40 GB/s): core count cuts below ~100 start to hurt
+  memory-bound phases too (paper Fig. 3 knee).
+* **Collectives**: ring all-reduce 2(n-1)/n, all-gather/all-to-all (n-1)/n
+  over the scale-up fabric, plus a per-hop latency.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .hardware import ChipSpec
+
+LINK_LATENCY_S = 2.0e-6  # per collective hop (NVLink-class)
+OP_OVERHEAD_S = 2.0e-6  # per-kernel launch/sync overhead (identical across chips)
+
+
+# ---------------------------------------------------------------------------
+# Operators
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Op:
+    kind: str  # matmul | vector | memory | allreduce | allgather | alltoall | p2p
+    name: str
+    # matmul
+    m: int = 0
+    k: int = 0
+    n: int = 0
+    batch: int = 1  # instances (e.g. B*H attention matmuls)
+    a_bytes: float = 2.0
+    w_bytes: float = 2.0
+    o_bytes: float = 2.0
+    # vector/memory
+    flops: float = 0.0
+    bytes: float = 0.0
+    # collectives
+    comm_bytes: float = 0.0
+    parties: int = 1
+
+
+@dataclass
+class OpTime:
+    name: str
+    kind: str
+    t_compute: float
+    t_memory: float
+    t_network: float
+    flops: float
+    bytes: float
+    comm_bytes: float
+
+    t_overhead: float = OP_OVERHEAD_S
+
+    @property
+    def total(self) -> float:
+        return self.t_compute + self.t_memory + self.t_network + self.t_overhead
+
+
+@dataclass
+class PhaseResult:
+    total: float
+    ops: List[OpTime]
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0.0) + o.total
+        return out
+
+    def by_name(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.ops:
+            out[o.name] = out.get(o.name, 0.0) + o.total
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Single-op latency
+# ---------------------------------------------------------------------------
+
+
+def matmul_time(chip: ChipSpec, op: Op) -> OpTime:
+    rows, cols = chip.systolic_rows, chip.systolic_cols
+    tiles = math.ceil(op.m / rows) * math.ceil(op.n / cols) * op.batch
+    rounds = math.ceil(tiles / chip.lanes)
+    cycles = rounds * (op.k + rows + cols)
+    t_c = cycles / (chip.clock_tensor_ghz * 1e9)
+    bytes_moved = op.batch * (
+        op.m * op.k * op.a_bytes + op.k * op.n * op.w_bytes + op.m * op.n * op.o_bytes
+    )
+    t_m = bytes_moved / chip.effective_mem_bw
+    flops = 2.0 * op.m * op.k * op.n * op.batch
+    return OpTime(op.name, "matmul", t_c, t_m, 0.0, flops, bytes_moved, 0.0)
+
+
+def vector_time(chip: ChipSpec, op: Op) -> OpTime:
+    t_c = op.flops / chip.vector_flops
+    t_m = op.bytes / chip.effective_mem_bw
+    return OpTime(op.name, "vector", t_c, t_m, 0.0, op.flops, op.bytes, 0.0)
+
+
+def memory_time(chip: ChipSpec, op: Op) -> OpTime:
+    t_m = op.bytes / chip.effective_mem_bw
+    return OpTime(op.name, "memory", 0.0, t_m, 0.0, 0.0, op.bytes, 0.0)
+
+
+def collective_time(chip: ChipSpec, op: Op) -> OpTime:
+    n = op.parties
+    if n <= 1:
+        return OpTime(op.name, op.kind, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    bw = chip.scaleup_gbs * 1e9
+    if op.kind == "allreduce":
+        t = 2.0 * (n - 1) / n * op.comm_bytes / bw + (n - 1) * LINK_LATENCY_S
+        wire = 2.0 * (n - 1) / n * op.comm_bytes
+    elif op.kind in ("allgather", "reducescatter", "alltoall"):
+        t = (n - 1) / n * op.comm_bytes / bw + (n - 1) * LINK_LATENCY_S
+        wire = (n - 1) / n * op.comm_bytes
+    elif op.kind == "p2p":
+        t = op.comm_bytes / bw + LINK_LATENCY_S
+        wire = op.comm_bytes
+    else:
+        raise ValueError(op.kind)
+    return OpTime(op.name, op.kind, 0.0, 0.0, t, 0.0, 0.0, wire)
+
+
+def op_time(chip: ChipSpec, op: Op) -> OpTime:
+    if op.kind == "matmul":
+        return matmul_time(chip, op)
+    if op.kind == "vector":
+        return vector_time(chip, op)
+    if op.kind == "memory":
+        return memory_time(chip, op)
+    return collective_time(chip, op)
+
+
+def run_graph(chip: ChipSpec, ops: List[Op]) -> PhaseResult:
+    times = [op_time(chip, o) for o in ops]
+    return PhaseResult(total=sum(t.total for t in times), ops=times)

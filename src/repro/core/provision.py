@@ -1,0 +1,265 @@
+"""Cluster provisioning and adaptive reallocation (paper §4, §7, Tables 4-8).
+
+Given a workload trace, a model, and latency SLOs, find the minimum-cost
+cluster design.  Designs are described by machine pools (prefill / decode /
+co-located) of 8-chip machines; cost and TDP are per-machine multiples of the
+chip-level models in ``hardware``.
+
+``provision_disagg`` performs the paper's 2-D sweep (Fig. 9): for each
+prefill-machine count near the utilization lower bound, grow the decode pool
+until SLOs are met, and keep the cheapest feasible design.  ``max_rate``
+binary-searches the highest sustainable request rate of a *fixed* cluster —
+this drives the reallocation studies (Tables 7/8).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .cluster import SLO, ModelPerf, SimResult, simulate_colocated, simulate_disaggregated
+from .hardware import ChipSpec, norm_hw_cost, norm_tdp
+from .opgraph import Parallelism
+from .trace import Request, WorkloadStats, synthesize
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """n machines of one chip type assigned to one phase."""
+
+    chip_name: str
+    perf: ModelPerf
+    n: int
+
+    @property
+    def norm_cost(self) -> float:
+        return self.n * norm_hw_cost(self.perf.chip)
+
+    @property
+    def norm_tdp(self) -> float:
+        return self.n * norm_tdp(self.perf.chip)
+
+
+@dataclass
+class Design:
+    name: str
+    scheduler: str  # "disagg" | "coloc"
+    prefill: List[PoolSpec] = field(default_factory=list)
+    decode: List[PoolSpec] = field(default_factory=list)
+    coloc: Optional[PoolSpec] = None
+
+    @property
+    def norm_cost(self) -> float:
+        pools = self.prefill + self.decode + ([self.coloc] if self.coloc else [])
+        return sum(p.norm_cost for p in pools)
+
+    @property
+    def norm_tdp(self) -> float:
+        pools = self.prefill + self.decode + ([self.coloc] if self.coloc else [])
+        return sum(p.norm_tdp for p in pools)
+
+    def describe(self) -> str:
+        if self.scheduler == "coloc":
+            return f"{self.coloc.n} {self.coloc.chip_name}"
+        p = " + ".join(f"{x.n}P:{x.chip_name}" for x in self.prefill)
+        d = " + ".join(f"{x.n}D:{x.chip_name}" for x in self.decode)
+        return f"{p} | {d}"
+
+
+def evaluate(
+    design: Design,
+    reqs: Sequence[Request],
+    ref_perf: ModelPerf,
+    duration: float,
+) -> SimResult:
+    if design.scheduler == "coloc":
+        return simulate_colocated(
+            reqs, perf=design.coloc.perf, n_machines=design.coloc.n,
+            ref_perf=ref_perf, duration=duration,
+        )
+    prefill_pool: List[ModelPerf] = []
+    for p in design.prefill:
+        prefill_pool.extend([p.perf] * p.n)
+    decode_pool: List[ModelPerf] = []
+    for p in design.decode:
+        decode_pool.extend([p.perf] * p.n)
+    return simulate_disaggregated(
+        reqs, prefill_pool=prefill_pool, decode_pool=decode_pool,
+        ref_perf=ref_perf, duration=duration,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lower bounds (utilization math, paper's "workload-driven provisioning")
+# ---------------------------------------------------------------------------
+
+
+def _prefill_lower_bound(reqs, perf: ModelPerf) -> int:
+    """Optimistic bound: batched-prefill throughput at 100% utilization."""
+    dur = max(r.t_arrival for r in reqs) + 1e-9
+    work = sum(perf.prefill_batch_time(2 * r.n_in, 2) / 2 for r in reqs)
+    return max(1, math.ceil(work / (dur * perf.replicas_per_machine)))
+
+
+def _decode_lower_bound(reqs, perf: ModelPerf) -> int:
+    """Optimistic bound: max-batch decode throughput at 100% utilization."""
+    dur = max(r.t_arrival for r in reqs) + 1e-9
+    tokens = sum(r.n_out for r in reqs)
+    avg_ctx = float(np.mean([r.n_in + r.n_out / 2 for r in reqs]))
+    b = min(256, max(1, int(perf.max_kv_tokens / max(avg_ctx * 1.1, 1.0))))
+    tput = b / perf.decode_time(b, avg_ctx)
+    return max(1, math.ceil(tokens / (dur * tput * perf.replicas_per_machine)))
+
+
+# ---------------------------------------------------------------------------
+# Provisioning sweeps
+# ---------------------------------------------------------------------------
+
+
+def provision_disagg(
+    *,
+    name: str,
+    prefill_perf: ModelPerf,
+    decode_perf: ModelPerf,
+    workload: WorkloadStats,
+    rate: float,
+    slo: SLO,
+    ref_perf: ModelPerf,
+    duration: float = 60.0,
+    seed: int = 0,
+    p_span: int = 4,
+    d_span: int = 8,
+) -> Optional[Design]:
+    """2-D sweep (paper Fig. 9): cheapest (n_prefill, n_decode) meeting SLOs."""
+    reqs = synthesize(workload, rate_rps=rate, duration_s=duration, seed=seed)
+    p_lb = _prefill_lower_bound(reqs, prefill_perf)
+    d_lb = _decode_lower_bound(reqs, decode_perf)
+    best: Optional[Design] = None
+    for n_p in range(p_lb, p_lb + p_span + 1):
+        found = False
+        for n_d in range(d_lb, d_lb + d_span + 1):
+            design = Design(
+                name, "disagg",
+                prefill=[PoolSpec(prefill_perf.chip.name, prefill_perf, n_p)],
+                decode=[PoolSpec(decode_perf.chip.name, decode_perf, n_d)],
+            )
+            if best is not None and design.norm_cost >= best.norm_cost:
+                break  # can only get more expensive along n_d
+            res = evaluate(design, reqs, ref_perf, duration)
+            if res.meets(slo):
+                if best is None or design.norm_cost < best.norm_cost:
+                    best = design
+                found = True
+                break
+        if not found and best is not None:
+            continue
+    return best
+
+
+def provision_coloc(
+    *,
+    name: str,
+    perf: ModelPerf,
+    workload: WorkloadStats,
+    rate: float,
+    slo: SLO,
+    ref_perf: ModelPerf,
+    duration: float = 60.0,
+    seed: int = 0,
+    span: int = 24,
+) -> Optional[Design]:
+    reqs = synthesize(workload, rate_rps=rate, duration_s=duration, seed=seed)
+    lb = max(_prefill_lower_bound(reqs, perf), _decode_lower_bound(reqs, perf))
+    for n in range(lb, lb + span + 1):
+        design = Design(name, "coloc", coloc=PoolSpec(perf.chip.name, perf, n))
+        if evaluate(design, reqs, ref_perf, duration).meets(slo):
+            return design
+    return None
+
+
+def max_rate(
+    design: Design,
+    *,
+    workload: WorkloadStats,
+    slo: SLO,
+    ref_perf: ModelPerf,
+    duration: float = 60.0,
+    seed: int = 0,
+    lo: float = 1.0,
+    hi: float = 300.0,
+    step: float = 10.0,
+) -> float:
+    """Highest request rate (req/s, ``step`` granularity) a fixed cluster meets."""
+
+    def ok(rate: float) -> bool:
+        reqs = synthesize(workload, rate_rps=rate, duration_s=duration, seed=seed)
+        return evaluate(design, reqs, ref_perf, duration).meets(slo)
+
+    if not ok(lo):
+        return 0.0
+    while hi - lo > step:
+        mid = (lo + hi) / 2
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid
+    return math.floor(lo / step) * step
+
+
+# ---------------------------------------------------------------------------
+# Reallocation (paper §7.2): move machines between phases, re-derive max rate
+# ---------------------------------------------------------------------------
+
+
+def reallocate(
+    *,
+    name: str,
+    prefill_pools: List[Tuple[ModelPerf, int]],
+    decode_pools: List[Tuple[ModelPerf, int]],
+) -> Design:
+    """Build a (possibly heterogeneous) disaggregated design from pool lists."""
+    return Design(
+        name,
+        "disagg",
+        prefill=[PoolSpec(p.chip.name, p, n) for p, n in prefill_pools if n > 0],
+        decode=[PoolSpec(p.chip.name, p, n) for p, n in decode_pools if n > 0],
+    )
+
+
+def best_realloc_split(
+    *,
+    name: str,
+    perf_p_prefill: ModelPerf,  # PrefillChip running prefill
+    perf_p_decode: ModelPerf,  # PrefillChip running decode
+    perf_d_prefill: ModelPerf,  # DecodeChip running prefill
+    perf_d_decode: ModelPerf,  # DecodeChip running decode
+    n_p_machines: int,
+    n_d_machines: int,
+    workload: WorkloadStats,
+    slo: SLO,
+    ref_perf: ModelPerf,
+    duration: float = 60.0,
+    seed: int = 0,
+) -> Tuple[Design, float]:
+    """Sweep how many machines of each type to flip to the other phase;
+    return the split with the highest sustainable rate (paper Fig. 10)."""
+    best_design, best_rate = None, -1.0
+    for flip_p in range(0, n_p_machines + 1, max(1, n_p_machines // 3)):
+        for flip_d in range(0, n_d_machines + 1, max(1, n_d_machines // 3)):
+            if flip_p and flip_d:
+                continue  # never flip both directions at once
+            d = reallocate(
+                name=name,
+                prefill_pools=[(perf_p_prefill, n_p_machines - flip_p), (perf_d_prefill, flip_d)],
+                decode_pools=[(perf_d_decode, n_d_machines - flip_d), (perf_p_decode, flip_p)],
+            )
+            if not d.prefill or not d.decode:
+                continue
+            r = max_rate(d, workload=workload, slo=slo, ref_perf=ref_perf,
+                         duration=duration, seed=seed)
+            if r > best_rate:
+                best_design, best_rate = d, r
+    return best_design, best_rate

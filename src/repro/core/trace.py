@@ -1,0 +1,88 @@
+"""Workload trace synthesis (paper §6.3).
+
+The paper uses Azure LLM inference traces [12] for two applications:
+
+  coding       — long prompts (median 1500 tokens), short outputs (median 13)
+  conversation — medium prompts (median 1020), longer outputs (median 129)
+
+The public dataset is not bundled offline, so we synthesize traces from
+lognormal marginals calibrated to the published medians (and the heavy right
+tails reported in the Splitwise paper), with Poisson arrivals.  The generator
+is seeded and deterministic; all benchmarks record the seed.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    t_arrival: float
+    n_in: int
+    n_out: int
+
+
+@dataclass(frozen=True)
+class WorkloadStats:
+    name: str
+    median_in: int
+    sigma_in: float
+    median_out: int
+    sigma_out: float
+    max_in: int = 16_384
+    max_out: int = 2_048
+
+
+# sigma calibrated so mean/median ratios match the Azure trace moments
+# reported by Splitwise (coding: mean_in/med_in ~1.3, mean_out/med_out ~2.4;
+# conversation: mean_in/med_in ~1.15, mean_out/med_out ~1.6).
+CODING = WorkloadStats("coding", median_in=1500, sigma_in=0.70, median_out=13, sigma_out=1.30)
+CONVERSATION = WorkloadStats(
+    "conversation", median_in=1020, sigma_in=0.55, median_out=129, sigma_out=1.0
+)
+
+WORKLOADS = {"coding": CODING, "conversation": CONVERSATION}
+
+
+def synthesize(
+    workload: WorkloadStats,
+    *,
+    rate_rps: float,
+    duration_s: float,
+    seed: int = 0,
+) -> List[Request]:
+    """Poisson arrivals at ``rate_rps`` with lognormal length marginals."""
+    rng = np.random.default_rng(seed)
+    n_est = int(rate_rps * duration_s * 1.2) + 16
+    gaps = rng.exponential(1.0 / rate_rps, size=n_est)
+    t = np.cumsum(gaps)
+    t = t[t < duration_s]
+    n = len(t)
+    n_in = np.clip(
+        rng.lognormal(math.log(workload.median_in), workload.sigma_in, size=n),
+        16, workload.max_in,
+    ).astype(int)
+    n_out = np.clip(
+        rng.lognormal(math.log(workload.median_out), workload.sigma_out, size=n),
+        1, workload.max_out,
+    ).astype(int)
+    return [Request(i, float(t[i]), int(n_in[i]), int(n_out[i])) for i in range(n)]
+
+
+def summarize(reqs: List[Request]) -> dict:
+    n_in = np.array([r.n_in for r in reqs])
+    n_out = np.array([r.n_out for r in reqs])
+    return {
+        "n": len(reqs),
+        "median_in": float(np.median(n_in)),
+        "median_out": float(np.median(n_out)),
+        "p90_in": float(np.percentile(n_in, 90)),
+        "p90_out": float(np.percentile(n_out, 90)),
+        "total_in_tokens": int(n_in.sum()),
+        "total_out_tokens": int(n_out.sum()),
+    }

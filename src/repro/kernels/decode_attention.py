@@ -1,0 +1,126 @@
+"""Decode attention (one query token over a long KV cache) as a Pallas kernel.
+
+This is the "Decode Chip" counterpart of the prefill kernel: decode attention
+is memory-bandwidth-bound (every KV byte is read once, arithmetic intensity
+~O(1)), so the kernel is a *split-K streaming* design — small compute tiles,
+KV read exactly once HBM->VMEM, online-softmax partials merged across the
+sequential split dimension.  The MXU tiles are deliberately small (the G x bk
+score matmul), mirroring the paper's 16x16-systolic-array Decode Chip: a
+bigger tile would not go faster, the kernel is bandwidth-limited.
+
+Layouts: q [B, KV, G, d] (grouped heads contiguous), caches [B, KV, L, d].
+``lengths`` [B] rides in scalar-prefetch SMEM and masks the valid cache prefix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 1024
+NEG_INF = -1e30
+
+
+def _dec_kernel(
+    lengths_ref,  # [B] int32 (scalar prefetch, SMEM)
+    q_ref,  # [1, 1, G, d]
+    k_ref,  # [1, 1, bs, d]
+    v_ref,  # [1, 1, bs, d]
+    o_ref,  # [1, 1, G, d]
+    m_scr, l_scr, acc_scr,  # [G, 1], [G, 1], [G, d] f32
+    *,
+    scale: float,
+    block_s: int,
+    ns: int,
+):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    # Skip splits entirely past the valid prefix (bandwidth saver: the DMA for
+    # a skipped block is still issued by the pipeline, but no FLOPs happen —
+    # on real HW one would bound the grid by max length instead).
+    @pl.when(si * block_s < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, bs]
+        k_pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(
+    q, k_cache, v_cache, lengths,
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+):
+    """q [B,H,d]; k_cache/v_cache [B,L,KV,d]; lengths [B] -> [B,H,d]."""
+    B, H, d = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = d ** -0.5
+
+    bs = min(block_s, L)
+    pad_s = (-L) % bs
+    qt = q.reshape(B, KV, G, d)
+    kt = jnp.moveaxis(k_cache, 2, 1)  # [B, KV, L, d]
+    vt = jnp.moveaxis(v_cache, 2, 1)
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    ns = (L + pad_s) // bs
+
+    kernel = functools.partial(_dec_kernel, scale=scale, block_s=bs, ns=ns)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b, kv, si, *_: (b, kv, si, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b, kv, si, *_: (b, kv, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qt, kt, vt)
+    return out.reshape(B, H, d)

@@ -1,0 +1,165 @@
+"""Prefill flash attention as a Pallas TPU kernel.
+
+This is the repo's instantiation of the paper's "Prefill Chip" argument at the
+kernel level: prefill is compute-bound, so the kernel is built around *large*
+MXU-aligned blocks (default 512x512 q/k tiles) that keep the systolic array
+busy and amortize VMEM traffic, exactly the trade the paper makes by doubling
+the systolic array (32x32) on the Prefill Chip.
+
+Layout: q/k/v are passed [B, H, S, d] (head-major) so every BlockSpec tile is
+contiguous in (seq, head_dim).  GQA is handled in the index map (query head h
+reads kv head h // G).  Online softmax state (m, l, acc) lives in VMEM scratch
+and is carried across the sequential k-block grid dimension; causal blocks
+entirely above the diagonal are skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref,  # [1, 1, bq, d], [1, 1, bk, d], [1, 1, bk, d]
+    o_ref,  # [1, 1, bq, d]
+    m_scr, l_scr, acc_scr,  # [bq, 1], [bq, 1], [bq, d] f32 VMEM scratch
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    nk: int,
+    seq_off: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal: skip k blocks entirely above the diagonal.
+    q_last = qi * block_q + (block_q - 1) + seq_off
+    run = (ki * block_k <= q_last) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)  # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            ) + seq_off
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)  # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q, k, v,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """q [B,Sq,H,d]; k,v [B,Skv,KV,d] -> [B,Sq,H,d] (same semantics as ref)."""
+    B, Sq, H, d = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else d ** -0.5
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    # Pad sequence lengths up to block multiples (k-padding is masked out by
+    # the causal/validity mask below via NEG_INF on out-of-range positions).
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+
+    qt = jnp.moveaxis(q, 2, 1)  # [B, H, Sq, d]
+    kt = jnp.moveaxis(k, 2, 1)  # [B, KV, Skv, d]
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # pad keys with a value that the causal mask excludes: use position
+        # masking via seq_off (padding sits at positions >= Skv which only
+        # unmasked when q_pos >= k_pos; padded q rows are sliced away).
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+    if not causal and pad_k:
+        raise NotImplementedError("non-causal with padded kv not needed")
+
+    nq = Sq_p // bq
+    nk = Skv_p // bk
+    seq_off = Skv - Sq  # query i attends to keys <= i + seq_off
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        nk=nk,
+        seq_off=seq_off,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)  # [B, Sq, H, d]

@@ -1,0 +1,73 @@
+"""jit'd public wrappers for the kernels.
+
+``impl`` selects between the Pallas TPU kernels and the pure-jnp references:
+  - "auto": Pallas on TPU backends, reference elsewhere (CPU dry-run/tests)
+  - "pallas": force Pallas (compiled)
+  - "interpret": Pallas in interpret mode (CPU-executable kernel body)
+  - "ref": pure-jnp oracle
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+_IMPL = "auto"
+
+
+def set_impl(impl: str):
+    global _IMPL
+    assert impl in ("auto", "pallas", "interpret", "ref")
+    _IMPL = impl
+
+
+def _use_pallas() -> bool:
+    if _IMPL == "ref":
+        return False
+    if _IMPL in ("pallas", "interpret"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return _IMPL == "interpret" or (_IMPL == "auto" and jax.default_backend() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None):
+    if _use_pallas():
+        from .flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale, interpret=_interpret())
+    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, lengths):
+    if _use_pallas():
+        from .decode_attention import decode_attention_pallas
+
+        return decode_attention_pallas(q, k_cache, v_cache, lengths, interpret=_interpret())
+    return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, initial_state=None):
+    """Dispatched inside model code (already under jit)."""
+    if _use_pallas() and _IMPL in ("pallas", "interpret"):
+        from .ssd_scan import ssd_pallas
+
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk, initial_state=initial_state,
+                          interpret=_interpret())
+    if _use_pallas():  # auto + TPU
+        from .ssd_scan import ssd_pallas
+
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk, initial_state=initial_state,
+                          interpret=False)
+    return _ref.ssd_ref(x, dt, A, B, C, chunk=chunk, initial_state=initial_state)

@@ -1,0 +1,159 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are also the XLA-path implementations used on CPU and in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle (exact softmax attention)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: Optional[float] = None):
+    """q [B,Sq,H,d]; k,v [B,Skv,KV,d] -> [B,Sq,H,d].  GQA by head grouping."""
+    B, Sq, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(B, Sq, KV, G, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Skv)[None, :] <= (jnp.arange(Sq)[:, None] + (Skv - Sq))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, d)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention oracle (single query over a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q [B,H,d]; k_cache/v_cache [B,L,KV,d]; lengths [B] (valid entries).
+
+    Returns [B,H,d]."""
+    B, H, d = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    L = k_cache.shape[1]
+    qg = q.reshape(B, KV, G, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s * (d ** -0.5)
+    mask = jnp.arange(L)[None, :] < lengths[:, None]  # [B, L]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, H, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD oracle (chunked scan, f32 internals, memory-bounded)
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(
+    x,
+    dt,
+    A,
+    B,
+    C,
+    *,
+    chunk: int = 128,
+    initial_state=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD (state-space duality) forward.
+
+    x  [b, L, h, p]   head inputs
+    dt [b, L, h]      softplus'd timesteps (float32)
+    A  [h]            negative decay rates (float32)
+    B  [b, L, g, n]   input projections (g groups, h % g == 0)
+    C  [b, L, g, n]   output projections
+
+    Returns (y [b, L, h, p], final_state [b, h, p, n]).
+    """
+    b, L, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    r = h // g
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    Lp = L + pad
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = zf(x), zf(dt), zf(B), zf(C)
+    nc = Lp // Q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, g, r, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, g, r)
+    Bf = B.astype(jnp.float32).reshape(b, nc, Q, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, Q, g, n)
+    Af = A.astype(jnp.float32).reshape(g, r)
+
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    state0 = (
+        jnp.zeros((b, g, r, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32).reshape(b, g, r, p, n)
+    )
+
+    def body(state, inp):
+        xq, dtq, Bq, Cq = inp  # [b,Q,g,r,p], [b,Q,g,r], [b,Q,g,n], [b,Q,g,n]
+        dA = dtq * Af[None, None]  # [b,Q,g,r]
+        cs = jnp.cumsum(dA, axis=1)
+        # intra-chunk (quadratic within chunk)
+        diff = cs[:, :, None] - cs[:, None, :]  # [b,i,j,g,r]
+        Lmat = jnp.where(tril[None, :, :, None, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bign,bjgn->bijg", Cq, Bq)
+        M = CB[..., None] * Lmat * dtq[:, None]  # [b,i,j,g,r]
+        Yd = jnp.einsum("bijgr,bjgrp->bigrp", M, xq)
+        # inbound-state contribution
+        Yoff = jnp.einsum("bign,bgrpn,bigr->bigrp", Cq, state, jnp.exp(cs))
+        # state update
+        decay_states = jnp.exp(cs[:, -1:] - cs)  # [b,Q,g,r]
+        S_new = jnp.einsum("bjgn,bjgr,bjgrp->bgrpn", Bq, decay_states * dtq, xq)
+        state = state * jnp.exp(cs[:, -1])[..., None, None] + S_new
+        return state, Yd + Yoff
+
+    inputs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (xf, dtf, Bf, Cf))
+    final, ys = jax.lax.scan(body, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, Lp, h, p)[:, :L]
+    return y.astype(x.dtype), final.reshape(b, h, p, n)
+
+
+def ssd_sequential_ref(x, dt, A, B, C, *, initial_state=None):
+    """O(L)-step sequential oracle (ground truth for the chunked versions)."""
+    b, L, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    r = h // g
+    state = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    Bh = jnp.repeat(B.astype(jnp.float32), r, axis=2)  # [b,L,h,n]
+    Ch = jnp.repeat(C.astype(jnp.float32), r, axis=2)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def body(state, inp):
+        xt, dtt, Bt, Ct = inp  # [b,h,p], [b,h], [b,h,n], [b,h,n]
+        decay = jnp.exp(dtt * Af[None])
+        state = state * decay[..., None, None] + (
+            (dtt[..., None] * xt.astype(jnp.float32))[..., None] * Bt[:, :, None, :]
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    inputs = jax.tree.map(
+        lambda a: jnp.moveaxis(a, 1, 0), (x.astype(jnp.float32), dtf, Bh, Ch)
+    )
+    final, ys = jax.lax.scan(body, state, inputs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

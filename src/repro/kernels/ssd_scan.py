@@ -1,0 +1,149 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The SSD trick: split the sequence into chunks of Q tokens; within a chunk the
+recurrence is computed as a *quadratic* (masked) matmul that maps onto the MXU,
+while the O(L) part is a per-chunk rank-1 state update carried across chunks.
+The per-(batch, head) running state [head_dim, d_state] lives in VMEM scratch
+and is carried across the sequential chunk grid dimension — the Pallas
+equivalent of the paper's observation that long-context decode wants a small,
+bandwidth-friendly working set rather than a big systolic array.
+
+Layouts (wrapper transposes): x [b, h, L, p]; dt [b, h, L]; B/C [b, g, L, n];
+A [h] rides in scalar-prefetch SMEM.  y is [b, h, L, p]; final state
+[b, h, p, n] is written by the last chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    A_ref,  # [h] f32 (scalar prefetch, SMEM)
+    x_ref,  # [1, 1, Q, p]
+    dt_ref,  # [1, 1, Q]
+    b_ref,  # [1, 1, Q, n]
+    c_ref,  # [1, 1, Q, n]
+    s0_ref,  # [1, 1, p, n] initial state
+    y_ref,  # [1, 1, Q, p]
+    sf_ref,  # [1, 1, p, n] final state
+    state_scr,  # [p, n] f32
+    *,
+    chunk: int,
+    nc: int,
+):
+    h = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    xq = x_ref[0, 0].astype(jnp.float32)  # [Q, p]
+    dtq = dt_ref[0, 0].astype(jnp.float32)  # [Q]
+    Bq = b_ref[0, 0].astype(jnp.float32)  # [Q, n]
+    Cq = c_ref[0, 0].astype(jnp.float32)  # [Q, n]
+    A = A_ref[h]  # scalar (negative decay rate)
+
+    dA = dtq * A  # [Q]
+    cs = jnp.cumsum(dA)  # [Q]
+    # ---- intra-chunk quadratic part (MXU) ----
+    diff = cs[:, None] - cs[None, :]  # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(jj <= ii, jnp.exp(diff), 0.0)  # causal decay mask
+    CB = jax.lax.dot_general(
+        Cq, Bq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    M = CB * Lmat * dtq[None, :]
+    Yd = jax.lax.dot_general(
+        M, xq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, p]
+    # ---- inbound state contribution ----
+    state = state_scr[...]  # [p, n]
+    Yoff = jax.lax.dot_general(
+        Cq, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cs)[:, None]  # [Q, p]
+    y_ref[0, 0] = (Yd + Yoff).astype(y_ref.dtype)
+    # ---- state update (rank-Q correction, one matmul) ----
+    decay = jnp.exp(cs[chunk - 1] - cs) * dtq  # [Q]
+    S_new = jax.lax.dot_general(
+        xq * decay[:, None], Bq, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [p, n]
+    state_scr[...] = state * jnp.exp(cs[chunk - 1]) + S_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sf_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(
+    x, dt, A, B, C,
+    *,
+    chunk: int = 128,
+    initial_state=None,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Same contract as ``ref.ssd_ref``.
+
+    x [b,L,h,p]; dt [b,L,h]; A [h]; B/C [b,L,g,n] -> (y [b,L,h,p], state [b,h,p,n]).
+    """
+    b, L, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    r = h // g
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    Lp = L + pad
+
+    xt = jnp.moveaxis(x, 1, 2)  # [b, h, L, p]
+    dtt = jnp.moveaxis(dt, 1, 2)  # [b, h, L]
+    Bt = jnp.moveaxis(B, 1, 2)  # [b, g, L, n]
+    Ct = jnp.moveaxis(C, 1, 2)
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, pad)))  # dt=0 -> no-op steps
+        Bt = jnp.pad(Bt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = Lp // Q
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q, nc=nc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, p), lambda bi, hi, ci, *_: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, Q), lambda bi, hi, ci, *_: (bi, hi, ci)),
+            pl.BlockSpec((1, 1, Q, n), lambda bi, hi, ci, *_, r=r: (bi, hi // r, ci, 0)),
+            pl.BlockSpec((1, 1, Q, n), lambda bi, hi, ci, *_, r=r: (bi, hi // r, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci, *_: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, p), lambda bi, hi, ci, *_: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci, *_: (bi, hi, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+    )
+    y, sf = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, Lp, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A.astype(jnp.float32), xt, dtt, Bt, Ct, s0)
+    if pad:
+        y = y[:, :, :L]
+    return jnp.moveaxis(y, 1, 2), sf  # [b, L, h, p], [b, h, p, n]

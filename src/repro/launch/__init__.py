@@ -1,0 +1,1 @@
+"""Launch: meshes, distributed step builders, dry-run, roofline, drivers."""

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost analysis + scan-corrected HLO stats.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  ... --arch qwen3-moe-235b-a22b --shape train_4k --mesh pod   # one cell
+  ... --list                                                   # show the matrix
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+report (launch/roofline.py, benchmarks/roofline.py) reads these.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, SHAPES, shape_applicable
+from repro.launch import hloanalysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+MESHES = {"single": dict(multi_pod=False), "pod": dict(multi_pod=True)}
+
+
+def cells(archs=None, shapes=None, assigned_only=True):
+    pool = ASSIGNED_ARCHS if assigned_only else ARCHS
+    for a, cfg in pool.items():
+        if archs and a not in archs:
+            continue
+        for s, shape in SHAPES.items():
+            if shapes and s not in shapes:
+                continue
+            ok, why = shape_applicable(cfg, shape)
+            yield a, s, ok, why
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             sharding: str = "baseline") -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(**MESHES[mesh_name])
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": int(n_chips),
+        "kind": shape.kind,
+        "sharding": sharding,
+        "status": "pending",
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            step, args = build_step(cfg, shape, mesh, sharding=sharding)
+            lowered = step.lower(*args)
+            rec["t_lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["t_compile_s"] = round(time.time() - t1, 1)
+
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            rec["cost"] = {
+                k: float(v)
+                for k, v in (cost or {}).items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                )
+            }
+            hlo = compiled.as_text()
+            stats = hloanalysis.analyze(hlo)
+            rec["hlo"] = {
+                "flops_scan_corrected": stats.flops,
+                "hbm_bytes": stats.hbm_bytes,
+                "collective_bytes": dict(stats.collective_bytes),
+                "collective_counts": dict(stats.collective_counts),
+                "while_trip_counts": stats.while_trip_counts,
+                "top_collectives": dict(sorted(
+                    stats.collective_bytes_by_meta.items(), key=lambda kv: -kv[1]
+                )[:8]),
+                "top_traffic": dict(sorted(
+                    stats.hbm_bytes_by_meta.items(), key=lambda kv: -kv[1]
+                )[:8]),
+            }
+            import gzip
+
+            os.makedirs(out_dir, exist_ok=True)
+            sfx = "" if sharding == "baseline" else f".{sharding}"
+            with gzip.open(
+                os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{sfx}.hlo.gz"),
+                "wt",
+            ) as zf:
+                zf.write(hlo)
+            # scan correction factor for cost_analysis numbers
+            trips = stats.while_trip_counts
+            rec["scan_factor"] = max(trips.values()) if trips else 1
+            rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["t_total_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if sharding == "baseline" else f".{sharding}"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None)
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--mesh", nargs="*", default=["single", "pod"], choices=["single", "pod"])
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--sharding", default="baseline", choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()} "
+        "(XLA_FLAGS must be set before jax init)"
+    )
+
+    matrix = list(cells(args.arch, args.shape))
+    if args.list:
+        for a, s, ok, why in matrix:
+            print(f"{a:26s} {s:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    n_ok = n_err = n_skip = 0
+    for a, s, ok, why in matrix:
+        if not ok:
+            print(f"SKIP  {a} x {s}: {why}")
+            n_skip += 1
+            continue
+        sfx = "" if args.sharding == "baseline" else f".{args.sharding}"
+        for m in args.mesh:
+            path = os.path.join(args.out, f"{a}__{s}__{m}{sfx}.json")
+            if args.skip_done and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"DONE  {a} x {s} x {m} (cached)")
+                        n_ok += 1
+                        continue
+            rec = run_cell(a, s, m, args.out, sharding=args.sharding)
+            tag = "OK  " if rec["status"] == "ok" else "ERR "
+            extra = (
+                f"lower {rec.get('t_lower_s')}s compile {rec.get('t_compile_s')}s"
+                if rec["status"] == "ok"
+                else rec.get("error", "")[:120]
+            )
+            print(f"{tag}  {a} x {s} x {m}  [{extra}]", flush=True)
+            n_ok += rec["status"] == "ok"
+            n_err += rec["status"] != "ok"
+    print(f"\ndry-run: {n_ok} ok, {n_err} errors, {n_skip} skipped cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

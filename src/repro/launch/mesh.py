@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Single pod:  (16, 16)  axes ("data", "model")  = 256 chips
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+
+SPAD mapping: in the disaggregated deployment the "pod" axis separates the
+prefill pod from the decode pod; ``make_phase_meshes`` carves one mesh per
+phase out of the device grid so each phase gets its own (data, model) layout
+(the software form of the paper's Prefill/Decode machine pools).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def make_phase_meshes(
+    *,
+    prefill_shape: Tuple[int, int] = (16, 16),
+    decode_shape: Tuple[int, int] = (16, 16),
+):
+    """Two disjoint (data, model) meshes: a prefill pod and a decode pod.
+
+    Requires prefill+decode device counts <= available devices (the 512-way
+    dry-run grid holds both pods)."""
+    devs = np.array(jax.devices())
+    n_p = int(np.prod(prefill_shape))
+    n_d = int(np.prod(decode_shape))
+    assert n_p + n_d <= devs.size, (n_p, n_d, devs.size)
+    mesh_p = Mesh(devs[:n_p].reshape(prefill_shape), ("data", "model"))
+    mesh_d = Mesh(devs[n_p : n_p + n_d].reshape(decode_shape), ("data", "model"))
+    return mesh_p, mesh_d

@@ -1,0 +1,150 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (written by launch/dryrun.py) and derives, per
+(arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips x 819 GB/s)
+  collective term = collective_bytes / (chips x 50 GB/s/link)
+
+Per-device semantics: the compiled module is the per-device SPMD program, so
+cost_analysis flops/bytes and the parsed collective bytes are already
+per-device — the terms divide by per-chip peaks directly (calibrated in
+tests/test_hloanalysis.py against an analytic matmul).
+
+FLOPs: primary = while-aware parsed dot FLOPs (exact on the calibration
+case); we also report cost_analysis x scan_factor.  Bytes: cost_analysis
+'bytes accessed' x scan_factor (upper bound: assumes all traffic is
+in-loop, which holds to first order for >=24-layer stacks).
+
+MODEL_FLOPS = 6·N_active·D for train steps, 2·N_active·D for serve steps
+(D = tokens processed globally); the ratio MODEL_FLOPS / HLO_FLOPs_total
+exposes remat/replication waste (<1x means the compiled program does
+redundant or reshard-induced work).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from ..configs import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+@dataclass
+class CellRoofline:
+    sharding: str
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    kind: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    hlo_flops_dev: float
+    hlo_bytes_dev: float
+    coll_bytes_dev: float
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs_dev * chips)
+    bound_s: float  # max of the three terms = roofline-optimal step time
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:26s} {self.shape:12s} {self.mesh:6s} "
+            f"{self.t_compute*1e3:9.3f} {self.t_memory*1e3:9.3f} {self.t_collective*1e3:11.3f} "
+            f"{self.dominant:10s} {self.useful_ratio:7.3f}"
+        )
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    total, active = cfg.param_count()
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * active * D
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * active * D
+    D = shape.global_batch  # decode: one token per request
+    return 2.0 * active * D
+
+
+def load_cell(path: str) -> Optional[CellRoofline]:
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_chips"]
+    scan = rec.get("scan_factor", 1)
+    cost_flops = rec["cost"].get("flops", 0.0)
+    parsed_flops = rec["hlo"].get("flops_scan_corrected", 0.0)
+    flops_dev = max(parsed_flops, cost_flops)  # parsed is scan-corrected
+    # primary: materialized-buffer traffic from the while-aware HLO walk;
+    # fallback: cost_analysis bytes x scan factor (known over-count for
+    # dynamic-slice-into-stacked-cache patterns)
+    bytes_dev = rec["hlo"].get("hbm_bytes") or rec["cost"].get("bytes accessed", 0.0) * scan
+    coll_dev = sum(rec["hlo"].get("collective_bytes", {}).values())
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    return CellRoofline(
+        sharding=rec.get("sharding", "baseline"),
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        n_chips=n,
+        kind=rec["kind"],
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        dominant=dom,
+        hlo_flops_dev=flops_dev,
+        hlo_bytes_dev=bytes_dev,
+        coll_bytes_dev=coll_dev,
+        model_flops=mf,
+        useful_ratio=mf / max(flops_dev * n, 1.0),
+        bound_s=max(t_c, t_m, t_x),
+    )
+
+
+def load_all(results_dir: Optional[str] = None, mesh: Optional[str] = "single",
+             sharding: str = "baseline") -> List[CellRoofline]:
+    d = os.path.abspath(results_dir or RESULTS_DIR)
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        c = load_cell(p)
+        if c and (mesh is None or c.mesh == mesh) and c.sharding == sharding:
+            out.append(c)
+    return out
+
+
+def report(results_dir: Optional[str] = None, mesh: str = "single",
+           sharding: str = "baseline") -> str:
+    cells = load_all(results_dir, mesh, sharding)
+    hdr = (
+        f"{'arch':26s} {'shape':12s} {'mesh':6s} "
+        f"{'comp(ms)':>9s} {'mem(ms)':>9s} {'coll(ms)':>11s} {'dominant':10s} {'useful':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    lines += [c.row() for c in cells]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(report(mesh=mesh))

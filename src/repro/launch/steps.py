@@ -1,0 +1,221 @@
+"""Distributed step builders: jit + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` produces weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the step the shape exercises (train_step for
+``train_*``, prefill_step for ``prefill_*``, decode_step a.k.a. serve_step
+for ``decode_*`` / ``long_*``) — no device allocation, dry-run-safe.
+
+``build_step(cfg, shape, mesh)`` returns (jitted_fn, example_inputs) with
+in/out shardings resolved from the logical-axis rules in
+``sharding.partitioning``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, pad_heads_for_tp, shape_applicable
+from ..models import model as M
+from ..sharding.partitioning import (
+    DEFAULT_RULES,
+    OPT_DECODE_RULES,
+    OPT_PREFILL_RULES,
+    resolve_spec,
+    rules_profile,
+    spec_tree,
+)
+from ..training.optimizer import AdamW, adamw_for
+
+_AXES_LEAF = lambda x: isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+
+def _data_size(mesh: Mesh) -> int:
+    s = dict(mesh.shape)
+    return s.get("pod", 1) * s.get("data", 1)
+
+
+def _shardings_like(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, resolve_spec(tuple(a), tuple(s.shape), mesh, rules)),
+        axes_tree,
+        shape_tree,
+        is_leaf=_AXES_LEAF,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_specs(cfg: ModelConfig, opt: AdamW):
+    p = params_specs(cfg)
+    return jax.eval_shape(opt.init, p)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of this (arch, shape)."""
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name} not applicable: {why}")
+    B, S = shape.global_batch, shape.seq_len
+    tok_dt = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend != "none":
+            batch = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+        else:
+            batch = jax.ShapeDtypeStruct((B, S), tok_dt)
+        return {"batch": batch, "labels": jax.ShapeDtypeStruct((B, S), tok_dt)}
+    if shape.kind == "prefill":
+        if cfg.frontend != "none":
+            return {"batch": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)}
+        return {"batch": jax.ShapeDtypeStruct((B, S), tok_dt)}
+    # decode: one new token against a cache of length >= S+1, rounded up to
+    # a 512 multiple so the sequence axis shards cleanly (serving allocates
+    # round cache slabs anyway)
+    L = -(-(S + 1) // 512) * 512
+    return {
+        "tok": jax.ShapeDtypeStruct((B,), tok_dt),
+        "caches": M.init_cache_specs(cfg, B, L),
+        "pos": jax.ShapeDtypeStruct((B,), tok_dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, B: int, S: int, *, remat: bool = True,
+                    total_steps: int = 10_000, rules=None):
+    """(params, opt_state, batch, labels) -> (params, opt_state, metrics)."""
+    opt = adamw_for(total_steps)
+    n_groups = _data_size(mesh)
+
+    def train_step(params, opt_state, batch, labels):
+        with rules_profile(rules or DEFAULT_RULES):
+            def loss_fn(p):
+                return M.train_loss(p, batch, labels, cfg, n_groups=n_groups, remat=remat)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            new_params, new_opt_state, opt_metrics = opt.update(grads, opt_state, params)
+            return new_params, new_opt_state, {**metrics, **opt_metrics, "loss": loss}
+
+    p_specs = params_specs(cfg)
+    p_shard = _shardings_like(M.param_axes(cfg), p_specs, mesh, rules)
+    # m/v mirror params; step scalar replicated
+    from ..training.optimizer import AdamWState
+
+    o_shard = AdamWState(step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+    tok_shard = NamedSharding(mesh, resolve_spec(("batch", None), (B, S), mesh))
+    emb_shard = NamedSharding(mesh, resolve_spec(("batch", None, None), (B, S, cfg.d_model), mesh))
+    batch_shard = emb_shard if cfg.frontend != "none" else tok_shard
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, batch_shard, tok_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, opt
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, B: int, S: int, rules=None):
+    """(params, batch) -> (logits, caches).  Encoder-only: (params, batch) -> logits."""
+    n_groups = _data_size(mesh)
+
+    if cfg.encoder_only:
+
+        def prefill_step(params, batch):
+            with rules_profile(rules or DEFAULT_RULES):
+                logits, aux = M.forward_train(params, batch, cfg, n_groups=n_groups)
+                return logits
+
+    else:
+
+        def prefill_step(params, batch):
+            with rules_profile(rules or DEFAULT_RULES):
+                logits, caches, _ = M.prefill(params, batch, cfg, n_groups=n_groups)
+                return logits, caches
+
+    p_specs = params_specs(cfg)
+    p_shard = _shardings_like(M.param_axes(cfg), p_specs, mesh, rules)
+    if cfg.frontend != "none":
+        batch_shard = NamedSharding(mesh, resolve_spec(("batch", None, None), (B, S, cfg.d_model), mesh))
+    else:
+        batch_shard = NamedSharding(mesh, resolve_spec(("batch", None), (B, S), mesh))
+    return jax.jit(prefill_step, in_shardings=(p_shard, batch_shard))
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, B: int, L: int, rules=None,
+                     weight_rules=None):
+    """serve_step: (params, tok, caches, pos) -> (logits, new_caches)."""
+    n_groups = _data_size(mesh)
+
+    def decode_step(params, tok, caches, pos):
+        with rules_profile(rules or DEFAULT_RULES):
+            return M.decode_step(params, tok, caches, pos, cfg, n_groups=n_groups)
+
+    p_specs = params_specs(cfg)
+    # weights keep TP sharding even in the split-K decode profile — only the
+    # activation/cache constraints change
+    p_shard = _shardings_like(M.param_axes(cfg), p_specs, mesh, weight_rules or rules)
+    cache_specs = M.init_cache_specs(cfg, B, L)
+    cache_shard = _shardings_like(M.cache_axes(cfg), cache_specs, mesh, rules)
+    vec_shard = NamedSharding(mesh, resolve_spec(("batch",), (B,), mesh, rules))
+    logits_shard = NamedSharding(
+        mesh, resolve_spec(("batch", "vocab"), (B, cfg.vocab_size), mesh, rules)
+    )
+    return jax.jit(
+        decode_step,
+        in_shardings=(p_shard, vec_shard, cache_shard, vec_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(2,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One entry point for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *, remat: bool = True,
+               sharding: str = "baseline"):
+    """Returns (jitted step, args of ShapeDtypeStructs to lower with).
+
+    ``sharding="optimized"`` activates the beyond-paper profile (§Perf):
+    TP head padding, no head_dim fallback, hoisted attention resharding,
+    split-K (sequence-sharded-KV) decode.
+    """
+    assert sharding in ("baseline", "optimized")
+    opt_mode = sharding == "optimized"
+    if opt_mode:
+        tp = dict(mesh.shape).get("model", 1)
+        cfg = pad_heads_for_tp(cfg, tp)
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        rules = OPT_PREFILL_RULES if opt_mode else None
+        step, opt = make_train_step(cfg, mesh, shape.global_batch, shape.seq_len,
+                                    remat=remat, rules=rules)
+        p = params_specs(cfg)
+        o = opt_specs(cfg, opt)
+        return step, (p, o, specs["batch"], specs["labels"])
+    if shape.kind == "prefill":
+        rules = OPT_PREFILL_RULES if opt_mode else None
+        step = make_prefill_step(cfg, mesh, shape.global_batch, shape.seq_len, rules=rules)
+        return step, (params_specs(cfg), specs["batch"])
+    rules = OPT_DECODE_RULES if opt_mode else None
+    wrules = OPT_PREFILL_RULES if opt_mode else None
+    L = -(-(shape.seq_len + 1) // 512) * 512
+    step = make_decode_step(cfg, mesh, shape.global_batch, L,
+                            rules=rules, weight_rules=wrules)
+    return step, (params_specs(cfg), specs["tok"], specs["caches"], specs["pos"])

@@ -1,0 +1,469 @@
+"""Attention: GQA/MHA and MLA (DeepSeek/MiniCPM), RoPE/ALiBi, KV caches.
+
+XLA-path implementations (pure jnp) used for CPU execution, tests and the
+dry-run; on real TPU hardware the hot paths are replaced by the Pallas kernels
+in ``repro.kernels`` (same math, validated against each other).
+
+Prefill attention is q-chunked (flash-style streaming over query blocks) so
+that 32k-token prefill never materializes an O(S^2) score tensor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.partitioning import constrain
+from .layers import _normal, pdt
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions, d: int, theta: float):
+    """positions [S] (int) -> cos, sin [S, d/2] float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, S, H, d]; cos/sin [S, d/2] (half-rotation, llama-style)."""
+    d2 = x.shape[-1] // 2
+    x1 = x[..., :d2].astype(jnp.float32)
+    x2 = x[..., d2:].astype(jnp.float32)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+def apply_rope_vec(x, cos, sin):
+    """x [B, 1, H, d]; cos/sin [B, d/2] (per-request decode positions)."""
+    d2 = x.shape[-1] // 2
+    x1 = x[..., :d2].astype(jnp.float32)
+    x2 = x[..., d2:].astype(jnp.float32)
+    c = cos[:, None, None, :]
+    s = sin[:, None, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+def _norm_pos(pos, B: int):
+    """Normalize decode position to ([B] vector, is_scalar flag)."""
+    pos = jnp.asarray(pos)
+    scalar = pos.ndim == 0
+    return (jnp.broadcast_to(pos, (B,)), scalar)
+
+
+def _cache_write(cache_arr, new, pos, scalar: bool):
+    """Write one token per batch row at position(s) ``pos``.
+
+    Formulated as an elementwise masked select rather than a scatter/DUS:
+    under SPMD a scatter along a sharded sequence axis lowers to scatter
+    routing (collective-permutes + full-cache rematerialization), whereas a
+    select is shard-local by construction for ANY cache sharding."""
+    L = cache_arr.shape[1]
+    mask = jnp.arange(L)[None, :] == pos[:, None]  # [B, L]
+    mask = mask.reshape(mask.shape + (1,) * (cache_arr.ndim - 2))
+    return jnp.where(mask, new.astype(cache_arr.dtype), cache_arr)
+
+
+def alibi_slopes(n_heads: int):
+    """Standard ALiBi slopes for any head count (BLOOM uses 112 heads)."""
+
+    def pow2_slopes(n):
+        start = 2.0 ** (-(2.0 ** -(math.log2(n) - 3)))
+        return [start * (start ** i) for i in range(n)]
+
+    if math.log2(n_heads).is_integer():
+        s = pow2_slopes(n_heads)
+    else:
+        p = 2 ** math.floor(math.log2(n_heads))
+        s = pow2_slopes(p)
+        extra = pow2_slopes(2 * p)[0::2][: n_heads - p]
+        s = s + extra
+    return jnp.asarray(s, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores (XLA path)
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, kv_len=None, slopes=None, kv_heads=1, groups=1):
+    """Additive f32 bias [KV, G, q, k] (broadcastable) from mask + alibi."""
+    valid = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if kv_len is not None:
+        valid &= k_pos[None, :] < kv_len
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, None]
+    if slopes is not None:
+        dist = (k_pos[None, :] - q_pos[:, None]).astype(jnp.float32)
+        ab = slopes.reshape(kv_heads, groups)[:, :, None, None] * dist[None, None]
+        ab = jnp.where(valid[None, None], ab, 0.0)
+        bias = bias + ab
+    return bias
+
+
+def attn_core(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    q_positions,
+    k_positions,
+    kv_len=None,
+    slopes=None,
+    q_chunk: Optional[int] = None,
+    scale: Optional[float] = None,
+):
+    """q [B,Sq,H,dq]; k [B,Skv,KV,dq]; v [B,Skv,KV,dv] -> [B,Sq,H,dv].
+
+    Exact softmax attention; q is processed in chunks via lax.scan when
+    ``q_chunk`` is set (bounds peak memory to O(chunk * Skv))."""
+    B, Sq, H, dq = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    dv = v.shape[-1]
+    scale = scale if scale is not None else dq ** -0.5
+    qg = q.reshape(B, Sq, KV, G, dq)
+
+    def block(qb, qpos):
+        # qb [B, c, KV, G, dq] -> out [B, c, KV, G, dv]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k, preferred_element_type=jnp.float32)
+        s = s * scale
+        s = s + _mask_bias(qpos, k_positions, causal, kv_len, slopes, KV, G)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+    if q_chunk is None or q_chunk >= Sq:
+        out = block(qg, q_positions)
+    else:
+        assert Sq % q_chunk == 0, (Sq, q_chunk)
+        nc = Sq // q_chunk
+        qs = jnp.moveaxis(qg.reshape(B, nc, q_chunk, KV, G, dq), 1, 0)
+        ps = q_positions.reshape(nc, q_chunk)
+
+        def body(_, xs):
+            qb, qpos = xs
+            return None, block(qb, qpos)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, dv)
+    return out.reshape(B, Sq, H, dv)
+
+
+def default_q_chunk(S: int) -> Optional[int]:
+    """Bound per-step score memory to ~ chunk*S <= 2^22 elements."""
+    if S <= 4096:
+        return None
+    c = max(128, (1 << 22) // S)
+    while S % c:
+        c //= 2
+    return max(c, 128) if S % max(c, 128) == 0 else 128
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig):
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": _normal(ks[0], (d, H, dh), sc, pdt(cfg)),
+        "wk": _normal(ks[1], (d, KV, dh), sc, pdt(cfg)),
+        "wv": _normal(ks[2], (d, KV, dh), sc, pdt(cfg)),
+        "wo": _normal(ks[3], (H, dh, d), (H * dh) ** -0.5, pdt(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), pdt(cfg))
+        p["bk"] = jnp.zeros((KV, dh), pdt(cfg))
+        p["bv"] = jnp.zeros((KV, dh), pdt(cfg))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), pdt(cfg))
+        p["k_norm"] = jnp.ones((dh,), pdt(cfg))
+    return p
+
+
+def gqa_axes(cfg: ModelConfig):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return a
+
+
+def _rms_head(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"], cfg.norm_eps)
+        k = _rms_head(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool):
+    """x [B,S,D] -> (out [B,S,D], cache {k,v:[B,S,KV,dh]} or None)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_cos_sin(pos, cfg.d_head, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # pin attention-activation shardings here so any resharding happens ONCE
+    # per layer (instead of inside every q-chunk scan iteration)
+    q = constrain(q, ("batch", None, "heads", "head_dim"))
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+    o = attn_core(
+        q, k, v,
+        causal=cfg.causal,
+        q_positions=pos,
+        k_positions=pos,
+        slopes=slopes,
+        q_chunk=default_q_chunk(S),
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    cache = {"k": k, "v": v} if want_cache else None
+    return out, cache
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None):
+    """x [B,1,D]; cache {k,v:[B,L,KV,dh]}; pos scalar or [B] -> (out, delta).
+
+    The cache is consumed READ-ONLY: the fresh token's K/V contribute via a
+    separate rank-1 softmax term, and the returned delta {k,v: [B,KV,dh]} is
+    merged into the cache once per step *outside* the layer scan
+    (model.merge_cache_deltas).  Writing inside the scan makes XLA
+    materialize per-iteration copies of the whole stacked cache.
+    """
+    B = x.shape[0]
+    pos_b, scalar = _norm_pos(pos, B)
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_cos_sin(pos_b, cfg.d_head, cfg.rope_theta)  # [B, d/2]
+        q = apply_rope_vec(q, cos, sin)
+        k = apply_rope_vec(k, cos, sin)
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+    ck = constrain(cache["k"], ("batch", "kv_seq", "kv_heads", "head_dim"))
+    cv = constrain(cache["v"], ("batch", "kv_seq", "kv_heads", "head_dim"))
+    L = ck.shape[1]
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    scale = cfg.d_head ** -0.5
+    qg = q.reshape(B, KV, G, cfg.d_head)
+    qg = constrain(qg, ("batch", "kv_heads", "q_groups", "head_dim"))
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32)
+    s = constrain(s, ("batch", "kv_heads", "q_groups", "kv_seq"))
+    s = s * scale
+    kpos = jnp.arange(L)
+    if slopes is not None:
+        dist = (kpos[None, :] - pos_b[:, None]).astype(jnp.float32)  # [B, L]
+        s = s + slopes.reshape(1, KV, G, 1) * dist[:, None, None, :]
+    mask = kpos[None, :] < pos_b[:, None]  # [B, L] — strictly prior tokens
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    # the current token attends to itself through a separate term
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg, k[:, 0], preferred_element_type=jnp.float32)
+    s_new = s_new * scale  # alibi distance 0 -> no bias term
+    m = jnp.maximum(jnp.max(s, -1), s_new)  # [B,KV,G]
+    e = jnp.exp(s - m[..., None])
+    e_new = jnp.exp(s_new - m)
+    denom = jnp.sum(e, -1) + e_new
+    o = jnp.einsum("bkgs,bskd->bkgd", e.astype(cv.dtype), cv)
+    o = o + e_new[..., None].astype(v.dtype) * v[:, 0][:, :, None, :]
+    o = (o / denom[..., None].astype(o.dtype)).reshape(B, 1, H, cfg.d_head)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k[:, 0], "v": v[:, 0]}
+
+
+def gqa_cache_shape(cfg: ModelConfig, B: int, L: int):
+    dt = pdt(cfg)
+    kv = (B, L, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(kv, dt), "v": jax.ShapeDtypeStruct(kv, dt)}
+
+
+def gqa_cache_axes():
+    a = ("batch", "seq", "kv_heads", "head_dim")
+    return {"k": a, "v": a}
+
+
+# ---------------------------------------------------------------------------
+# MLA layer (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig):
+    a = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qh = a.qk_nope_head_dim + a.qk_rope_head_dim
+    p = {
+        "wq_a": _normal(ks[0], (d, a.q_lora_rank), d ** -0.5, pdt(cfg)),
+        "q_ln": jnp.ones((a.q_lora_rank,), pdt(cfg)),
+        "wq_b": _normal(ks[1], (a.q_lora_rank, H, qh), a.q_lora_rank ** -0.5, pdt(cfg)),
+        "wkv_a": _normal(ks[2], (d, a.kv_lora_rank + a.qk_rope_head_dim), d ** -0.5, pdt(cfg)),
+        "kv_ln": jnp.ones((a.kv_lora_rank,), pdt(cfg)),
+        "wkv_b": _normal(
+            ks[3],
+            (a.kv_lora_rank, H, a.qk_nope_head_dim + a.v_head_dim),
+            a.kv_lora_rank ** -0.5,
+            pdt(cfg),
+        ),
+        "wo": _normal(ks[4], (H, a.v_head_dim, d), (H * a.v_head_dim) ** -0.5, pdt(cfg)),
+    }
+    return p
+
+
+def mla_axes(cfg: ModelConfig):
+    return {
+        "wq_a": ("embed", "q_lora"),
+        "q_ln": ("q_lora",),
+        "wq_b": ("q_lora", "heads", "head_dim"),
+        "wkv_a": ("embed", "kv_lora"),
+        "kv_ln": ("kv_lora",),
+        "wkv_b": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def _mla_q(p, x, cfg, cos, sin):
+    a = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    cq = _rms_head(cq, p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope = q[..., : a.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., a.qk_nope_head_dim :], cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg, cos, sin):
+    a = cfg.mla
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = _rms_head(ckv_full[..., : a.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = ckv_full[..., a.kv_lora_rank :][:, :, None, :]  # single shared head
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
+    """Naive (expanded) MLA for prefill; caches the compressed ckv."""
+    a = cfg.mla
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    cos, sin = rope_cos_sin(pos, a.qk_rope_head_dim, cfg.rope_theta)
+    q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)
+    ckv, k_rope = _mla_ckv(p, x, cfg, cos, sin)
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"])
+    k_nope = kv[..., : a.qk_nope_head_dim]
+    v = kv[..., a.qk_nope_head_dim :]
+    H = cfg.n_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, a.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    # hoist any head-resharding out of the q-chunk scan (see gqa_prefill)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    o = attn_core(
+        q, k, v,
+        causal=cfg.causal,
+        q_positions=pos,
+        k_positions=pos,
+        q_chunk=default_q_chunk(S),
+        scale=(a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5,
+    )
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    cache = {"ckv": ckv, "k_rope": k_rope} if want_cache else None
+    return out, cache
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, pos):
+    """Matmul-absorbed MLA decode over the compressed cache (TPU-native path).
+
+    Mathematically identical to expanding K/V (unit-tested); per-step cost is
+    O(S * kv_lora) per head instead of O(S * (nope+v)) plus no expanded cache.
+    Cache is read-only; returns delta {ckv, k_rope: [B, r]} (see gqa_decode).
+    """
+    a = cfg.mla
+    B = x.shape[0]
+    pos_b, scalar = _norm_pos(pos, B)
+    cos, sin = rope_cos_sin(pos_b, a.qk_rope_head_dim, cfg.rope_theta)  # [B, d/2]
+
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    cq = _rms_head(cq, p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope = q[..., : a.qk_nope_head_dim]
+    q_rope = apply_rope_vec(q[..., a.qk_nope_head_dim :], cos, sin)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv_new = _rms_head(ckv_full[..., : a.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    krope_new = apply_rope_vec(ckv_full[..., a.kv_lora_rank :][:, :, None, :], cos, sin)[:, :, 0, :]
+
+    ckv = constrain(cache["ckv"], ("batch", "kv_seq", "kv_lora"))
+    krope = constrain(cache["k_rope"], ("batch", "kv_seq", None))
+    wk_b = p["wkv_b"][..., : a.qk_nope_head_dim]  # [r, H, nope]
+    wv_b = p["wkv_b"][..., a.qk_nope_head_dim :]  # [r, H, v]
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk_b)
+    q_eff = constrain(q_eff, ("batch", None, "heads", "kv_lora"))
+    scale = (a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhr,bsr->bhqs", q_eff, ckv, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhk,bsk->bhqs", q_rope, krope, preferred_element_type=jnp.float32)
+    s = constrain(s, ("batch", "heads", None, "kv_seq"))
+    s = s * scale
+    L = ckv.shape[1]
+    mask = jnp.arange(L)[None, None, None, :] < pos_b[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    # current-token term against its own compressed kv
+    s_new = jnp.einsum("bqhr,br->bhq", q_eff, ckv_new[:, 0], preferred_element_type=jnp.float32)
+    s_new = s_new + jnp.einsum("bqhk,bk->bhq", q_rope, krope_new[:, 0], preferred_element_type=jnp.float32)
+    s_new = s_new * scale
+    m = jnp.maximum(jnp.max(s, -1), s_new)  # [B,H,1]
+    e = jnp.exp(s - m[..., None])
+    e_new = jnp.exp(s_new - m)
+    denom = jnp.sum(e, -1) + e_new
+    ctx = jnp.einsum("bhqs,bsr->bqhr", e.astype(ckv.dtype), ckv)
+    ctx = ctx + e_new[..., None].transpose(0, 2, 1, 3).astype(ctx.dtype) * ckv_new[:, 0][:, None, None, :]
+    ctx = ctx / denom.transpose(0, 2, 1)[..., None].astype(ctx.dtype)
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx, wv_b)
+    out = jnp.einsum("bqhv,hvd->bqd", o, p["wo"])
+    return out, {"ckv": ckv_new[:, 0], "k_rope": krope_new[:, 0]}
+
+
+def mla_cache_shape(cfg: ModelConfig, B: int, L: int):
+    a = cfg.mla
+    dt = pdt(cfg)
+    return {
+        "ckv": jax.ShapeDtypeStruct((B, L, a.kv_lora_rank), dt),
+        "k_rope": jax.ShapeDtypeStruct((B, L, a.qk_rope_head_dim), dt),
+    }
+
+
+def mla_cache_axes():
+    return {"ckv": ("batch", "seq", "kv_lora"), "k_rope": ("batch", "seq", None)}

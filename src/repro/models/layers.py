@@ -1,0 +1,148 @@
+"""Basic layers: norms, embeddings, dense FFNs.
+
+Every layer exposes ``init(key, cfg, ...) -> params`` and ``axes(cfg) -> same
+structure of logical-axis tuples`` (consumed by sharding.partitioning).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), pdt(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdt(cfg))
+    return p
+
+
+def norm_axes(cfg: ModelConfig):
+    a = {"scale": ("embed",)}
+    if cfg.norm_type == "layernorm":
+        a["bias"] = ("embed",)
+    return a
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (gated or plain)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "wi": _normal(ks[0], (d, d_ff), scale_in, pdt(cfg)),
+        "wo": _normal(ks[1], (d_ff, d), scale_out, pdt(cfg)),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = _normal(ks[2], (d, d_ff), scale_in, pdt(cfg))
+    return p
+
+
+def mlp_axes(cfg: ModelConfig):
+    a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.gated_mlp:
+        a["wg"] = ("embed", "mlp")
+    return a
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    act = act_fn(cfg.activation)
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p = {"tokens": _normal(ks[0], (cfg.vocab_size, cfg.d_model), 1.0, pdt(cfg))}
+    if cfg.pos_emb == "learned":
+        p["pos"] = _normal(ks[1], (cfg.max_seq_len, cfg.d_model), 0.02, pdt(cfg))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _normal(ks[2], (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5, pdt(cfg))
+    return p
+
+
+def embed_axes(cfg: ModelConfig):
+    a = {"tokens": ("vocab", "embed")}
+    if cfg.pos_emb == "learned":
+        a["pos"] = ("pos", "embed")
+    if not cfg.tie_embeddings:
+        a["lm_head"] = ("embed", "vocab")
+    return a
+
+
+def embed_apply(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["tokens"], tokens, axis=0)
+    return x
+
+
+def add_positions(p, x, cfg: ModelConfig, offset: int | jnp.ndarray = 0):
+    if cfg.pos_emb == "learned":
+        S = x.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(p["pos"], offset, S, axis=0) if not isinstance(
+            offset, int
+        ) else p["pos"][offset : offset + S]
+        x = x + pos[None]
+    return x
+
+
+def unembed_apply(p, x, cfg: ModelConfig):
+    w = p["tokens"].T if cfg.tie_embeddings else p["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, w)

@@ -1,0 +1,159 @@
+"""Top-k Mixture-of-Experts with group-local capacity dispatch.
+
+Dispatch is *group-local* (groups map to data-parallel shards, GShard-style):
+positions-within-expert are computed with a chunked running-count scan (no
+global sort, no O(T*k*E) one-hot materialization), then tokens are scattered
+into per-group [E, C, D] buffers, experts run as batched einsums with the
+expert dim sharded over the "model" mesh axis, and outputs are gathered back
+with top-k gate weighting.  Tokens beyond capacity are dropped (standard
+capacity-factor semantics).
+
+Supports shared experts (DeepSeek-V2) and Arctic's parallel dense-FFN
+residual branch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..sharding.partitioning import constrain
+from .layers import _normal, act_fn, mlp_apply, mlp_axes, mlp_init, pdt
+
+
+def moe_init(key, cfg: ModelConfig, moe: MoEConfig):
+    d, E, F = cfg.d_model, moe.n_experts, moe.d_expert
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _normal(ks[0], (d, E), d ** -0.5, jnp.float32),
+        "w_in": _normal(ks[1], (E, d, F), d ** -0.5, pdt(cfg)),
+        "w_out": _normal(ks[2], (E, F, d), F ** -0.5, pdt(cfg)),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _normal(ks[3], (E, d, F), d ** -0.5, pdt(cfg))
+    if moe.n_shared_experts:
+        import dataclasses
+
+        shared_cfg = cfg  # same activation/gating
+        p["shared"] = mlp_init(ks[4], shared_cfg, moe.n_shared_experts * F)
+    if cfg.dense_residual:
+        p["dense"] = mlp_init(ks[5], cfg, cfg.d_ff_dense or cfg.d_ff)
+    return p
+
+
+def moe_axes(cfg: ModelConfig, moe: MoEConfig):
+    a = {
+        "router": ("embed", "expert"),
+        "w_in": ("expert", "embed", "mlp"),
+        "w_out": ("expert", "mlp", "embed"),
+    }
+    if cfg.gated_mlp:
+        a["w_gate"] = ("expert", "embed", "mlp")
+    if moe.n_shared_experts:
+        a["shared"] = mlp_axes(cfg)
+    if cfg.dense_residual:
+        a["dense"] = mlp_axes(cfg)
+    return a
+
+
+def capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _positions_in_expert(idx_flat, n_experts: int, chunk: int = 2048):
+    """idx_flat [G, T] int32 -> positions [G, T] (running count per expert).
+
+    Chunked scan keeps the one-hot working set to [G, chunk, E].
+    """
+    G, T = idx_flat.shape
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    nc = T // c
+    xs = jnp.moveaxis(idx_flat.reshape(G, nc, c), 1, 0)
+
+    def body(counts, ic):  # counts [G, E]; ic [G, c]
+        oh = jax.nn.one_hot(ic, n_experts, dtype=jnp.int32)  # [G, c, E]
+        before_in_chunk = jnp.cumsum(oh, axis=1) - oh
+        within = jnp.take_along_axis(before_in_chunk, ic[..., None], -1)[..., 0]
+        base = jnp.take_along_axis(
+            jnp.broadcast_to(counts[:, None, :], oh.shape), ic[..., None], -1
+        )[..., 0]
+        return counts + oh.sum(axis=1), within + base
+
+    _, pos = jax.lax.scan(body, jnp.zeros((G, n_experts), jnp.int32), xs)
+    return jnp.moveaxis(pos, 0, 1).reshape(G, T)
+
+
+def moe_apply(p, x, cfg: ModelConfig, moe: MoEConfig, *, n_groups: int = 1, train: bool = False):
+    """x [B, S, D] -> (y [B, S, D], aux dict of scalars)."""
+    B, S, D = x.shape
+    T = B * S
+    G = math.gcd(T, n_groups)
+    Tg = T // G
+    E, k = moe.n_experts, moe.top_k
+    xg = x.reshape(G, Tg, D)
+    xg = constrain(xg, ("group", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, k)  # [G, Tg, k]
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+
+    # ---- dispatch positions (group-local) ----
+    C = capacity(Tg, moe)
+    idx_flat = idx.reshape(G, Tg * k).astype(jnp.int32)
+    pos_flat = _positions_in_expert(idx_flat, E)
+    keep = pos_flat < C
+    pos_safe = jnp.where(keep, pos_flat, C)  # C is out-of-bounds -> dropped
+
+    # ---- scatter tokens into [G, E, C, D] ----
+    tok_ids = jnp.repeat(jnp.arange(Tg), k)[None].repeat(G, 0)  # [G, Tg*k]
+
+    def scatter_group(xg_g, e_g, p_g, t_g):
+        src = jnp.take(xg_g, t_g, axis=0)  # [Tg*k, D]
+        return jnp.zeros((E, C, D), xg_g.dtype).at[e_g, p_g].set(src, mode="drop")
+
+    buf = jax.vmap(scatter_group)(xg, idx_flat, pos_safe, tok_ids)
+    buf = constrain(buf, ("group", "expert", None, None))
+
+    # ---- expert FFN (batched einsum; expert dim sharded over "model") ----
+    act = act_fn(cfg.activation)
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_in"])
+    if cfg.gated_mlp:
+        h = act(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) * h
+    else:
+        h = act(h)
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+    out = constrain(out, ("group", "expert", None, None))
+
+    # ---- gather back with gate weighting ----
+    def gather_group(out_g, e_g, p_g):
+        return out_g[e_g, jnp.minimum(p_g, C - 1)]  # [Tg*k, D]
+
+    ytok = jax.vmap(gather_group)(out, idx_flat, pos_safe)
+    ytok = jnp.where(keep[..., None], ytok, 0)
+    gates_flat = gates.reshape(G, Tg * k, 1).astype(ytok.dtype)
+    y = jnp.sum((ytok * gates_flat).reshape(G, Tg, k, D), axis=2)
+    y = y.reshape(B, S, D)
+
+    # ---- auxiliary losses (Switch-style load balance + router z) ----
+    me = jnp.mean(probs, axis=(0, 1))  # [E] mean router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(2), axis=(0, 1)
+    ) / k  # fraction of tokens per expert
+    lb = E * jnp.sum(me * ce)
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"lb_loss": lb, "router_z": zl, "drop_frac": dropped}
+
+    # ---- shared experts / dense residual branches ----
+    if moe.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    if cfg.dense_residual:
+        y = y + mlp_apply(p["dense"], x, cfg)
+    return y, aux

@@ -1,0 +1,159 @@
+"""Mamba-2 (SSD) block: prefill via the chunked SSD algorithm, O(1)-state decode.
+
+The SSD core dispatches through ``repro.kernels.ops.ssd`` (Pallas kernel on
+TPU, pure-jnp chunked reference elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.partitioning import constrain
+from .layers import _normal, pdt
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gdn = s.n_groups * s.d_state
+    conv_ch = di + 2 * gdn
+    return s, d, di, nh, gdn, conv_ch
+
+
+def mamba_init(key, cfg: ModelConfig):
+    s, d, di, nh, gdn, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (nh,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    p = {
+        "in_proj": _normal(ks[0], (d, 2 * di + 2 * gdn + nh), d ** -0.5, pdt(cfg)),
+        "conv_w": _normal(ks[1], (s.d_conv, conv_ch), s.d_conv ** -0.5, pdt(cfg)),
+        "conv_b": jnp.zeros((conv_ch,), pdt(cfg)),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (nh,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),  # softplus^-1(dt)
+        "norm": jnp.ones((di,), pdt(cfg)),
+        "out_proj": _normal(ks[4], (di, d), di ** -0.5, pdt(cfg)),
+    }
+    return p
+
+
+def mamba_axes(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "conv_ch"),
+        "conv_b": ("conv_ch",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split(zxbcdt, cfg: ModelConfig):
+    s, d, di, nh, gdn, conv_ch = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + conv_ch]
+    dt = zxbcdt[..., di + conv_ch :]
+    return z, xBC, dt
+
+
+def _gated_norm(y, z, scale, eps):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    n = gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + eps)
+    return (n * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
+    """x [B,L,D] -> (out [B,L,D], cache {conv:[B,dc-1,ch], ssm:[B,nh,hd,N]})."""
+    from ..kernels import ops as kops
+
+    s, d, di, nh, gdn, conv_ch = _dims(cfg)
+    B, L, _ = x.shape
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    z, xBC, dt = _split(zxbcdt, cfg)
+
+    # causal depthwise conv (left pad d_conv-1)
+    pad = jnp.zeros((B, s.d_conv - 1, conv_ch), xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    conv = sum(
+        xp[:, i : i + L] * p["conv_w"][i][None, None] for i in range(s.d_conv)
+    ) + p["conv_b"][None, None]
+    conv = jax.nn.silu(conv)
+
+    xh = conv[..., :di].reshape(B, L, nh, s.head_dim)
+    Bm = conv[..., di : di + gdn].reshape(B, L, s.n_groups, s.d_state)
+    Cm = conv[..., di + gdn :].reshape(B, L, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+
+    y, final_state = kops.ssd(xh, dt, A, Bm, Cm, chunk=s.chunk_size)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = _gated_norm(y.reshape(B, L, di), z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+
+    cache = None
+    if want_cache:
+        cache = {
+            "conv": xBC[:, L - (s.d_conv - 1) :, :].astype(pdt(cfg)),
+            "ssm": final_state.astype(jnp.float32),
+        }
+    return out, cache
+
+
+def mamba_decode(p, x, cfg: ModelConfig, cache, pos):
+    """Single-token step.  x [B,1,D]; cache {conv [B,dc-1,ch], ssm [B,nh,hd,N]}."""
+    s, d, di, nh, gdn, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"])
+    z, xBC, dt = _split(zxbcdt, cfg)
+    xBC = xBC[:, 0]  # [B, ch]
+
+    window = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # [B, dc, ch]
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    xh = conv[:, :di].reshape(B, nh, s.head_dim)
+    Bm = conv[:, di : di + gdn].reshape(B, s.n_groups, s.d_state)
+    Cm = conv[:, di + gdn :].reshape(B, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])  # [B, nh]
+    A = -jnp.exp(p["A_log"])  # [nh]
+
+    hpg = nh // s.n_groups
+    Bh = jnp.repeat(Bm, hpg, axis=1)  # [B, nh, N]
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+    decay = jnp.exp(dtv * A[None])  # [B, nh]
+    state = cache["ssm"]
+    state = state * decay[..., None, None] + (
+        (dtv[..., None] * xh.astype(jnp.float32))[..., None] * Bh[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = _gated_norm(y.reshape(B, 1, di).astype(x.dtype), z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype), "ssm": state}
+    return out, new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, B: int):
+    s, d, di, nh, gdn, conv_ch = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((B, s.d_conv - 1, conv_ch), pdt(cfg)),
+        "ssm": jax.ShapeDtypeStruct((B, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_cache_axes():
+    return {
+        "conv": ("batch", None, "conv_ch"),
+        "ssm": ("batch", "ssm_heads", "head_dim", "ssm_state"),
+    }

@@ -1,0 +1,9 @@
+"""Serving runtime: engines, KV-cache slots, sampling, disaggregation."""
+from .engine import (  # noqa: F401
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    MonolithicEngine,
+    PrefillEngine,
+)
+from .sampling import SamplingParams, sample  # noqa: F401

@@ -1,0 +1,275 @@
+"""Serving engines.
+
+``PrefillEngine`` / ``DecodeEngine`` / ``DisaggregatedServer`` implement the
+paper's serving architecture in JAX: prefill runs on one engine (in
+production: a Prefill-Chip pod / mesh), the KV cache is handed off, and
+decode proceeds with continuous batching on another engine (Decode-Chip
+pod).  ``MonolithicEngine`` is the co-located baseline (same machine runs
+both phases) used by tests and the quickstart example.
+
+Engines are deliberately synchronous and single-host here (the distributed
+versions are built in ``repro/launch`` via jit+shardings over the production
+mesh); the scheduling logic — slots, admission, continuous batching,
+bucketed prefill — is the real thing.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from . import kvcache
+from .sampling import SamplingParams, sample
+
+
+@dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # outputs
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return int(2 ** math.ceil(math.log2(n)))
+
+
+# ---------------------------------------------------------------------------
+# Prefill engine
+# ---------------------------------------------------------------------------
+
+
+class PrefillEngine:
+    """Runs prompt prefill (bucketed lengths, jit-cached per bucket)."""
+
+    def __init__(self, params, cfg: ModelConfig, sampling: SamplingParams = SamplingParams()):
+        self.params = params
+        self.cfg = cfg
+        self.sampling = sampling
+        self._fns: Dict[int, Any] = {}  # jit cache keyed by prompt length
+
+    def _fn(self, S: int):
+        if S not in self._fns:
+            cfg = self.cfg
+            self._fns[S] = jax.jit(lambda p, t: M.prefill(p, t, cfg))
+        return self._fns[S]
+
+    def prefill(self, req: GenRequest, key) -> Tuple[int, Any, int]:
+        """Returns (first_token, kv_pack, true_len).
+
+        Prompt lengths are padded up to power-of-two-ish buckets so the jit
+        cache stays small; padding tokens are masked by running only the true
+        prefix (CPU path) — the TPU path would mask inside the kernel.
+        """
+        S = len(req.prompt)
+        toks = np.asarray(req.prompt, np.int32)[None, :]
+        logits, caches, _ = self._fn(S)(self.params, jnp.asarray(toks))
+        tok = int(sample(logits, key, self.sampling)[0])
+        return tok, caches, S
+
+
+# ---------------------------------------------------------------------------
+# Decode engine (continuous batching over slots)
+# ---------------------------------------------------------------------------
+
+
+class DecodeEngine:
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        *,
+        max_slots: int = 8,
+        max_len: int = 512,
+        sampling: SamplingParams = SamplingParams(),
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.sampling = sampling
+        self.slots = kvcache.SlotState(max_slots, max_len)
+        self.caches = kvcache.batch_cache(cfg, max_slots, max_len)
+        self.tokens = np.zeros((max_slots,), np.int32)  # last emitted token
+        self.positions = np.zeros((max_slots,), np.int32)  # next write position
+        self.requests: Dict[int, GenRequest] = {}
+        self._step = self._build_step()
+
+    def _build_step(self):
+        cfg = self.cfg
+
+        def step(params, caches, tokens, positions, active, key):
+            logits, new_caches = M.decode_step(params, tokens, caches, positions, cfg)
+            nxt = sample(logits, key, self.sampling)
+            # inactive slots keep emitting their old token (masked on host)
+            nxt = jnp.where(active, nxt, tokens)
+            return nxt, new_caches
+
+        return jax.jit(step)
+
+    def admit(self, req: GenRequest, kv_pack, first_token: int, true_len: int) -> Optional[int]:
+        if true_len + req.max_new_tokens > self.max_len:
+            raise ValueError(f"request {req.rid} needs {true_len + req.max_new_tokens} > max_len")
+        slot = self.slots.alloc(req.rid)
+        if slot is None:
+            return None
+        self.caches = kvcache.insert_request(self.caches, kv_pack, slot, self.cfg)
+        self.slots.lengths[slot] = true_len
+        self.tokens[slot] = first_token
+        self.positions[slot] = true_len
+        self.requests[req.rid] = req
+        req.tokens.append(first_token)
+        return slot
+
+    def step(self, key) -> List[Tuple[int, int]]:
+        """One decode iteration over all active slots.  Returns (rid, token)."""
+        active_np = np.array([r is not None for r in self.slots.request_ids])
+        if not active_np.any():
+            return []
+        nxt, self.caches = self._step(
+            self.params,
+            self.caches,
+            jnp.asarray(self.tokens),
+            jnp.asarray(self.positions),
+            jnp.asarray(active_np),
+            key,
+        )
+        nxt = np.asarray(nxt)
+        out = []
+        for slot, rid in enumerate(self.slots.request_ids):
+            if rid is None:
+                continue
+            tok = int(nxt[slot])
+            req = self.requests[rid]
+            req.tokens.append(tok)
+            self.positions[slot] += 1
+            self.slots.lengths[slot] += 1
+            self.tokens[slot] = tok
+            out.append((rid, tok))
+            n_new = len(req.tokens)
+            if n_new >= req.max_new_tokens or (req.eos_id is not None and tok == req.eos_id):
+                req.done = True
+                self.slots.free(slot)
+                del self.requests[rid]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated server (the paper's architecture)
+# ---------------------------------------------------------------------------
+
+
+class DisaggregatedServer:
+    """Prefill pool -> KV handoff -> decode pool, continuous batching.
+
+    ``transfer`` is the KV handoff hook: identity on single host; on a real
+    cluster it is the pod-to-pod device transfer (see launch/serve.py).
+    """
+
+    def __init__(
+        self,
+        prefill_engines: List[PrefillEngine],
+        decode_engines: List[DecodeEngine],
+        *,
+        transfer=lambda kv: kv,
+        seed: int = 0,
+    ):
+        self.prefills = prefill_engines
+        self.decodes = decode_engines
+        self.transfer = transfer
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: List[GenRequest] = []
+        self.waiting: List[Tuple[GenRequest, Any, int, int]] = []  # (req, kv, tok, len)
+        self.all_requests: Dict[int, GenRequest] = {}
+        self._rr = 0
+
+    def submit(self, req: GenRequest):
+        self.queue.append(req)
+        self.all_requests[req.rid] = req
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive to completion: prefill queue, admit, decode until done."""
+        steps = 0
+        while (
+            self.queue
+            or self.waiting
+            or any(d.requests for d in self.decodes)
+        ) and steps < max_steps:
+            steps += 1
+            # 1) prefill one queued request per engine (round-robin)
+            if self.queue:
+                eng = self.prefills[self._rr % len(self.prefills)]
+                self._rr += 1
+                req = self.queue.pop(0)
+                tok, kv, true_len = eng.prefill(req, self._next_key())
+                kv = self.transfer(kv)  # KV handoff (pod-to-pod in production)
+                if req.max_new_tokens <= 1:
+                    req.tokens.append(tok)
+                    req.done = True
+                else:
+                    self.waiting.append((req, kv, tok, true_len))
+            # 2) admit waiting requests into free decode slots (most-free first)
+            still = []
+            for req, kv, tok, true_len in self.waiting:
+                dec = max(self.decodes, key=lambda d: d.max_slots - d.slots.n_active)
+                if dec.slots.n_active < dec.max_slots:
+                    dec.admit(req, kv, tok, true_len)
+                else:
+                    still.append((req, kv, tok, true_len))
+            self.waiting = still
+            # 3) one decode iteration everywhere
+            for dec in self.decodes:
+                dec.step(self._next_key())
+        return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
+
+
+class MonolithicEngine:
+    """Co-located baseline: one engine interleaves prefill and decode."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 8, max_len: int = 512,
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0):
+        self.prefill = PrefillEngine(params, cfg, sampling)
+        self.decode = DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
+                                   sampling=sampling)
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: List[GenRequest] = []
+        self.all_requests: Dict[int, GenRequest] = {}
+
+    def submit(self, req: GenRequest):
+        self.queue.append(req)
+        self.all_requests[req.rid] = req
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        steps = 0
+        while (self.queue or self.decode.requests) and steps < max_steps:
+            steps += 1
+            if self.queue and self.decode.slots.n_active < self.decode.max_slots:
+                req = self.queue.pop(0)
+                tok, kv, true_len = self.prefill.prefill(req, self._next_key())
+                if req.max_new_tokens <= 1:
+                    req.tokens.append(tok)
+                    req.done = True
+                else:
+                    self.decode.admit(req, kv, tok, true_len)
+            self.decode.step(self._next_key())
+        return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}

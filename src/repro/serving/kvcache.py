@@ -1,0 +1,102 @@
+"""Slot-based KV-cache management for continuous batching.
+
+TPU-style serving wants static shapes: the decode engine owns a cache of
+``max_slots`` rows x ``max_len`` positions per attention layer (JetStream-
+style), plus per-slot lengths and active flags.  Prefill produces a
+single-request cache which is *inserted* into a free slot — that insert is
+the software form of the paper's prefill->decode KV handoff.
+
+All cache trees follow the model layout: a list (one entry per pattern
+position) of dicts of stacked [n_repeats, B, ...] arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+
+Cache = Any
+
+
+@dataclass
+class SlotState:
+    """Host-side slot bookkeeping (device arrays live in the engine)."""
+
+    max_slots: int
+    max_len: int
+    lengths: List[int] = field(default_factory=list)  # host mirror
+    request_ids: List[Optional[int]] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.lengths = [0] * self.max_slots
+        self.request_ids = [None] * self.max_slots
+
+    def alloc(self, rid: int) -> Optional[int]:
+        for i, r in enumerate(self.request_ids):
+            if r is None:
+                self.request_ids[i] = rid
+                self.lengths[i] = 0
+                return i
+        return None
+
+    def free(self, slot: int):
+        self.request_ids[slot] = None
+        self.lengths[slot] = 0
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.request_ids)
+
+
+def batch_cache(cfg: ModelConfig, max_slots: int, max_len: int) -> Cache:
+    """Zero-initialized slot cache [R, max_slots, max_len, ...]."""
+    return M.zeros_cache(cfg, max_slots, max_len)
+
+
+def insert_request(batch: Cache, single: Cache, slot: int, cfg: ModelConfig) -> Cache:
+    """Insert a prefilled single-request cache (B=1) into ``slot``.
+
+    Attention caches copy the prefix [L1] into the slot row; mamba caches
+    (fixed size) replace the row.
+    """
+    out = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        b = batch[i]
+        s = single[i]
+        if mixer == "attn":
+            def ins(dst, src):
+                # dst [R, S, L, ...], src [R, 1, L1, ...]
+                L1 = src.shape[2]
+                pad = dst.shape[2] - L1
+                row = jnp.pad(src[:, 0], [(0, 0), (0, pad)] + [(0, 0)] * (src.ndim - 3))
+                return jax.lax.dynamic_update_index_in_dim(dst, row.astype(dst.dtype), slot, 1)
+        else:
+            def ins(dst, src):
+                return jax.lax.dynamic_update_index_in_dim(dst, src[:, 0].astype(dst.dtype), slot, 1)
+        out.append(jax.tree.map(ins, b, s))
+    return out
+
+
+def extract_request(batch: Cache, slot: int, length: int, cfg: ModelConfig) -> Cache:
+    """Pull one request's cache back out (decode->prefill reallocation path)."""
+    out = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        b = batch[i]
+        if mixer == "attn":
+            out.append(jax.tree.map(lambda a: a[:, slot : slot + 1, :length], b))
+        else:
+            out.append(jax.tree.map(lambda a: a[:, slot : slot + 1], b))
+    return out
+
+
+def kv_cache_bytes(cfg: ModelConfig, max_slots: int, max_len: int) -> int:
+    specs = M.init_cache_specs(cfg, max_slots, max_len)
+    return sum(
+        int(jnp.prod(jnp.array(s.shape))) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(specs)
+    )

@@ -1,0 +1,7 @@
+from .partitioning import (  # noqa: F401
+    DEFAULT_RULES,
+    constrain,
+    resolve_spec,
+    spec_tree,
+    tree_shardings,
+)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, data, checkpointing, fault-tolerant loop."""
+from .checkpoint import latest_step, restore, restore_or_none, save  # noqa: F401
+from .data import DataConfig, data_iterator, make_batch  # noqa: F401
+from .optimizer import AdamW, AdamWState, adamw_for, cosine_schedule, global_norm  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,99 @@
+"""Optimizer: AdamW with global-norm clipping and schedules (pure JAX).
+
+Implements the standard training substrate without external deps (no optax):
+  adamw(lr_schedule, b1, b2, eps, weight_decay) -> (init, update)
+  cosine / linear-warmup schedules
+State is a pytree mirroring params (m, v) + a scalar step — checkpointable.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    m: Any
+    v: Any
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step_f = step.astype(jnp.float32)
+        warm = base_lr * step_f / max(warmup, 1)
+        prog = jnp.clip((step_f - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step_f < warmup, warm, cos)
+
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.float32(base_lr)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState, dict]:
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        sf = step.astype(jnp.float32)
+        lr = self.lr(step)
+        bc1 = 1.0 - self.b1 ** sf
+        bc2 = 1.0 - self.b2 ** sf
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * gf
+            v2 = self.b2 * v + (1 - self.b2) * gf * gf
+            mh = m2 / bc1
+            vh = v2 / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([n[0] for n in new])
+        new_m = tdef.unflatten([n[1] for n in new])
+        new_v = tdef.unflatten([n[2] for n in new])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def adamw_for(cfg_total_steps: int, base_lr: float = 3e-4, warmup: int = 100) -> AdamW:
+    return AdamW(lr=cosine_schedule(base_lr, warmup, cfg_total_steps))

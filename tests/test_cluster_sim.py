@@ -1,0 +1,160 @@
+"""Cluster simulator + provisioning behaviour (paper §6-7 machinery)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import DECODE_CHIP, H100, PREFILL_CHIP, Parallelism
+from repro.core.cluster import (
+    SLOS,
+    ModelPerf,
+    simulate_colocated,
+    simulate_disaggregated,
+)
+from repro.core.provision import Design, PoolSpec, evaluate, max_rate
+from repro.core.trace import CODING, CONVERSATION, summarize, synthesize
+
+BLOOM = get_config("bloom-176b")
+PAR = Parallelism(tp=8)
+
+
+@pytest.fixture(scope="module")
+def perfs():
+    return {
+        "h100": ModelPerf(H100, BLOOM, PAR),
+        "p": ModelPerf(PREFILL_CHIP, BLOOM, PAR),
+        "d": ModelPerf(DECODE_CHIP, BLOOM, PAR),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_statistics():
+    reqs = synthesize(CODING, rate_rps=50, duration_s=60, seed=0)
+    s = summarize(reqs)
+    assert abs(s["median_in"] - 1500) / 1500 < 0.15
+    assert abs(s["median_out"] - 13) / 13 < 0.4
+    reqs = synthesize(CONVERSATION, rate_rps=50, duration_s=60, seed=0)
+    s = summarize(reqs)
+    assert abs(s["median_in"] - 1020) / 1020 < 0.15
+    assert abs(s["median_out"] - 129) / 129 < 0.3
+
+
+def test_trace_deterministic():
+    a = synthesize(CODING, rate_rps=10, duration_s=10, seed=42)
+    b = synthesize(CODING, rate_rps=10, duration_s=10, seed=42)
+    assert [(r.t_arrival, r.n_in, r.n_out) for r in a] == [
+        (r.t_arrival, r.n_in, r.n_out) for r in b
+    ]
+
+
+# ---------------------------------------------------------------------------
+# ModelPerf lookups
+# ---------------------------------------------------------------------------
+
+
+def test_perf_monotonicity(perfs):
+    h = perfs["h100"]
+    assert h.prefill_time(512) < h.prefill_time(2048) < h.prefill_time(8192)
+    assert h.decode_time(1, 1024) < h.decode_time(64, 1024)
+    assert h.decode_time(32, 512) < h.decode_time(32, 8192)
+    # batching efficiency: 2 fused prefills beat 2 sequential ones
+    assert h.prefill_batch_time(2048, 2) < 2 * h.prefill_time(1024)
+
+
+def test_perf_chip_ordering(perfs):
+    """Prefill chip faster at prefill; decode chip ~ H100 at decode."""
+    assert perfs["p"].prefill_time(4096) < perfs["h100"].prefill_time(4096)
+    d_ratio = perfs["d"].decode_time(64, 2048) / perfs["h100"].decode_time(64, 2048)
+    assert d_ratio < 1.15
+
+
+# ---------------------------------------------------------------------------
+# Simulators
+# ---------------------------------------------------------------------------
+
+
+def _mini_trace(rate=6, dur=20, seed=0):
+    return synthesize(CONVERSATION, rate_rps=rate, duration_s=dur, seed=seed)
+
+
+def test_disagg_completes_and_meets_when_overprovisioned(perfs):
+    reqs = _mini_trace()
+    res = simulate_disaggregated(
+        reqs,
+        prefill_pool=[perfs["h100"]] * 4,
+        decode_pool=[perfs["h100"]] * 4,
+        ref_perf=perfs["h100"],
+        duration=20,
+    )
+    assert res.n_completed == res.n_requests
+    assert res.meets(SLOS["loose"])
+    assert res.percentile("ttft", 90) >= 1.0  # can't beat solo reference
+
+
+def test_disagg_fails_when_underprovisioned(perfs):
+    reqs = synthesize(CONVERSATION, rate_rps=30, duration_s=20, seed=0)
+    res = simulate_disaggregated(
+        reqs,
+        prefill_pool=[perfs["h100"]],
+        decode_pool=[perfs["h100"]],
+        ref_perf=perfs["h100"],
+        duration=20,
+    )
+    assert not res.meets(SLOS["tight"])
+
+
+def test_coloc_interference_inflates_tbt(perfs):
+    """Sarathi-style mixing must show prefill-decode interference (paper §2.3)."""
+    reqs = _mini_trace(rate=8)
+    res_co = simulate_colocated(
+        reqs, perf=perfs["h100"], n_machines=4, ref_perf=perfs["h100"], duration=20
+    )
+    res_dis = simulate_disaggregated(
+        reqs, prefill_pool=[perfs["h100"]] * 2, decode_pool=[perfs["h100"]] * 2,
+        ref_perf=perfs["h100"], duration=20,
+    )
+    assert res_co.percentile("tbt", 99) > res_dis.percentile("tbt", 99)
+
+
+def test_spad_cheaper_than_homogeneous(perfs):
+    """The paper's headline: same machine counts, SPAD chips cost less."""
+    spad = Design(
+        "spad", "disagg",
+        prefill=[PoolSpec("PrefillChip", perfs["p"], 4)],
+        decode=[PoolSpec("DecodeChip", perfs["d"], 4)],
+    )
+    homo = Design(
+        "homo", "disagg",
+        prefill=[PoolSpec("H100", perfs["h100"], 4)],
+        decode=[PoolSpec("H100", perfs["h100"], 4)],
+    )
+    assert spad.norm_cost < 0.75 * homo.norm_cost
+    reqs = _mini_trace()
+    r_spad = evaluate(spad, reqs, perfs["h100"], 20)
+    r_homo = evaluate(homo, reqs, perfs["h100"], 20)
+    assert r_spad.n_completed == r_spad.n_requests
+    # SPAD within SLO whenever homo is (equal machine counts)
+    if r_homo.meets(SLOS["normal"]):
+        assert r_spad.meets(SLOS["normal"])
+
+
+def test_max_rate_monotone_in_machines(perfs):
+    small = Design(
+        "s", "disagg",
+        prefill=[PoolSpec("H100", perfs["h100"], 1)],
+        decode=[PoolSpec("H100", perfs["h100"], 1)],
+    )
+    big = Design(
+        "b", "disagg",
+        prefill=[PoolSpec("H100", perfs["h100"], 3)],
+        decode=[PoolSpec("H100", perfs["h100"], 3)],
+    )
+    r_small = max_rate(small, workload=CONVERSATION, slo=SLOS["normal"],
+                       ref_perf=perfs["h100"], duration=15, hi=60)
+    r_big = max_rate(big, workload=CONVERSATION, slo=SLOS["normal"],
+                     ref_perf=perfs["h100"], duration=15, hi=60)
+    assert r_big >= r_small
+    assert r_big > 0

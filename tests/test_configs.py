@@ -1,0 +1,79 @@
+"""Architecture configs: parameter counts vs published sizes, applicability."""
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, SHAPES, get_config, reduced, shape_applicable
+
+# (arch, published total B, published active B, tolerance)
+PUBLISHED = [
+    ("qwen3-moe-235b-a22b", 235, 22, 0.10),
+    ("arctic-480b", 480, 17, 0.15),
+    ("jamba-1.5-large-398b", 398, 94, 0.10),
+    ("granite-8b", 8, 8, 0.10),
+    ("nemotron-4-15b", 15, 15, 0.10),
+    ("qwen1.5-4b", 4, 4, 0.15),
+    ("minicpm3-4b", 4, 4, 0.15),
+    ("mamba2-370m", 0.37, 0.37, 0.15),
+    ("internvl2-2b", 2, 2, 0.15),
+    ("hubert-xlarge", 0.96, 0.96, 0.15),
+    ("bloom-176b", 176, 176, 0.05),
+    ("llama3-70b", 70, 70, 0.05),
+    ("deepseek-v2-236b", 236, 21, 0.10),
+]
+
+
+@pytest.mark.parametrize("name,total_b,active_b,tol", PUBLISHED)
+def test_param_counts_match_published(name, total_b, active_b, tol):
+    total, active = ARCHS[name].param_count()
+    assert abs(total / 1e9 - total_b) / total_b < tol, f"{name}: {total/1e9:.1f}B"
+    assert abs(active / 1e9 - active_b) / active_b < tol + 0.05, f"{name}: {active/1e9:.1f}B"
+
+
+def test_assigned_matrix_is_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(SHAPES) == 4
+    # 40 cells; count applicable ones
+    applicable = sum(
+        shape_applicable(cfg, s)[0] for cfg in ASSIGNED_ARCHS.values() for s in SHAPES.values()
+    )
+    # hubert: -2 (both decode shapes); long_500k inapplicable for the 7
+    # remaining full-attention archs (jamba + mamba2 run it) -> 40 - 2 - 7
+    assert applicable == 31
+
+
+def test_applicability_reasons():
+    hubert = get_config("hubert-xlarge")
+    ok, why = shape_applicable(hubert, SHAPES["decode_32k"])
+    assert not ok and "encoder" in why
+    granite = get_config("granite-8b")
+    ok, why = shape_applicable(granite, SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+    for name in ("jamba-1.5-large-398b", "mamba2-370m"):
+        ok, _ = shape_applicable(get_config(name), SHAPES["long_500k"])
+        assert ok, name
+
+
+def test_block_patterns_divide_layers():
+    for name, cfg in ARCHS.items():
+        assert cfg.n_layers % len(cfg.block_pattern) == 0, name
+        _ = cfg.n_repeats
+
+
+def test_jamba_interleave():
+    cfg = get_config("jamba-1.5-large-398b")
+    mixers = [m for m, _ in cfg.block_pattern]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7  # 1:7
+    ffns = [f for _, f in cfg.block_pattern]
+    assert ffns.count("moe") == 4  # MoE every other layer
+
+
+def test_reduced_configs_are_small():
+    for name, cfg in ARCHS.items():
+        r = reduced(cfg)
+        total, _ = r.param_count()
+        assert total < 5e6, f"{name} reduced too big: {total/1e6:.1f}M"
+        assert r.n_layers <= len(cfg.block_pattern) * 2
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-5")

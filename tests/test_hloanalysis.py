@@ -1,0 +1,77 @@
+"""HLO analyzer calibration: flops / collective bytes / trip counts are
+exact on controlled programs (this underwrites the roofline numbers)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hloanalysis
+
+
+def _compile(f, *specs, **kw):
+    return jax.jit(f, **kw).lower(*specs).compile()
+
+
+def test_matmul_flops_exact():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    comp = _compile(lambda a, b: a @ b, x, w)
+    st = hloanalysis.analyze(comp.as_text())
+    assert abs(st.flops - 2 * 64 * 128 * 32) / (2 * 64 * 128 * 32) < 1e-6
+
+
+def test_scan_trip_count_correction():
+    """10-iteration scan of one matmul -> 10x the single-matmul flops."""
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def f(a, b):
+        def body(c, _):
+            return jnp.tanh(c @ b), None
+
+        c, _ = jax.lax.scan(body, a, None, length=10)
+        return c
+
+    comp = _compile(f, x, w)
+    st = hloanalysis.analyze(comp.as_text())
+    assert st.while_trip_counts and max(st.while_trip_counts.values()) == 10
+    want = 10 * 2 * 8 * 64 * 64
+    assert abs(st.flops - want) / want < 0.05
+
+
+def test_cost_analysis_agrees_per_device():
+    """cost_analysis flops ~~ parsed flops on a single-device program."""
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    comp = _compile(lambda a, b: a @ b, x, w)
+    cost = comp.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    st = hloanalysis.analyze(comp.as_text())
+    assert abs(st.flops - cost["flops"]) / cost["flops"] < 0.1
+
+
+def test_roofline_terms_dominance():
+    t = hloanalysis.roofline_terms(
+        flops=197e12, bytes_hbm=1e9, collective_bytes=0, n_chips=1
+    )
+    assert t["dominant"] == "compute"
+    assert abs(t["t_compute_s"] - 1.0) < 1e-6
+    t = hloanalysis.roofline_terms(
+        flops=1e12, bytes_hbm=819e9 * 2, collective_bytes=0, n_chips=1
+    )
+    assert t["dominant"] == "memory"
+    assert abs(t["t_memory_s"] - 2.0) < 1e-6
+    t = hloanalysis.roofline_terms(
+        flops=0, bytes_hbm=0, collective_bytes=50e9 * 3, n_chips=1
+    )
+    assert t["dominant"] == "collective"
+    assert abs(t["t_collective_s"] - 3.0) < 1e-6
+
+
+def test_shape_bytes_parser():
+    from repro.launch.hloanalysis import _shape_bytes
+
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert _shape_bytes("(f32[8], bf16[4])") == 32 + 8
+    assert _shape_bytes("pred[]") == 1

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on kernel/system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def _mx(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.sampled_from([32, 64, 96]),
+    h=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32]),
+)
+@settings(**SET)
+def test_flash_matches_ref(seed, s, h, g, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h * g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, s, h, d), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    assert _mx(out, want) < 3e-5
+
+
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 30))
+@settings(**SET)
+def test_causality(seed, t):
+    """Perturbing token t must not change attention outputs at positions < t."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    S, H, d = 32, 2, 16
+    q = jax.random.normal(ks[0], (1, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, H, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, H, d), jnp.float32)
+    o1 = ref.flash_attention_ref(q, k, v, causal=True)
+    k2 = k.at[:, t].add(3.0)
+    v2 = v.at[:, t].add(-2.0)
+    o2 = ref.flash_attention_ref(q, k2, v2, causal=True)
+    assert _mx(o1[:, :t], o2[:, :t]) == 0.0
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 4.0))
+@settings(**SET)
+def test_softmax_value_bound(seed, scale):
+    """Attention output is a convex combination: bounded by value extremes."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    S, H, d = 24, 2, 16
+    q = jax.random.normal(ks[0], (1, S, H, d), jnp.float32) * scale
+    k = jax.random.normal(ks[1], (1, S, H, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, H, d), jnp.float32)
+    o = ref.flash_attention_ref(q, k, v, causal=False)
+    assert float(o.max()) <= float(v.max()) + 1e-5
+    assert float(o.min()) >= float(v.min()) - 1e-5
+
+
+@given(seed=st.integers(0, 2**31 - 1), length=st.integers(1, 64))
+@settings(**SET)
+def test_decode_prefix_property(seed, length):
+    """decode over a length-L prefix == full attention with that prefix only."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, L, H, d = 1, 64, 2, 16
+    q = jax.random.normal(ks[0], (B, H, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, L, H, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, L, H, d), jnp.float32)
+    out = decode_attention_pallas(q, kc, vc, jnp.array([length]), block_s=32, interpret=True)
+    want = ref.decode_attention_ref(q, kc[:, :length], vc[:, :length], jnp.array([length]))
+    assert _mx(out, want) < 3e-5
+
+
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([16, 32, 64, 128]))
+@settings(**SET)
+def test_ssd_chunk_invariance(seed, chunk):
+    """SSD result must be independent of the chunk size (associativity)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, L, h, p, g, n = 1, 64, 2, 8, 1, 4
+    x = jax.random.normal(ks[0], (b, L, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    B = jax.random.normal(ks[3], (b, L, g, n), jnp.float32) * 0.3
+    C = jax.random.normal(ks[4], (b, L, g, n), jnp.float32) * 0.3
+    y1, s1 = ref.ssd_ref(x, dt, A, B, C, chunk=chunk)
+    y2, s2 = ref.ssd_sequential_ref(x, dt, A, B, C)
+    assert _mx(y1, y2) < 1e-3
+    assert _mx(s1, s2) < 1e-3

@@ -1,0 +1,74 @@
+"""Logical-axis partitioner rules + production mesh resolution."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.sharding.partitioning import DEFAULT_RULES, resolve_spec
+
+SINGLE = AbstractMesh((16, 16), ("data", "model"))
+POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_resolution():
+    spec = resolve_spec(("embed", "mlp"), (4096, 14336), SINGLE)
+    assert spec == P("data", "model")
+
+
+def test_pod_batch_spans_pod_and_data():
+    spec = resolve_spec(("batch", None), (256, 4096), POD)
+    assert spec == P(("pod", "data"))
+
+
+def test_divisibility_fallback_kv_heads():
+    # 4 kv heads cannot shard 16 ways -> falls through to head_dim
+    spec = resolve_spec(("embed", "kv_heads", "head_dim"), (4096, 4, 128), SINGLE)
+    assert spec == P("data", None, "model")
+
+
+def test_no_double_assignment():
+    # heads takes "model"; head_dim must NOT also take it
+    spec = resolve_spec(("embed", "heads", "head_dim"), (4096, 64, 128), SINGLE)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_vocab_replicates():
+    spec = resolve_spec(("vocab", "embed"), (92_553, 2048), SINGLE)  # internvl2
+    assert spec == P(None, "data")
+
+
+def test_batch_of_one_replicates():
+    spec = resolve_spec(("batch",), (1,), POD)
+    assert spec == P()
+
+
+def test_seq_sharding_for_long_context():
+    # long_500k: batch=1 -> seq takes (pod, data)
+    spec = resolve_spec(("batch", "seq", "kv_heads", "head_dim"), (1, 524_288, 8, 128), POD)
+    assert spec == P(None, ("pod", "data"), None, "model")
+
+
+def test_expert_sharding():
+    spec = resolve_spec(("expert", "embed", "mlp"), (128, 4096, 1536), SINGLE)
+    assert spec[0] == "model"
+    assert spec[1] == "data"
+
+
+def test_rules_cover_all_model_axes():
+    """Every logical axis used by param/cache axes must have a rule entry."""
+    from repro.configs import ARCHS, reduced
+    from repro.models import model as M
+
+    used = set()
+    for name in ARCHS:
+        cfg = reduced(ARCHS[name])
+        for tree in (M.param_axes(cfg), M.cache_axes(cfg)):
+            for leaf in jax.tree.leaves(
+                tree,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    e is None or isinstance(e, str) for e in x
+                ),
+            ):
+                used.update(a for a in leaf if a is not None)
+    missing = used - set(DEFAULT_RULES)
+    assert not missing, f"logical axes without rules: {missing}"

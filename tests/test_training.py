@@ -1,0 +1,174 @@
+"""Training substrate: optimizer math, checkpoints, FT drill, data pipeline."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.training import (
+    DataConfig,
+    Trainer,
+    TrainerConfig,
+    adamw_for,
+    cosine_schedule,
+    global_norm,
+    make_batch,
+)
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamW, clip_by_global_norm, constant_schedule
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=constant_schedule(0.1), weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}  # norm 10
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 10.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110, min_frac=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(lr(jnp.int32(110))) - 0.1) < 1e-6
+    assert float(lr(jnp.int32(60))) > float(lr(jnp.int32(100)))
+
+
+def test_weight_decay_only_matrices():
+    opt = AdamW(lr=constant_schedule(0.0), weight_decay=1.0)  # lr 0: no movement
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = opt.init(params)
+    grads = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    new, _, _ = opt.update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(new["w"]), 1.0)  # lr=0 -> unchanged
+    np.testing.assert_allclose(np.asarray(new["b"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_by_step():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    a1, l1 = make_batch(cfg, 3)
+    a2, l2 = make_batch(cfg, 3)
+    b, _ = make_batch(cfg, 4)
+    assert np.array_equal(a1, a2) and np.array_equal(l1, l2)
+    assert not np.array_equal(a1, b)
+    assert a1.max() < 100 and l1.max() < 100
+
+
+def test_data_frontend_mode():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2, frontend_dim=32)
+    x, labels = make_batch(cfg, 0)
+    assert x.shape == (2, 8, 32) and x.dtype == np.float32
+    assert labels.shape == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_bf16():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+        "b": {"c": jnp.float32(3.5), "d": jnp.arange(4, dtype=jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, tree, step=5)
+        got, step = ckpt.restore(d, tree)
+        assert step == 5
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            assert x.dtype == y.dtype
+            assert np.array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_checkpoint_retention_and_latest():
+    tree = {"w": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        for s in [1, 2, 3, 4, 5]:
+            ckpt.save(d, tree, step=s, keep=2)
+        assert ckpt.latest_step(d) == 5
+        dirs = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(dirs) == 2
+
+
+def test_restore_or_none_cold_start():
+    with tempfile.TemporaryDirectory() as d:
+        assert ckpt.restore_or_none(d, {"w": jnp.zeros((2,))}) is None
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerance drill: kill mid-run, resume, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_ft_drill_resume_bit_exact():
+    cfg = reduced(ARCHS["granite-8b"])
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2, seed=1)
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(total_steps=10, ckpt_every=4, ckpt_dir=d, warmup=2)
+        tr = Trainer(cfg, dcfg, tcfg, seed=0)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            tr.run(stop_after=6)
+        tr2 = Trainer(cfg, dcfg, tcfg, seed=0)
+        assert tr2.resume() and tr2.step == 4
+        last_resumed = tr2.run()
+        tr3 = Trainer(cfg, dcfg, TrainerConfig(total_steps=10, ckpt_every=100, warmup=2), seed=0)
+        last_clean = tr3.run()
+        assert abs(last_resumed["loss"] - last_clean["loss"]) < 1e-5
+
+
+@pytest.mark.slow
+def test_loss_decreases():
+    cfg = reduced(ARCHS["qwen1.5-4b"])
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, seed=3)
+    tr = Trainer(cfg, dcfg, TrainerConfig(total_steps=30, ckpt_every=1000, warmup=5,
+                                          base_lr=1e-3), seed=0)
+    tr.run()
+    first = np.mean([h["loss"] for h in tr.history[:5]])
+    last = np.mean([h["loss"] for h in tr.history[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_straggler_detection():
+    import time as _time
+
+    cfg = reduced(ARCHS["mamba2-370m"])
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2, seed=0)
+    tr = Trainer(cfg, dcfg, TrainerConfig(total_steps=12, ckpt_every=1000,
+                                          straggler_factor=2.5), seed=0)
+    inner = tr._step_fn
+    calls = {"n": 0}
+
+    def slow_step(*a):
+        calls["n"] += 1
+        out = inner(*a)
+        jax.block_until_ready(out[0])
+        if calls["n"] == 10:
+            _time.sleep(1.0)  # injected straggler
+        return out
+
+    tr._step_fn = slow_step
+    tr.run()
+    assert 9 in tr.straggler_steps or 10 in tr.straggler_steps
