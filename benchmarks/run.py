@@ -22,6 +22,7 @@ MODULES = [
     "table9_hbm_cost",
     "fig11_parallelism",
     "kernels_bench",
+    "serving_bench",
     "roofline",
     "table4_provisioning",
     "table6_slos",

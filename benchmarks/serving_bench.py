@@ -1,0 +1,187 @@
+"""Serving fast-path benchmark: device-resident decode vs the seed engine.
+
+Measures, on the reduced CPU test config, exactly what the paper's hardware
+argument predicts the software loop should deliver once decode state stays
+device-resident and prefill runs in big bucketed batches:
+
+  * end-to-end generated tokens/sec through the DisaggregatedServer
+    (seed mode: unbucketed single-request prefill, step-at-a-time decode
+    without donation  vs  fast mode: bucketed batched prefill, donated
+    fused decode blocks),
+  * decode step walltime per token (steady-state, slots full),
+  * prefill jit recompile count over 20 mixed-length prompts
+    (seed: one compile per exact length; fast: <= number of buckets).
+
+Writes ``BENCH_serving.json`` into the working directory.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    PrefillEngine,
+)
+
+from .common import FAST, Bench
+
+ARCH = "granite-8b"
+DECODE_BLOCK = 8
+MAX_SLOTS = 4
+MAX_LEN = 128
+MAX_NEW = 8 if FAST else 24
+N_REQUESTS = 8 if FAST else 16
+
+
+def _requests(cfg, n, max_new=MAX_NEW, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        GenRequest(i, rng.integers(0, cfg.vocab_size, size=int(rng.integers(5, 48))),
+                   max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _build_server(params, cfg, fast: bool) -> DisaggregatedServer:
+    if fast:
+        pre = PrefillEngine(params, cfg, bucketed=True)
+        dec = DecodeEngine(params, cfg, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                           decode_block=DECODE_BLOCK, donate=True)
+        return DisaggregatedServer([pre], [dec], max_prefill_batch=MAX_SLOTS)
+    pre = PrefillEngine(params, cfg, bucketed=False)
+    dec = DecodeEngine(params, cfg, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                       decode_block=1, donate=False)
+    return DisaggregatedServer([pre], [dec], max_prefill_batch=1)
+
+
+def _end_to_end(params, cfg, fast: bool):
+    """Warm up compiles on a small batch, then time the real workload."""
+    srv = _build_server(params, cfg, fast)
+    for r in _requests(cfg, 2, max_new=4, seed=99):
+        r.rid += 10_000
+        srv.submit(r)
+    srv.run()
+    reqs = _requests(cfg, N_REQUESTS)
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    srv.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.tokens) for r in reqs)
+    streams = {r.rid: list(r.tokens) for r in reqs}
+    return n_tok / dt, dt, streams
+
+
+def _decode_walltime(params, cfg, fast: bool):
+    """Steady-state decode walltime per token, slots full the whole time."""
+    eng = DecodeEngine(
+        params, cfg, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+        decode_block=DECODE_BLOCK if fast else 1, donate=fast,
+    )
+    pre = PrefillEngine(params, cfg, bucketed=True)
+    key = jax.random.PRNGKey(0)
+    reqs = _requests(cfg, MAX_SLOTS)
+    for r in reqs:
+        r.max_new_tokens = MAX_LEN - len(r.prompt)  # never finishes mid-measurement
+    for r in reqs:
+        key, k = jax.random.split(key)
+        tok, kv, tl = pre.prefill(r, k)
+        eng.admit(r, kv, tok, tl)
+    n_blocks = 4 if FAST else 8
+    k_steps = DECODE_BLOCK if fast else 1
+    eng.step_block(k_steps)  # warm up the block compile
+    t0 = time.perf_counter()
+    produced = 0
+    for _ in range(n_blocks):
+        produced += len(eng.step_block(k_steps))
+    dt = time.perf_counter() - t0
+    return dt / max(produced, 1), produced
+
+
+def _prefill_recompiles(params, cfg, fast: bool):
+    """20 mixed-length prompts; count distinct compiled prefill shapes."""
+    rng = np.random.default_rng(1)
+    lengths = rng.integers(5, 120, size=20)
+    reqs = [GenRequest(i, rng.integers(0, cfg.vocab_size, size=int(s)), 1)
+            for i, s in enumerate(lengths)]
+    eng = PrefillEngine(params, cfg, bucketed=fast)
+    key = jax.random.PRNGKey(0)
+    if fast:
+        from repro.serving.engine import _bucket
+
+        by_bucket = {}
+        for r in reqs:
+            by_bucket.setdefault(_bucket(len(r.prompt)), []).append(r)
+        for group in by_bucket.values():
+            for i in range(0, len(group), MAX_SLOTS):
+                key, k = jax.random.split(key)
+                eng.prefill_batch(group[i : i + MAX_SLOTS], k, pad_to=MAX_SLOTS)
+        n_buckets = len(by_bucket)
+    else:
+        for r in reqs:
+            key, k = jax.random.split(key)
+            eng.prefill(r, k)
+        n_buckets = len({_bucket_of(len(r.prompt)) for r in reqs})
+    return eng.n_compiles, n_buckets
+
+
+def _bucket_of(n):
+    from repro.serving.engine import _bucket
+
+    return _bucket(n)
+
+
+def main() -> None:
+    b = Bench("serving fast path (device-resident decode + bucketed prefill)")
+    cfg = reduced(ARCHS[ARCH])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    seed_tps, seed_wall, seed_streams = _end_to_end(params, cfg, fast=False)
+    fast_tps, fast_wall, fast_streams = _end_to_end(params, cfg, fast=True)
+    b.row("e2e_tokens_per_s_seed", seed_tps, "unbucketed prefill, step-at-a-time decode")
+    b.row("e2e_tokens_per_s_fast", fast_tps, "bucketed batch prefill, fused donated decode")
+    b.row("e2e_speedup", fast_tps / seed_tps, "acceptance: >= 2x")
+    mismatches = sum(seed_streams[r] != fast_streams[r] for r in seed_streams)
+    b.row("greedy_stream_mismatches", mismatches, "seed vs fast, same requests (FP-noise only)")
+
+    seed_step, _ = _decode_walltime(params, cfg, fast=False)
+    fast_step, _ = _decode_walltime(params, cfg, fast=True)
+    b.row("decode_s_per_token_seed", seed_step, "per-step dispatch + host sync each token")
+    b.row("decode_s_per_token_fast", fast_step, f"one sync per {DECODE_BLOCK}-token block")
+    b.row("decode_step_speedup", seed_step / fast_step, "")
+
+    seed_compiles, n_buckets = _prefill_recompiles(params, cfg, fast=False)
+    fast_compiles, _ = _prefill_recompiles(params, cfg, fast=True)
+    b.row("prefill_compiles_seed_20_prompts", seed_compiles, "jit cache keyed per exact length")
+    b.row("prefill_compiles_fast_20_prompts", fast_compiles, f"<= {n_buckets} buckets in workload")
+    b.dump()
+
+    results = {
+        "arch": cfg.name,
+        "e2e_tokens_per_s": {"seed": seed_tps, "fast": fast_tps,
+                             "speedup": fast_tps / seed_tps},
+        "e2e_wall_s": {"seed": seed_wall, "fast": fast_wall},
+        "greedy_stream_mismatches": int(mismatches),
+        "decode_s_per_token": {"seed": seed_step, "fast": fast_step,
+                               "speedup": seed_step / fast_step},
+        "prefill_compiles_20_mixed_prompts": {
+            "seed": seed_compiles, "fast": fast_compiles, "n_buckets": n_buckets,
+        },
+        "config": {"decode_block": DECODE_BLOCK, "max_slots": MAX_SLOTS,
+                   "max_len": MAX_LEN, "max_new": MAX_NEW, "n_requests": N_REQUESTS},
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(results, f, indent=2)
+    print("wrote BENCH_serving.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,13 +24,17 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=30.0, help="req/s arrival rate")
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="fused decode steps per host sync; tokens arrive in "
+                         "blocks of this size, so TBT is measured per block")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch])
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     server = DisaggregatedServer(
         [PrefillEngine(params, cfg) for _ in range(2)],
-        [DecodeEngine(params, cfg, max_slots=4, max_len=256) for _ in range(2)],
+        [DecodeEngine(params, cfg, max_slots=4, max_len=256,
+                      decode_block=args.decode_block, seed=i) for i in range(2)],
     )
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))

@@ -47,6 +47,9 @@ print(f"\n== provisioning (conversation @ 20 req/s) ==\n"
       f"cost={design.norm_cost:.1f} H100-machines-equivalent, tdp={design.norm_tdp:.1f}")
 
 # ---- 3. disaggregated serving (executable) --------------------------------
+# Prefill batches same-bucket prompts; decode keeps its whole state (KV
+# caches, tokens, positions, PRNG key) on device and runs fused multi-token
+# blocks — the software twin of the paper's Prefill-Chip/Decode-Chip split.
 from repro.configs import ARCHS, reduced
 from repro.models import model as M
 from repro.serving import DecodeEngine, DisaggregatedServer, GenRequest, PrefillEngine
@@ -55,7 +58,7 @@ cfg = reduced(ARCHS["qwen1.5-4b"])
 params = M.init_params(jax.random.PRNGKey(0), cfg)
 server = DisaggregatedServer(
     [PrefillEngine(params, cfg)],
-    [DecodeEngine(params, cfg, max_slots=4, max_len=128)],
+    [DecodeEngine(params, cfg, max_slots=4, max_len=128, decode_block=8)],
 )
 rng = np.random.default_rng(0)
 for i in range(4):

@@ -78,28 +78,39 @@ def _dec_kernel(
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_s", "max_length", "interpret"))
 def decode_attention_pallas(
     q, k_cache, v_cache, lengths,
     *,
     block_s: int = DEFAULT_BLOCK_S,
+    max_length: int = None,
     interpret: bool = False,
 ):
-    """q [B,H,d]; k_cache/v_cache [B,L,KV,d]; lengths [B] -> [B,H,d]."""
+    """q [B,H,d]; k_cache/v_cache [B,L,KV,d]; lengths [B] -> [B,H,d].
+
+    ``max_length``: static host-known upper bound on ``lengths``.  The split
+    grid (and thus the per-block DMA pipeline) is capped at
+    ceil(max_length / block_s) splits instead of covering the whole cache
+    allocation — serving engines know the longest admitted sequence, so the
+    bandwidth-bound kernel never streams cache rows no request can reach.
+    """
     B, H, d = q.shape
     L, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     scale = d ** -0.5
 
-    bs = min(block_s, L)
-    pad_s = (-L) % bs
+    L_eff = L if max_length is None else max(1, min(L, int(max_length)))
+    bs = min(block_s, L_eff)
+    ns = -(-L_eff // bs)  # bounded split count; blocks past it are never read
+    # pad only up to the grid's reach — when max_length bounds ns below the
+    # cache allocation, the tail of the cache is never touched, not copied
+    pad_s = max(0, ns * bs - L)
     qt = q.reshape(B, KV, G, d)
     kt = jnp.moveaxis(k_cache, 2, 1)  # [B, KV, L, d]
     vt = jnp.moveaxis(v_cache, 2, 1)
     if pad_s:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
-    ns = (L + pad_s) // bs
 
     kernel = functools.partial(_dec_kernel, scale=scale, block_s=bs, ns=ns)
     grid_spec = pltpu.PrefetchScalarGridSpec(

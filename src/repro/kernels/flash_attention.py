@@ -11,6 +11,12 @@ contiguous in (seq, head_dim).  GQA is handled in the index map (query head h
 reads kv head h // G).  Online softmax state (m, l, acc) lives in VMEM scratch
 and is carried across the sequential k-block grid dimension; causal blocks
 entirely above the diagonal are skipped with ``pl.when``.
+
+Bucketed serving support: ``lengths`` [B] (scalar-prefetch SMEM, like the
+decode kernel) is the per-request true prompt length for right-padded
+batches.  Keys at positions >= lengths[b] are masked to -inf, and k blocks
+entirely past the valid prefix are skipped — so a short prompt in a large
+bucket pays for its own length, not the bucket's.
 """
 from __future__ import annotations
 
@@ -28,17 +34,22 @@ NEG_INF = -1e30
 
 
 def _fa_kernel(
-    q_ref, k_ref, v_ref,  # [1, 1, bq, d], [1, 1, bk, d], [1, 1, bk, d]
-    o_ref,  # [1, 1, bq, d]
-    m_scr, l_scr, acc_scr,  # [bq, 1], [bq, 1], [bq, d] f32 VMEM scratch
-    *,
+    *refs,
     scale: float,
     causal: bool,
     block_q: int,
     block_k: int,
     nk: int,
     seq_off: int,
+    has_lengths: bool,
 ):
+    if has_lengths:
+        lengths_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        lengths_ref = None
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    # q/k/v blocks [1, 1, bq|bk, d]; scratch [bq, 1], [bq, 1], [bq, d] f32 VMEM
+    b = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -51,6 +62,9 @@ def _fa_kernel(
     # Causal: skip k blocks entirely above the diagonal.
     q_last = qi * block_q + (block_q - 1) + seq_off
     run = (ki * block_k <= q_last) if causal else (ki >= 0)
+    if lengths_ref is not None:
+        # skip k blocks entirely past the valid prefix (bucket padding)
+        run = jnp.logical_and(run, ki * block_k < lengths_ref[b])
 
     @pl.when(run)
     def _body():
@@ -60,14 +74,16 @@ def _fa_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # [bq, bk]
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
         if causal:
             q_pos = qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0
             ) + seq_off
-            k_pos = ki * block_k + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 1
-            )
             s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        if lengths_ref is not None:
+            s = jnp.where(k_pos < lengths_ref[b], s, NEG_INF)
 
         m_prev = m_scr[...]  # [bq, 1]
         l_prev = l_scr[...]
@@ -95,6 +111,7 @@ def _fa_kernel(
 )
 def flash_attention_pallas(
     q, k, v,
+    lengths=None,
     *,
     causal: bool = True,
     scale: Optional[float] = None,
@@ -102,7 +119,13 @@ def flash_attention_pallas(
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
 ):
-    """q [B,Sq,H,d]; k,v [B,Skv,KV,d] -> [B,Sq,H,d] (same semantics as ref)."""
+    """q [B,Sq,H,d]; k,v [B,Skv,KV,d] -> [B,Sq,H,d] (same semantics as ref).
+
+    ``lengths`` [B] int32 (optional): per-request valid key prefix for
+    right-padded (bucketed) prefill batches; keys at positions >=
+    lengths[b] are masked and their k blocks skipped entirely.  Query rows
+    at padded positions produce garbage by contract (the caller gathers
+    logits at true_len-1)."""
     B, Sq, H, d = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -127,8 +150,8 @@ def flash_attention_pallas(
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
-    if not causal and pad_k:
-        raise NotImplementedError("non-causal with padded kv not needed")
+    if not causal and pad_k and lengths is None:
+        raise NotImplementedError("non-causal with padded kv needs lengths")
 
     nq = Sq_p // bq
     nk = Skv_p // bk
@@ -142,24 +165,48 @@ def flash_attention_pallas(
         block_k=bk,
         nk=nk,
         seq_off=seq_off,
+        has_lengths=lengths is not None,
     )
-    out = pl.pallas_call(
-        kernel,
-        grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qt, kt, vt)
+    out_shape = jax.ShapeDtypeStruct((B, H, Sq_p, d), q.dtype)
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, d), jnp.float32),
+    ]
+    if lengths is None:
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(qt, kt, vt)
+    else:
+        # lengths ride in scalar-prefetch SMEM (index maps see the scalar
+        # refs as trailing args, same pattern as the decode kernel).
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki, *_: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, *_, G=G: (b, h // G, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki, *_, G=G: (b, h // G, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki, *_: (b, h, qi, 0)),
+            scratch_shapes=scratch,
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(jnp.asarray(lengths, jnp.int32), qt, kt, vt)
     if pad_q:
         out = out[:, :, :Sq]
     return jnp.moveaxis(out, 1, 2)  # [B, Sq, H, d]

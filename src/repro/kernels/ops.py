@@ -41,12 +41,15 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "scale"))
-def flash_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None):
+def flash_attention(q, k, v, lengths=None, *, causal: bool = True, scale: Optional[float] = None):
+    """``lengths`` [B] (optional): bucketed-prefill valid key prefix per request."""
     if _use_pallas():
         from .flash_attention import flash_attention_pallas
 
-        return flash_attention_pallas(q, k, v, causal=causal, scale=scale, interpret=_interpret())
-    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+        return flash_attention_pallas(
+            q, k, v, lengths, causal=causal, scale=scale, interpret=_interpret()
+        )
+    return _ref.flash_attention_ref(q, k, v, lengths, causal=causal, scale=scale)
 
 
 @jax.jit

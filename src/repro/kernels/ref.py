@@ -15,18 +15,25 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 
-def flash_attention_ref(q, k, v, *, causal: bool = True, scale: Optional[float] = None):
-    """q [B,Sq,H,d]; k,v [B,Skv,KV,d] -> [B,Sq,H,d].  GQA by head grouping."""
+def flash_attention_ref(q, k, v, lengths=None, *, causal: bool = True,
+                        scale: Optional[float] = None):
+    """q [B,Sq,H,d]; k,v [B,Skv,KV,d] -> [B,Sq,H,d].  GQA by head grouping.
+
+    ``lengths`` [B] (optional): per-request valid key prefix for right-padded
+    bucketed prefill batches (keys >= lengths[b] are masked)."""
     B, Sq, H, d = q.shape
     KV = k.shape[2]
     G = H // KV
     scale = scale if scale is not None else d ** -0.5
     qg = q.reshape(B, Sq, KV, G, d)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32) * scale
+    Skv = k.shape[1]
     if causal:
-        Skv = k.shape[1]
         mask = jnp.arange(Skv)[None, :] <= (jnp.arange(Sq)[:, None] + (Skv - Sq))
         s = jnp.where(mask[None, None, None], s, -1e30)
+    if lengths is not None:
+        valid = jnp.arange(Skv)[None, :] < jnp.asarray(lengths)[:, None]  # [B, Skv]
+        s = jnp.where(valid[:, None, None, None], s, -1e30)
     p = jax.nn.softmax(s, -1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
     return o.reshape(B, Sq, H, d)

@@ -88,27 +88,21 @@ def _parse_computations(hlo: str) -> Dict[str, List[str]]:
     return comps
 
 
-def _dot_flops(line: str) -> float:
-    out_m = _RESULT_RE.match(line)
-    if not out_m:
-        return 0.0
-    out_elems, _ = _shape_elems_bytes(out_m.group(1))
-    lhs_dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", line)
-    par = re.search(r"dot\(\s*%?[\w.\-]+", line)
-    # operand shapes are not inlined post-optimization; recover contraction
-    # size from the lhs shape annotation if present, else from metadata.
-    # The optimized text keeps operand shapes only at definition sites, so we
-    # use the einsum metadata fallback: contraction size recorded separately.
-    lhs_shape_m = re.search(r"dot\((?:%?[\w.\-]+\s*=\s*)?([a-z0-9]+\[[0-9,]*\])", line)
-    if lhs_dims_m and lhs_shape_m:
-        lhs = [int(d) for d in _SHAPE_RE.match(lhs_shape_m.group(1)).group(2).split(",") if d]
-        k = 1
-        for idx in lhs_dims_m.group(1).split(","):
-            i = int(idx)
-            if i < len(lhs):
-                k *= lhs[i]
-        return 2.0 * out_elems * k
-    return 2.0 * out_elems  # lower bound if contraction unknown
+def _lhs_dot_shape(line: str, defs: Dict[str, str]) -> str:
+    """Shape string of a dot's lhs operand.
+
+    Two HLO text layouts exist: newer XLA inlines operand shapes at the call
+    site (``dot(f32[64,128]{1,0} %a, ...)``), older text has bare operand
+    names (``dot(%a, %b)``) whose shapes live at their definition sites."""
+    par = re.search(r"\bdot\(([^)]*)\)", line)
+    if not par:
+        return ""
+    inner = par.group(1).strip()
+    sm = _SHAPE_RE.match(inner)
+    if sm:
+        return sm.group(0)
+    nm = re.search(r"%([\w.\-]+)", inner)
+    return defs.get(nm.group(1), "") if nm else ""
 
 
 def _meta_name(line: str) -> str:
@@ -290,9 +284,7 @@ def analyze(hlo: str, operand_shapes: Optional[Dict[str, str]] = None) -> HLOSta
                     stats.hbm_bytes += m * t
                     stats.hbm_bytes_by_meta[_meta_name(ls)] += m * t
             if re.search(r"=\s*[a-z0-9]+\[[0-9,]*\]\{[^}]*\}\s+dot\(", ls) or " dot(" in ls:
-                # resolve lhs operand shape via defs
-                opnds = re.search(r"dot\(%?([\w.\-]+)", ls)
-                lhs_shape = defs.get(opnds.group(1), "") if opnds else ""
+                lhs_shape = _lhs_dot_shape(ls, defs)
                 out_m = _RESULT_RE.match(ls)
                 if not out_m:
                     continue

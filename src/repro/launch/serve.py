@@ -36,6 +36,12 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="fused decode steps per host sync (1 = seed behaviour)")
+    ap.add_argument("--prefill-batch", type=int, default=8,
+                    help="max same-bucket prompts prefilled per batch")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable decode-state buffer donation (debugging)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -45,10 +51,13 @@ def main():
     sp = SamplingParams(temperature=args.temperature)
     prefills = [PrefillEngine(params, cfg, sp) for _ in range(args.prefill_engines)]
     decodes = [
-        DecodeEngine(params, cfg, max_slots=args.max_slots, max_len=args.max_len, sampling=sp)
-        for _ in range(args.decode_engines)
+        DecodeEngine(params, cfg, max_slots=args.max_slots, max_len=args.max_len, sampling=sp,
+                     decode_block=args.decode_block, donate=not args.no_donate,
+                     seed=args.seed + i)
+        for i in range(args.decode_engines)
     ]
-    srv = DisaggregatedServer(prefills, decodes, seed=args.seed)
+    srv = DisaggregatedServer(prefills, decodes, seed=args.seed,
+                              max_prefill_batch=args.prefill_batch)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -118,6 +118,7 @@ def attn_core(
     q_positions,
     k_positions,
     kv_len=None,
+    true_len=None,
     slopes=None,
     q_chunk: Optional[int] = None,
     scale: Optional[float] = None,
@@ -125,19 +126,30 @@ def attn_core(
     """q [B,Sq,H,dq]; k [B,Skv,KV,dq]; v [B,Skv,KV,dv] -> [B,Sq,H,dv].
 
     Exact softmax attention; q is processed in chunks via lax.scan when
-    ``q_chunk`` is set (bounds peak memory to O(chunk * Skv))."""
+    ``q_chunk`` is set (bounds peak memory to O(chunk * Skv)).
+
+    ``true_len`` [B] masks keys at positions >= true_len[b] — the per-request
+    length mask for right-padded (bucketed) prefill batches.  Padding keys get
+    -1e30 before the softmax, so exp underflows to exactly 0 and real-token
+    outputs are bit-identical to the unpadded computation."""
     B, Sq, H, dq = q.shape
     KV = k.shape[2]
     G = H // KV
     dv = v.shape[-1]
     scale = scale if scale is not None else dq ** -0.5
     qg = q.reshape(B, Sq, KV, G, dq)
+    kv_valid = None
+    if true_len is not None:
+        tl = jnp.asarray(true_len)
+        kv_valid = k_positions[None, :] < tl[:, None]  # [B, Skv]
 
     def block(qb, qpos):
         # qb [B, c, KV, G, dq] -> out [B, c, KV, G, dv]
         s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k, preferred_element_type=jnp.float32)
         s = s * scale
         s = s + _mask_bias(qpos, k_positions, causal, kv_len, slopes, KV, G)
+        if kv_valid is not None:
+            s = jnp.where(kv_valid[:, None, None, None, :], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
 
@@ -228,8 +240,12 @@ def _qkv(p, x, cfg: ModelConfig):
     return q, k, v
 
 
-def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool):
-    """x [B,S,D] -> (out [B,S,D], cache {k,v:[B,S,KV,dh]} or None)."""
+def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool, true_len=None):
+    """x [B,S,D] -> (out [B,S,D], cache {k,v:[B,S,KV,dh]} or None).
+
+    ``true_len`` [B]: per-request valid prefix for right-padded batches; keys
+    beyond it are masked (cache rows beyond it are overwritten by decode
+    before they are ever attended, see serving/kvcache.py)."""
     B, S, _ = x.shape
     pos = jnp.arange(S)
     q, k, v = _qkv(p, x, cfg)
@@ -247,6 +263,7 @@ def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool):
         causal=cfg.causal,
         q_positions=pos,
         k_positions=pos,
+        true_len=true_len,
         slopes=slopes,
         q_chunk=default_q_chunk(S),
     )
@@ -373,7 +390,7 @@ def _mla_ckv(p, x, cfg, cos, sin):
     return ckv, k_rope
 
 
-def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
+def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
     """Naive (expanded) MLA for prefill; caches the compressed ckv."""
     a = cfg.mla
     B, S, _ = x.shape
@@ -396,6 +413,7 @@ def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
         causal=cfg.causal,
         q_positions=pos,
         k_positions=pos,
+        true_len=true_len,
         q_chunk=default_q_chunk(S),
         scale=(a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5,
     )

@@ -216,6 +216,7 @@ def _block_apply(
     pos=None,
     slopes=None,
     n_groups: int = 1,
+    true_len=None,
 ):
     """One (mixer, ffn) block. Returns (x, new_cache, aux)."""
     aux = {}
@@ -229,14 +230,20 @@ def _block_apply(
         else:
             want = mode == "prefill"
             if cfg.attn_type == "mla":
-                a_out, new_cache = attn.mla_prefill(bp["mixer"], h, cfg, want_cache=want)
+                a_out, new_cache = attn.mla_prefill(
+                    bp["mixer"], h, cfg, want_cache=want, true_len=true_len
+                )
             else:
-                a_out, new_cache = attn.gqa_prefill(bp["mixer"], h, cfg, slopes=slopes, want_cache=want)
+                a_out, new_cache = attn.gqa_prefill(
+                    bp["mixer"], h, cfg, slopes=slopes, want_cache=want, true_len=true_len
+                )
     elif mixer == "mamba":
         if mode == "decode":
             a_out, new_cache = ssm_mod.mamba_decode(bp["mixer"], h, cfg, cache, pos)
         else:
-            a_out, new_cache = ssm_mod.mamba_prefill(bp["mixer"], h, cfg, want_cache=mode == "prefill")
+            a_out, new_cache = ssm_mod.mamba_prefill(
+                bp["mixer"], h, cfg, want_cache=mode == "prefill", true_len=true_len
+            )
     else:
         raise ValueError(mixer)
     x = x + a_out
@@ -260,7 +267,7 @@ def _zero_aux():
 
 
 def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_groups=1,
-               remat: bool = False):
+               remat: bool = False, true_len=None):
     """Scan over n_repeats; pattern positions applied sequentially in the body."""
     slopes = _slopes(cfg)
     P = len(cfg.block_pattern)
@@ -274,6 +281,7 @@ def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_gr
             x_new, nc, aux = _block_apply(
                 reps[i], x, cfg, mixer, ffn,
                 mode=mode, cache=c, pos=pos, slopes=slopes, n_groups=n_groups,
+                true_len=true_len,
             )
             x = x_new
             new_caches.append(nc)
@@ -323,16 +331,29 @@ def forward_train(params, batch, cfg: ModelConfig, *, n_groups: int = 1, remat: 
     return logits, aux
 
 
-def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1, pad_cache_to: Optional[int] = None):
+def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+            pad_cache_to: Optional[int] = None, true_len=None):
     """Prefill pass.  Returns (last-position logits [B,V], caches).
 
     ``pad_cache_to``: right-pad attention KV caches to this length so decode
     can run in place (standard serving layout: prefill_len + max_new_tokens).
+
+    ``true_len`` [B] int32: per-request prompt length for right-padded
+    (bucketed) batches.  Attention and SSM mixers mask positions beyond it
+    in-kernel, and the returned logits are taken at position true_len-1 per
+    row instead of the last padded position.  Rows with true_len == 0 are
+    dummy (batch padding); their logits/caches are garbage by contract.
     """
     x = _embed_in(params, batch, cfg)
-    x, caches, aux = _run_stack(params, x, cfg, mode="prefill", n_groups=n_groups)
+    x, caches, aux = _run_stack(params, x, cfg, mode="prefill", n_groups=n_groups,
+                                true_len=true_len)
     x = L.norm_apply(params["final_norm"], x, cfg)
-    last = x[:, -1]
+    if true_len is None:
+        last = x[:, -1]
+    else:
+        tl = jnp.asarray(true_len)
+        last_idx = jnp.maximum(tl - 1, 0)  # [B]
+        last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0]
     logits = L.unembed_apply(params["embed"], last, cfg)
     logits = constrain(logits, ("batch", "vocab"))
 

@@ -73,8 +73,15 @@ def _gated_norm(y, z, scale, eps):
     return (n * scale.astype(jnp.float32)).astype(y.dtype)
 
 
-def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
-    """x [B,L,D] -> (out [B,L,D], cache {conv:[B,dc-1,ch], ssm:[B,nh,hd,N]})."""
+def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
+    """x [B,L,D] -> (out [B,L,D], cache {conv:[B,dc-1,ch], ssm:[B,nh,hd,N]}).
+
+    ``true_len`` [B]: for right-padded batches, padding tokens are neutralized
+    in the state recurrence by zeroing their dt (decay exp(0*A)=1, update
+    dt*x*B=0 — an exact identity step), so the final SSM state equals the
+    unpadded one; the conv cache gathers the last ``d_conv-1`` *real*
+    positions per row.  Outputs at padded positions are garbage and must be
+    discarded by the caller (prefill gathers logits at true_len-1)."""
     from ..kernels import ops as kops
 
     s, d, di, nh, gdn, conv_ch = _dims(cfg)
@@ -94,6 +101,9 @@ def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
     Bm = conv[..., di : di + gdn].reshape(B, L, s.n_groups, s.d_state)
     Cm = conv[..., di + gdn :].reshape(B, L, s.n_groups, s.d_state)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    if true_len is not None:
+        valid = jnp.arange(L)[None, :] < jnp.asarray(true_len)[:, None]  # [B, L]
+        dt = dt * valid[..., None]
     A = -jnp.exp(p["A_log"])
 
     y, final_state = kops.ssd(xh, dt, A, Bm, Cm, chunk=s.chunk_size)
@@ -103,8 +113,17 @@ def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool):
 
     cache = None
     if want_cache:
+        if true_len is None:
+            conv_cache = xBC[:, L - (s.d_conv - 1) :, :]
+        else:
+            # last d_conv-1 REAL positions per row; indices before the start
+            # of the prompt read the implicit left zero-padding.
+            tl = jnp.asarray(true_len)
+            idx = tl[:, None] - (s.d_conv - 1) + jnp.arange(s.d_conv - 1)[None]  # [B, dc-1]
+            got = jnp.take_along_axis(xBC, jnp.clip(idx, 0, L - 1)[..., None], axis=1)
+            conv_cache = jnp.where((idx >= 0)[..., None], got, 0)
         cache = {
-            "conv": xBC[:, L - (s.d_conv - 1) :, :].astype(pdt(cfg)),
+            "conv": conv_cache.astype(pdt(cfg)),
             "ssm": final_state.astype(jnp.float32),
         }
     return out, cache

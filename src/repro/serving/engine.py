@@ -1,4 +1,4 @@
-"""Serving engines.
+"""Serving engines: the device-resident fast path.
 
 ``PrefillEngine`` / ``DecodeEngine`` / ``DisaggregatedServer`` implement the
 paper's serving architecture in JAX: prefill runs on one engine (in
@@ -7,10 +7,29 @@ decode proceeds with continuous batching on another engine (Decode-Chip
 pod).  ``MonolithicEngine`` is the co-located baseline (same machine runs
 both phases) used by tests and the quickstart example.
 
+The hot path mirrors the paper's hardware story in software:
+
+* **Decode is memory-bound** -> all decode state (KV caches, last tokens,
+  positions, active mask, PRNG key) lives on device in one
+  ``kvcache.DecodeState`` pytree.  The jitted step donates the state
+  (``donate_argnums``) so the cache is updated in place — KV bytes are
+  touched once per token instead of re-materialized — and a fused
+  ``lax.scan`` over ``decode_block`` steps emits a ``[k, max_slots]`` token
+  block so the host syncs once per block, not once per token.  EOS /
+  max-token bookkeeping is applied on the host against the returned block.
+
+* **Prefill is compute-bound** -> prompts are padded to power-of-two-ish
+  length buckets (``_bucket``) with in-kernel masking via a ``true_len``
+  argument threaded down to the attention / SSM mixers, and same-bucket
+  requests are stacked into ``[B, S]`` batches (``prefill_batch``) so the
+  compute side sees big tiles.  The jit cache is keyed per (bucket, batch)
+  instead of per exact prompt length: compile count is bounded by the
+  bucket list, not the workload.
+
 Engines are deliberately synchronous and single-host here (the distributed
 versions are built in ``repro/launch`` via jit+shardings over the production
 mesh); the scheduling logic — slots, admission, continuous batching,
-bucketed prefill — is the real thing.
+bucketed batched prefill — is the real thing.
 """
 from __future__ import annotations
 
@@ -27,6 +46,8 @@ from ..models import model as M
 from . import kvcache
 from .sampling import SamplingParams, sample
 
+DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
+
 
 @dataclass
 class GenRequest:
@@ -39,7 +60,7 @@ class GenRequest:
     done: bool = False
 
 
-def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
@@ -52,40 +73,122 @@ def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
 
 
 class PrefillEngine:
-    """Runs prompt prefill (bucketed lengths, jit-cached per bucket)."""
+    """Runs prompt prefill: bucketed lengths, batched same-bucket requests.
 
-    def __init__(self, params, cfg: ModelConfig, sampling: SamplingParams = SamplingParams()):
+    The jit cache (``_fns``) is keyed by (padded length, padded batch), so
+    with bucketing on, compiles are bounded by the bucket list regardless of
+    how many distinct prompt lengths the workload serves.  ``bucketed=False``
+    restores the seed behaviour (one compile per exact prompt length) for
+    benchmarking the difference.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        sampling: SamplingParams = SamplingParams(),
+        *,
+        bucketed: bool = True,
+        buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+    ):
         self.params = params
         self.cfg = cfg
         self.sampling = sampling
-        self._fns: Dict[int, Any] = {}  # jit cache keyed by prompt length
+        self.bucketed = bucketed
+        self.buckets = buckets
+        self._fns: Dict[Tuple[int, int], Any] = {}  # (S_padded, B_padded) -> jitted
 
-    def _fn(self, S: int):
-        if S not in self._fns:
-            cfg = self.cfg
-            self._fns[S] = jax.jit(lambda p, t: M.prefill(p, t, cfg))
-        return self._fns[S]
+    @property
+    def n_compiles(self) -> int:
+        """Number of distinct (length, batch) shapes compiled so far."""
+        return len(self._fns)
+
+    def _pad_len(self, S: int) -> int:
+        return _bucket(S, self.buckets) if self.bucketed else S
+
+    def _fn(self, S: int, B: int):
+        key = (S, B)
+        if key not in self._fns:
+            cfg, sampling = self.cfg, self.sampling
+
+            def f(p, toks, tl, k):
+                logits, caches, _ = M.prefill(p, toks, cfg, true_len=tl)
+                return sample(logits, k, sampling), caches
+
+            self._fns[key] = jax.jit(f)
+        return self._fns[key]
+
+    def prefill_batch(
+        self, reqs: List[GenRequest], key, *, pad_to: Optional[int] = None
+    ) -> Tuple[List[int], Any, List[int]]:
+        """Prefill same-bucket requests stacked to [B, S_bucket].
+
+        Returns (first_tokens, kv_batch, true_lens); ``kv_batch`` keeps the
+        batch axis — admit slices per-request rows out on device
+        (``kvcache.slice_request``).  ``pad_to`` right-pads the batch with
+        dummy rows (true_len=0) so the jit cache sees one batch size per
+        bucket.
+        """
+        true_lens = [len(r.prompt) for r in reqs]
+        S = self._pad_len(max(true_lens))
+        B = max(pad_to or len(reqs), len(reqs))
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : true_lens[i]] = np.asarray(r.prompt, np.int32)
+        tl = np.zeros((B,), np.int32)
+        tl[: len(reqs)] = true_lens
+        first, caches = self._fn(S, B)(
+            self.params, jnp.asarray(toks), jnp.asarray(tl), key
+        )
+        first = np.asarray(first)
+        return [int(first[i]) for i in range(len(reqs))], caches, true_lens
 
     def prefill(self, req: GenRequest, key) -> Tuple[int, Any, int]:
-        """Returns (first_token, kv_pack, true_len).
+        """Single-request prefill.  Returns (first_token, kv_pack, true_len).
 
-        Prompt lengths are padded up to power-of-two-ish buckets so the jit
-        cache stays small; padding tokens are masked by running only the true
-        prefix (CPU path) — the TPU path would mask inside the kernel.
+        In unbucketed (seed-compatibility) mode the prompt runs at its exact
+        length with no masking, matching the seed engine bit for bit.
         """
-        S = len(req.prompt)
-        toks = np.asarray(req.prompt, np.int32)[None, :]
-        logits, caches, _ = self._fn(S)(self.params, jnp.asarray(toks))
-        tok = int(sample(logits, key, self.sampling)[0])
-        return tok, caches, S
+        if not self.bucketed:
+            S = len(req.prompt)
+            toks = np.asarray(req.prompt, np.int32)[None, :]
+
+            def f(p, t, k):
+                logits, caches, _ = M.prefill(p, t, self.cfg)
+                return sample(logits, k, self.sampling), caches
+
+            # B=0 marks the maskless legacy closure (3 args) so it can never
+            # collide with a (S, 1) prefill_batch entry (4 args)
+            key_ = (S, 0)
+            if key_ not in self._fns:
+                self._fns[key_] = jax.jit(f)
+            tok, caches = self._fns[key_](self.params, jnp.asarray(toks), key)
+            return int(np.asarray(tok)[0]), caches, S
+        firsts, caches, tls = self.prefill_batch([req], key)
+        return firsts[0], caches, tls[0]
 
 
 # ---------------------------------------------------------------------------
-# Decode engine (continuous batching over slots)
+# Decode engine (continuous batching over slots, device-resident state)
 # ---------------------------------------------------------------------------
 
 
 class DecodeEngine:
+    """Continuous-batching decode over ``max_slots`` cache rows.
+
+    All per-step state is the device-resident ``kvcache.DecodeState``; the
+    host keeps only request bookkeeping (``SlotState``, the request dict).
+    ``step_block(k)`` runs k fused decode steps in one jitted ``lax.scan``
+    (one dispatch, one host sync for the whole ``[k, max_slots]`` token
+    block); the state argument is donated so the KV cache updates in place.
+    ``decode_block=1, donate=False`` reproduces the seed engine's
+    step-at-a-time, copy-per-step behaviour for benchmarking.
+
+    The engine owns its sampling PRNG key (inside ``DecodeState``), split
+    once per decode step — so token streams are bit-identical between
+    ``step_block(k)`` and k calls of ``step_block(1)`` under a fixed seed.
+    """
+
     def __init__(
         self,
         params,
@@ -94,76 +197,169 @@ class DecodeEngine:
         max_slots: int = 8,
         max_len: int = 512,
         sampling: SamplingParams = SamplingParams(),
+        decode_block: int = 8,
+        donate: bool = True,
+        seed: int = 0,
     ):
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.sampling = sampling
+        self.decode_block = max(1, decode_block)
+        self.donate = donate
         self.slots = kvcache.SlotState(max_slots, max_len)
-        self.caches = kvcache.batch_cache(cfg, max_slots, max_len)
-        self.tokens = np.zeros((max_slots,), np.int32)  # last emitted token
-        self.positions = np.zeros((max_slots,), np.int32)  # next write position
+        # fold_in a tag so the decode sampling stream is never the same
+        # threefry stream as a server/prefill PRNGKey(seed) chain
+        self.state = kvcache.init_decode_state(
+            cfg, max_slots, max_len, jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+        )
         self.requests: Dict[int, GenRequest] = {}
-        self._step = self._build_step()
+        self._block_fns: Dict[int, Any] = {}  # k -> jitted fused block
+        self._admit_fns: Dict[Tuple[int, int], Any] = {}  # (L1, B) -> jitted admit
+        self._release = self._jit(self._release_impl)
 
-    def _build_step(self):
-        cfg = self.cfg
+    # -- jitted state transitions (all donate the DecodeState) --------------
 
-        def step(params, caches, tokens, positions, active, key):
-            logits, new_caches = M.decode_step(params, tokens, caches, positions, cfg)
-            nxt = sample(logits, key, self.sampling)
-            # inactive slots keep emitting their old token (masked on host)
-            nxt = jnp.where(active, nxt, tokens)
-            return nxt, new_caches
+    def _jit(self, f, donate_state_argnum: int = 0):
+        if self.donate:
+            return jax.jit(f, donate_argnums=(donate_state_argnum,))
+        return jax.jit(f)
 
-        return jax.jit(step)
+    @staticmethod
+    def _release_impl(state: kvcache.DecodeState, keep) -> kvcache.DecodeState:
+        """Deactivate all slots freed this block in one dispatch (keep [S] bool)."""
+        return state._replace(active=state.active & keep)
 
-    def admit(self, req: GenRequest, kv_pack, first_token: int, true_len: int) -> Optional[int]:
+    def _block_fn(self, k: int):
+        if k not in self._block_fns:
+            cfg, sampling = self.cfg, self.sampling
+
+            def blk(params, state: kvcache.DecodeState):
+                def one(st: kvcache.DecodeState, _):
+                    key, sub = jax.random.split(st.key)
+                    logits, caches = M.decode_step(
+                        params, st.tokens, st.caches, st.positions, cfg
+                    )
+                    nxt = sample(logits, sub, sampling)
+                    # inactive slots keep emitting their old token (masked on host)
+                    nxt = jnp.where(st.active, nxt, st.tokens)
+                    positions = jnp.where(st.active, st.positions + 1, st.positions)
+                    return (
+                        kvcache.DecodeState(caches, nxt, positions, st.active, key),
+                        nxt,
+                    )
+
+                state, toks = jax.lax.scan(one, state, None, length=k)
+                return state, toks  # toks [k, max_slots]
+
+            self._block_fns[k] = self._jit(blk, donate_state_argnum=1)
+        return self._block_fns[k]
+
+    def _admit_fn(self, kv_pack):
+        B = jax.tree.leaves(kv_pack)[0].shape[1]
+        # the attention leaves' cache length identifies the bucket
+        L1 = max(
+            (a.shape[2] for a in jax.tree.leaves(kv_pack) if a.ndim >= 3), default=0
+        )
+        key = (L1, B)
+        if key not in self._admit_fns:
+            cfg = self.cfg
+
+            def adm(state: kvcache.DecodeState, kv, b, slot, token, pos):
+                single = kvcache.slice_request(kv, b)
+                caches = kvcache.insert_request(state.caches, single, slot, cfg)
+                return kvcache.DecodeState(
+                    caches=caches,
+                    tokens=state.tokens.at[slot].set(token),
+                    positions=state.positions.at[slot].set(pos),
+                    active=state.active.at[slot].set(True),
+                    key=state.key,
+                )
+
+            self._admit_fns[key] = self._jit(adm)
+        return self._admit_fns[key]
+
+    # -- public API ---------------------------------------------------------
+
+    def admit(
+        self,
+        req: GenRequest,
+        kv_pack,
+        first_token: int,
+        true_len: int,
+        *,
+        batch_index: int = 0,
+    ) -> Optional[int]:
+        """Insert a prefilled request into a free slot (the KV handoff).
+
+        ``kv_pack`` may be a batched prefill pack; ``batch_index`` selects
+        the row, sliced out on device inside the jitted admit."""
         if true_len + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.rid} needs {true_len + req.max_new_tokens} > max_len")
         slot = self.slots.alloc(req.rid)
         if slot is None:
             return None
-        self.caches = kvcache.insert_request(self.caches, kv_pack, slot, self.cfg)
+        self.state = self._admit_fn(kv_pack)(
+            self.state,
+            kv_pack,
+            jnp.int32(batch_index),
+            jnp.int32(slot),
+            jnp.int32(first_token),
+            jnp.int32(true_len),
+        )
         self.slots.lengths[slot] = true_len
-        self.tokens[slot] = first_token
-        self.positions[slot] = true_len
         self.requests[req.rid] = req
         req.tokens.append(first_token)
         return slot
 
-    def step(self, key) -> List[Tuple[int, int]]:
-        """One decode iteration over all active slots.  Returns (rid, token)."""
-        active_np = np.array([r is not None for r in self.slots.request_ids])
-        if not active_np.any():
+    def _auto_block(self) -> int:
+        rem = [
+            req.max_new_tokens - len(req.tokens)
+            for req in self.requests.values()
+        ]
+        return max(1, min(self.decode_block, max(rem, default=1)))
+
+    def step_block(self, k: Optional[int] = None) -> List[Tuple[int, int]]:
+        """Run ``k`` fused decode steps (default: auto-sized <= decode_block).
+
+        One jitted dispatch, one host sync.  Returns the accepted
+        (rid, token) pairs; EOS / max-token bookkeeping happens here on the
+        host against the returned block, and finished slots are released on
+        device afterwards."""
+        if self.slots.n_active == 0:
             return []
-        nxt, self.caches = self._step(
-            self.params,
-            self.caches,
-            jnp.asarray(self.tokens),
-            jnp.asarray(self.positions),
-            jnp.asarray(active_np),
-            key,
-        )
-        nxt = np.asarray(nxt)
-        out = []
+        k = k if k is not None else self._auto_block()
+        self.state, toks = self._block_fn(k)(self.params, self.state)
+        block = np.asarray(toks)  # [k, max_slots] — the one host sync
+        out: List[Tuple[int, int]] = []
+        freed: List[int] = []
         for slot, rid in enumerate(self.slots.request_ids):
             if rid is None:
                 continue
-            tok = int(nxt[slot])
             req = self.requests[rid]
-            req.tokens.append(tok)
-            self.positions[slot] += 1
-            self.slots.lengths[slot] += 1
-            self.tokens[slot] = tok
-            out.append((rid, tok))
-            n_new = len(req.tokens)
-            if n_new >= req.max_new_tokens or (req.eos_id is not None and tok == req.eos_id):
-                req.done = True
-                self.slots.free(slot)
-                del self.requests[rid]
+            for j in range(k):
+                tok = int(block[j, slot])
+                req.tokens.append(tok)
+                self.slots.lengths[slot] += 1
+                out.append((rid, tok))
+                if len(req.tokens) >= req.max_new_tokens or (
+                    req.eos_id is not None and tok == req.eos_id
+                ):
+                    req.done = True
+                    self.slots.free(slot)
+                    freed.append(slot)
+                    del self.requests[rid]
+                    break
+        if freed:
+            keep = np.ones((self.max_slots,), bool)
+            keep[freed] = False
+            self.state = self._release(self.state, jnp.asarray(keep))
         return out
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One decode iteration (seed-compatible granularity)."""
+        return self.step_block(1)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +369,12 @@ class DecodeEngine:
 
 class DisaggregatedServer:
     """Prefill pool -> KV handoff -> decode pool, continuous batching.
+
+    Each scheduling round drains one same-bucket BATCH of queued prompts per
+    round (greedy: the oldest request picks the bucket, then every queued
+    request in that bucket joins up to ``max_prefill_batch``), admits
+    waiting requests into decode slots, and runs one fused decode block per
+    decode engine.
 
     ``transfer`` is the KV handoff hook: identity on single host; on a real
     cluster it is the pod-to-pod device transfer (see launch/serve.py).
@@ -185,13 +387,16 @@ class DisaggregatedServer:
         *,
         transfer=lambda kv: kv,
         seed: int = 0,
+        max_prefill_batch: int = 8,
     ):
         self.prefills = prefill_engines
         self.decodes = decode_engines
         self.transfer = transfer
         self.key = jax.random.PRNGKey(seed)
+        self.max_prefill_batch = max(1, max_prefill_batch)
         self.queue: List[GenRequest] = []
-        self.waiting: List[Tuple[GenRequest, Any, int, int]] = []  # (req, kv, tok, len)
+        # (req, kv_batch, batch_index, first_token, true_len)
+        self.waiting: List[Tuple[GenRequest, Any, int, int, int]] = []
         self.all_requests: Dict[int, GenRequest] = {}
         self._rr = 0
 
@@ -203,8 +408,20 @@ class DisaggregatedServer:
         self.key, k = jax.random.split(self.key)
         return k
 
+    def _take_bucket_group(self, buckets) -> List[GenRequest]:
+        """Pop the oldest request's bucket-mates (greedy same-bucket batch)."""
+        want = _bucket(len(self.queue[0].prompt), buckets)
+        group, rest = [], []
+        for r in self.queue:
+            if len(group) < self.max_prefill_batch and _bucket(len(r.prompt), buckets) == want:
+                group.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        return group
+
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Drive to completion: prefill queue, admit, decode until done."""
+        """Drive to completion: batched prefill, admit, fused decode blocks."""
         steps = 0
         while (
             self.queue
@@ -212,30 +429,40 @@ class DisaggregatedServer:
             or any(d.requests for d in self.decodes)
         ) and steps < max_steps:
             steps += 1
-            # 1) prefill one queued request per engine (round-robin)
-            if self.queue:
+            # 1) one same-bucket prefill batch per round (round-robin engines).
+            # Gate on free decode capacity: each waiting entry pins its whole
+            # padded batch pack on device, so prefilling ahead of slots the
+            # decode pool can't absorb only accumulates dead KV buffers.
+            free_slots = sum(d.max_slots - d.slots.n_active for d in self.decodes)
+            if self.queue and len(self.waiting) < max(free_slots, 1):
                 eng = self.prefills[self._rr % len(self.prefills)]
                 self._rr += 1
-                req = self.queue.pop(0)
-                tok, kv, true_len = eng.prefill(req, self._next_key())
-                kv = self.transfer(kv)  # KV handoff (pod-to-pod in production)
-                if req.max_new_tokens <= 1:
-                    req.tokens.append(tok)
-                    req.done = True
-                else:
-                    self.waiting.append((req, kv, tok, true_len))
+                group = (
+                    self._take_bucket_group(eng.buckets)
+                    if eng.bucketed
+                    else [self.queue.pop(0)]
+                )
+                pad_to = self.max_prefill_batch if eng.bucketed else None
+                toks, kvb, tls = eng.prefill_batch(group, self._next_key(), pad_to=pad_to)
+                kvb = self.transfer(kvb)  # KV handoff (pod-to-pod in production)
+                for i, req in enumerate(group):
+                    if req.max_new_tokens <= 1:
+                        req.tokens.append(toks[i])
+                        req.done = True
+                    else:
+                        self.waiting.append((req, kvb, i, toks[i], tls[i]))
             # 2) admit waiting requests into free decode slots (most-free first)
             still = []
-            for req, kv, tok, true_len in self.waiting:
+            for req, kvb, bi, tok, true_len in self.waiting:
                 dec = max(self.decodes, key=lambda d: d.max_slots - d.slots.n_active)
                 if dec.slots.n_active < dec.max_slots:
-                    dec.admit(req, kv, tok, true_len)
+                    dec.admit(req, kvb, tok, true_len, batch_index=bi)
                 else:
-                    still.append((req, kv, tok, true_len))
+                    still.append((req, kvb, bi, tok, true_len))
             self.waiting = still
-            # 3) one decode iteration everywhere
+            # 3) one fused decode block everywhere
             for dec in self.decodes:
-                dec.step(self._next_key())
+                dec.step_block()
         return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
 
 
@@ -243,10 +470,11 @@ class MonolithicEngine:
     """Co-located baseline: one engine interleaves prefill and decode."""
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 8, max_len: int = 512,
-                 sampling: SamplingParams = SamplingParams(), seed: int = 0):
+                 sampling: SamplingParams = SamplingParams(), seed: int = 0,
+                 decode_block: int = 8):
         self.prefill = PrefillEngine(params, cfg, sampling)
         self.decode = DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
-                                   sampling=sampling)
+                                   sampling=sampling, seed=seed, decode_block=decode_block)
         self.key = jax.random.PRNGKey(seed)
         self.queue: List[GenRequest] = []
         self.all_requests: Dict[int, GenRequest] = {}
@@ -271,5 +499,5 @@ class MonolithicEngine:
                     req.done = True
                 else:
                     self.decode.admit(req, kv, tok, true_len)
-            self.decode.step(self._next_key())
+            self.decode.step_block()
         return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}

@@ -8,11 +8,27 @@ the software form of the paper's prefill->decode KV handoff.
 
 All cache trees follow the model layout: a list (one entry per pattern
 position) of dicts of stacked [n_repeats, B, ...] arrays.
+
+Device-resident invariants (the serving fast path)
+--------------------------------------------------
+``DecodeState`` bundles EVERYTHING the decode loop touches per step — the
+slot caches, last-emitted tokens, write positions, active mask, and the
+sampling PRNG key — into one pytree that lives on device across steps.  The
+engine jits its step/admit/release transitions with ``donate_argnums`` on
+the state, so XLA updates the KV cache in place instead of re-materializing
+``max_slots * max_len`` KV bytes per token.  The host only syncs on the
+emitted token block (once per ``decode_block`` tokens), never on the state.
+
+Bucketed-prefill contract: a slot row inserted from a right-padded prefill
+may contain garbage K/V at positions [true_len, bucket).  That is safe by
+construction: decode starts writing at position true_len and the attention
+mask only ever reads positions < pos, so every padded position is
+overwritten before it is first attended.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +41,7 @@ Cache = Any
 
 @dataclass
 class SlotState:
-    """Host-side slot bookkeeping (device arrays live in the engine)."""
+    """Host-side slot bookkeeping (device arrays live in ``DecodeState``)."""
 
     max_slots: int
     max_len: int
@@ -53,16 +69,45 @@ class SlotState:
         return sum(r is not None for r in self.request_ids)
 
 
+class DecodeState(NamedTuple):
+    """All decode-loop state, device-resident across steps (one pytree).
+
+    caches     model cache tree, [R, max_slots, max_len, ...] per attn leaf
+    tokens     [max_slots] int32   last emitted token per slot
+    positions  [max_slots] int32   next cache write position per slot
+    active     [max_slots] bool    slot currently owns a live request
+    key        PRNG key consumed one split per decode step
+    """
+
+    caches: Cache
+    tokens: jnp.ndarray
+    positions: jnp.ndarray
+    active: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init_decode_state(cfg: ModelConfig, max_slots: int, max_len: int, key) -> DecodeState:
+    return DecodeState(
+        caches=batch_cache(cfg, max_slots, max_len),
+        tokens=jnp.zeros((max_slots,), jnp.int32),
+        positions=jnp.zeros((max_slots,), jnp.int32),
+        active=jnp.zeros((max_slots,), bool),
+        key=key,
+    )
+
+
 def batch_cache(cfg: ModelConfig, max_slots: int, max_len: int) -> Cache:
     """Zero-initialized slot cache [R, max_slots, max_len, ...]."""
     return M.zeros_cache(cfg, max_slots, max_len)
 
 
-def insert_request(batch: Cache, single: Cache, slot: int, cfg: ModelConfig) -> Cache:
+def insert_request(batch: Cache, single: Cache, slot, cfg: ModelConfig) -> Cache:
     """Insert a prefilled single-request cache (B=1) into ``slot``.
 
     Attention caches copy the prefix [L1] into the slot row; mamba caches
-    (fixed size) replace the row.
+    (fixed size) replace the row.  ``slot`` may be a traced int32 — the
+    engine jits this with the state donated so admits are in-place instead
+    of an un-jitted tree-wide copy.
     """
     out = []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
@@ -71,15 +116,24 @@ def insert_request(batch: Cache, single: Cache, slot: int, cfg: ModelConfig) -> 
         if mixer == "attn":
             def ins(dst, src):
                 # dst [R, S, L, ...], src [R, 1, L1, ...]
-                L1 = src.shape[2]
+                L1 = min(src.shape[2], dst.shape[2])
                 pad = dst.shape[2] - L1
-                row = jnp.pad(src[:, 0], [(0, 0), (0, pad)] + [(0, 0)] * (src.ndim - 3))
+                row = jnp.pad(
+                    src[:, 0, :L1], [(0, 0), (0, pad)] + [(0, 0)] * (src.ndim - 3)
+                )
                 return jax.lax.dynamic_update_index_in_dim(dst, row.astype(dst.dtype), slot, 1)
         else:
             def ins(dst, src):
                 return jax.lax.dynamic_update_index_in_dim(dst, src[:, 0].astype(dst.dtype), slot, 1)
         out.append(jax.tree.map(ins, b, s))
     return out
+
+
+def slice_request(batch: Cache, b) -> Cache:
+    """Slice request ``b`` out of a batched prefill pack -> B=1 pack.
+
+    ``b`` may be traced; used inside jitted admits from batched prefill."""
+    return jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(a, b, 1, axis=1), batch)
 
 
 def extract_request(batch: Cache, slot: int, length: int, cfg: ModelConfig) -> Cache:

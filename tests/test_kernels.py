@@ -144,3 +144,57 @@ def test_ssd_initial_state_chaining():
     )
     assert _mx(jnp.concatenate([y1, y2], 1), y_full) < 1e-4
     assert _mx(s2, s_full) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Bucketed-prefill length masking (serving fast path)
+# ---------------------------------------------------------------------------
+
+
+def test_flash_attention_lengths_masks_padding():
+    """Per-request `lengths` == running each request at its true length."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, S, H, KV, d = 3, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
+    lengths = jnp.array([37, 128, 65])
+    out = flash_attention_pallas(
+        q, k, v, lengths, causal=True, block_q=32, block_k=32, interpret=True
+    )
+    for b in range(B):
+        n = int(lengths[b])
+        want = ref.flash_attention_ref(
+            q[b : b + 1, :n], k[b : b + 1, :n], v[b : b + 1, :n], causal=True
+        )
+        assert _mx(out[b : b + 1, :n], want) < 2e-5
+
+
+def test_flash_attention_lengths_ignore_padding_garbage():
+    """Keys/values beyond lengths[b] must not leak into valid rows."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    B, S, H, KV, d = 2, 96, 4, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
+    lengths = jnp.array([50, 96])
+    out1 = flash_attention_pallas(q, k, v, lengths, block_q=32, block_k=32, interpret=True)
+    k2 = k.at[0, 50:].set(1e4)
+    v2 = v.at[0, 50:].set(-1e4)
+    out2 = flash_attention_pallas(q, k2, v2, lengths, block_q=32, block_k=32, interpret=True)
+    assert _mx(out1[:, :50], out2[:, :50]) == 0.0
+
+
+def test_decode_attention_max_length_bound():
+    """Capping the split grid at the max admitted length changes nothing."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 4)
+    B, L, H, KV, d = 2, 1024, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, H, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, L, KV, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, L, KV, d), jnp.float32)
+    lengths = jnp.array([100, 177])
+    full = decode_attention_pallas(q, kc, vc, lengths, block_s=64, interpret=True)
+    bounded = decode_attention_pallas(
+        q, kc, vc, lengths, block_s=64, max_length=192, interpret=True
+    )
+    assert _mx(full, bounded) == 0.0

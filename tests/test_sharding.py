@@ -6,8 +6,8 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.sharding.partitioning import DEFAULT_RULES, resolve_spec
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+SINGLE = AbstractMesh((("data", 16), ("model", 16)))
+POD = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_basic_resolution():
