@@ -56,7 +56,7 @@ def main():
         if not progressed and submitted >= args.requests:
             break
         # one scheduling + decode round
-        server.run(max_steps=1)
+        server.run_round()
         now = time.perf_counter() - t_start
         for r in server.all_requests.values():
             n_new = len(r.tokens) - before.get(r.rid, 0)

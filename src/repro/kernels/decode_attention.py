@@ -135,3 +135,123 @@ def decode_attention_pallas(
         interpret=interpret,
     )(lengths.astype(jnp.int32), qt, kt, vt)
     return out.reshape(B, H, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: K/V pages gathered through a block table
+# ---------------------------------------------------------------------------
+
+
+def _paged_dec_kernel(
+    lengths_ref,  # [B] int32 (scalar prefetch, SMEM)
+    bt_ref,  # [B, n_pg] int32 (scalar prefetch, SMEM)
+    q_ref,  # [1, 1, G, d]
+    k_ref,  # [1, 1, ps, d]  -- the page bt_ref[b, si], DMA'd via the index map
+    v_ref,  # [1, 1, ps, d]
+    o_ref,  # [1, 1, G, d]
+    m_scr, l_scr, acc_scr,  # [G, 1], [G, 1], [G, d] f32
+    *,
+    scale: float,
+    page_size: int,
+    ns: int,
+):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    @pl.when(si * page_size < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [ps, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, ps]
+        k_pos = si * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("max_length", "interpret"))
+def decode_attention_paged_pallas(
+    q, k_pool, v_pool, block_tables, lengths,
+    *,
+    max_length: int = None,
+    interpret: bool = False,
+):
+    """q [B,H,d]; k_pool/v_pool [P, ps, KV, d]; block_tables [B, n_pg] int32;
+    lengths [B] -> [B,H,d].
+
+    The paged form of the split-K streaming kernel: one grid split per KV
+    *page*, with the physical page id gathered from the scalar-prefetched
+    block table inside the BlockSpec index map — so the DMA pipeline streams
+    exactly the pages the block table names, no gather materialization.
+    ``lengths`` masking is unchanged from the slab kernel; table entries past
+    a request's length may point anywhere valid (e.g. the trash page), their
+    scores are masked to -inf before the online-softmax merge.
+
+    ``max_length``: static upper bound on ``lengths`` — caps the split grid
+    at ceil(max_length / page_size) pages, exactly like the slab kernel's
+    split bound.
+    """
+    B, H, d = q.shape
+    P, ps, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    n_pg = block_tables.shape[1]
+    G = H // KV
+    scale = d ** -0.5
+
+    ns = n_pg if max_length is None else max(1, min(n_pg, -(-int(max_length) // ps)))
+    qt = q.reshape(B, KV, G, d)
+    kt = jnp.moveaxis(k_pool, 2, 1)  # [P, KV, ps, d]
+    vt = jnp.moveaxis(v_pool, 2, 1)
+
+    kernel = functools.partial(_paged_dec_kernel, scale=scale, page_size=ps, ns=ns)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, ps, d), lambda b, kv, si, lens, bt: (bt[b, si], kv, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, ps, d), lambda b, kv, si, lens, bt: (bt[b, si], kv, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qt, kt, vt)
+    return out.reshape(B, H, d)

@@ -61,6 +61,21 @@ def decode_attention(q, k_cache, v_cache, lengths):
     return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
 
 
+@jax.jit
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths):
+    """Paged decode attention: K/V pages gathered via per-request block tables.
+
+    q [B,H,d]; k_pool/v_pool [P, page_size, KV, d]; block_tables [B, n_pg]
+    int32; lengths [B] (valid prefix, same masking as the slab kernel)."""
+    if _use_pallas():
+        from .decode_attention import decode_attention_paged_pallas
+
+        return decode_attention_paged_pallas(
+            q, k_pool, v_pool, block_tables, lengths, interpret=_interpret()
+        )
+    return _ref.decode_attention_paged_ref(q, k_pool, v_pool, block_tables, lengths)
+
+
 def ssd(x, dt, A, B, C, *, chunk: int = 128, initial_state=None):
     """Dispatched inside model code (already under jit)."""
     if _use_pallas() and _IMPL in ("pallas", "interpret"):

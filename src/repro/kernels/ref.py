@@ -62,6 +62,24 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     return o.reshape(B, H, d)
 
 
+def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Paged decode oracle: gather pages through the block table, then the
+    contiguous decode reference.
+
+    q [B,H,d]; k_pool/v_pool [P, ps, KV, d]; block_tables [B, n_pg] int32;
+    lengths [B].  Table entries past a request's length may point anywhere
+    valid (typically the trash page) — those positions are masked."""
+    B = q.shape[0]
+    n_pg = block_tables.shape[1]
+    ps = k_pool.shape[1]
+
+    def gather(pool):
+        rows = pool[block_tables]  # [B, n_pg, ps, KV, d]
+        return rows.reshape((B, n_pg * ps) + rows.shape[3:])
+
+    return decode_attention_ref(q, gather(k_pool), gather(v_pool), lengths)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD oracle (chunked scan, f32 internals, memory-bounded)
 # ---------------------------------------------------------------------------

@@ -42,6 +42,13 @@ def main():
                     help="max same-bucket prompts prefilled per batch")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable decode-state buffer donation (debugging)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page pools + block tables + "
+                         "device-resident allocator (vs per-slot slabs)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV positions per page (paged mode)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="pool size in pages (default: slab-equivalent HBM)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -53,7 +60,8 @@ def main():
     decodes = [
         DecodeEngine(params, cfg, max_slots=args.max_slots, max_len=args.max_len, sampling=sp,
                      decode_block=args.decode_block, donate=not args.no_donate,
-                     seed=args.seed + i)
+                     seed=args.seed + i, paged=args.paged, page_size=args.page_size,
+                     n_pages=args.pages)
         for i in range(args.decode_engines)
     ]
     srv = DisaggregatedServer(prefills, decodes, seed=args.seed,

@@ -71,6 +71,17 @@ def _cache_write(cache_arr, new, pos, scalar: bool):
     return jnp.where(mask, new.astype(cache_arr.dtype), cache_arr)
 
 
+def gather_pages(pool, block_tables):
+    """Paged-KV view: pool [P, ps, ...] + block_tables [B, n_pg] -> [B, n_pg*ps, ...].
+
+    Unmapped table entries point at the trash page; those positions are
+    always >= the request's write position and masked by the decode kernels
+    (the mask reads strictly < pos), so trash contents are never attended."""
+    rows = pool[block_tables]  # [B, n_pg, ps, ...]
+    B, n_pg, ps = rows.shape[:3]
+    return rows.reshape((B, n_pg * ps) + rows.shape[3:])
+
+
 def alibi_slopes(n_heads: int):
     """Standard ALiBi slopes for any head count (BLOOM uses 112 heads)."""
 
@@ -272,7 +283,7 @@ def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool, true_l
     return out, cache
 
 
-def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None):
+def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=None):
     """x [B,1,D]; cache {k,v:[B,L,KV,dh]}; pos scalar or [B] -> (out, delta).
 
     The cache is consumed READ-ONLY: the fresh token's K/V contribute via a
@@ -280,6 +291,13 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None):
     merged into the cache once per step *outside* the layer scan
     (model.merge_cache_deltas).  Writing inside the scan makes XLA
     materialize per-iteration copies of the whole stacked cache.
+
+    ``block_tables`` [B, n_pg] switches the cache to the paged layout
+    {k,v: [P, ps, KV, dh]}: K/V rows are gathered per request through the
+    table (the XLA path; on TPU the Pallas kernel in
+    kernels/decode_attention.py streams pages without materializing the
+    gather).  The attention math past the gather is byte-for-byte the slab
+    path, so paged and slab decode emit bit-identical streams.
     """
     B = x.shape[0]
     pos_b, scalar = _norm_pos(pos, B)
@@ -290,8 +308,10 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None):
         k = apply_rope_vec(k, cos, sin)
     k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
     v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
-    ck = constrain(cache["k"], ("batch", "kv_seq", "kv_heads", "head_dim"))
-    cv = constrain(cache["v"], ("batch", "kv_seq", "kv_heads", "head_dim"))
+    ck = cache["k"] if block_tables is None else gather_pages(cache["k"], block_tables)
+    cv = cache["v"] if block_tables is None else gather_pages(cache["v"], block_tables)
+    ck = constrain(ck, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    cv = constrain(cv, ("batch", "kv_seq", "kv_heads", "head_dim"))
     L = ck.shape[1]
     H, KV = cfg.n_heads, cfg.n_kv_heads
     G = H // KV
@@ -422,12 +442,14 @@ def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
     return out, cache
 
 
-def mla_decode(p, x, cfg: ModelConfig, cache, pos):
+def mla_decode(p, x, cfg: ModelConfig, cache, pos, *, block_tables=None):
     """Matmul-absorbed MLA decode over the compressed cache (TPU-native path).
 
     Mathematically identical to expanding K/V (unit-tested); per-step cost is
     O(S * kv_lora) per head instead of O(S * (nope+v)) plus no expanded cache.
     Cache is read-only; returns delta {ckv, k_rope: [B, r]} (see gqa_decode).
+    ``block_tables`` gathers the compressed cache through page tables (paged
+    layout {ckv, k_rope: [P, ps, r]}), same contract as gqa_decode.
     """
     a = cfg.mla
     B = x.shape[0]
@@ -444,8 +466,12 @@ def mla_decode(p, x, cfg: ModelConfig, cache, pos):
     ckv_new = _rms_head(ckv_full[..., : a.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
     krope_new = apply_rope_vec(ckv_full[..., a.kv_lora_rank :][:, :, None, :], cos, sin)[:, :, 0, :]
 
-    ckv = constrain(cache["ckv"], ("batch", "kv_seq", "kv_lora"))
-    krope = constrain(cache["k_rope"], ("batch", "kv_seq", None))
+    ckv = cache["ckv"] if block_tables is None else gather_pages(cache["ckv"], block_tables)
+    krope = (
+        cache["k_rope"] if block_tables is None else gather_pages(cache["k_rope"], block_tables)
+    )
+    ckv = constrain(ckv, ("batch", "kv_seq", "kv_lora"))
+    krope = constrain(krope, ("batch", "kv_seq", None))
     wk_b = p["wkv_b"][..., : a.qk_nope_head_dim]  # [r, H, nope]
     wv_b = p["wkv_b"][..., a.qk_nope_head_dim :]  # [r, H, v]
     q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk_b)

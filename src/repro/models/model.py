@@ -189,6 +189,31 @@ def zeros_cache(cfg: ModelConfig, B: int, Lc: int):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), init_cache_specs(cfg, B, Lc))
 
 
+def init_paged_cache_specs(cfg: ModelConfig, max_slots: int, n_pages: int, page_size: int):
+    """Paged decode-cache tree: attention leaves become page pools
+    ``[R, n_pages, page_size, ...]`` (slot rows -> block-table indirection,
+    see serving/kvcache.py); mamba state is fixed-size per request and stays
+    per-slot ``[R, max_slots, ...]``."""
+    R = cfg.n_repeats
+    out = []
+    for mixer, _ in cfg.block_pattern:
+        B = n_pages if mixer == "attn" else max_slots
+        spec = _mixer_cache_spec(cfg, mixer, B, page_size)
+        out.append(
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((R,) + tuple(s.shape), s.dtype), spec
+            )
+        )
+    return out
+
+
+def zeros_paged_cache(cfg: ModelConfig, max_slots: int, n_pages: int, page_size: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        init_paged_cache_specs(cfg, max_slots, n_pages, page_size),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Forward passes
 # ---------------------------------------------------------------------------
@@ -217,6 +242,7 @@ def _block_apply(
     slopes=None,
     n_groups: int = 1,
     true_len=None,
+    block_tables=None,
 ):
     """One (mixer, ffn) block. Returns (x, new_cache, aux)."""
     aux = {}
@@ -224,9 +250,14 @@ def _block_apply(
     if mixer == "attn":
         if mode == "decode":
             if cfg.attn_type == "mla":
-                a_out, new_cache = attn.mla_decode(bp["mixer"], h, cfg, cache, pos)
+                a_out, new_cache = attn.mla_decode(
+                    bp["mixer"], h, cfg, cache, pos, block_tables=block_tables
+                )
             else:
-                a_out, new_cache = attn.gqa_decode(bp["mixer"], h, cfg, cache, pos, slopes=slopes)
+                a_out, new_cache = attn.gqa_decode(
+                    bp["mixer"], h, cfg, cache, pos, slopes=slopes,
+                    block_tables=block_tables,
+                )
         else:
             want = mode == "prefill"
             if cfg.attn_type == "mla":
@@ -267,7 +298,7 @@ def _zero_aux():
 
 
 def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_groups=1,
-               remat: bool = False, true_len=None):
+               remat: bool = False, true_len=None, block_tables=None):
     """Scan over n_repeats; pattern positions applied sequentially in the body."""
     slopes = _slopes(cfg)
     P = len(cfg.block_pattern)
@@ -281,7 +312,7 @@ def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_gr
             x_new, nc, aux = _block_apply(
                 reps[i], x, cfg, mixer, ffn,
                 mode=mode, cache=c, pos=pos, slopes=slopes, n_groups=n_groups,
-                true_len=true_len,
+                true_len=true_len, block_tables=block_tables,
             )
             x = x_new
             new_caches.append(nc)
@@ -377,22 +408,41 @@ def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
     return logits, caches, aux
 
 
-def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int):
+def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int, *, block_tables=None):
     """Write every layer's fresh-token K/V into the caches in one pass.
 
-    Attention deltas are [R, B, ...] (one token per row); caches are
-    [R, B, L, ...].  A single masked select per cache tensor keeps the
-    update shard-local under any sequence sharding.  Mamba deltas are the
-    full (fixed-size) new states and simply replace the old cache."""
+    Attention deltas are [R, B, ...] (one token per row).  Slab caches are
+    [R, B, L, ...]: a single masked select per cache tensor keeps the update
+    shard-local under any sequence sharding (positions >= L match nothing and
+    are dropped — overshoot writes cannot clamp onto the last position).
+
+    With ``block_tables`` [B, n_pg] the caches are page pools
+    [R, n_pages+1, page_size, ...]: the write scatters each row's delta into
+    (block_tables[b, pos // ps], pos % ps); rows whose position is out of
+    range — released slots (trash-mapped tables) or positions past max_len —
+    land on the trash page.  Mamba deltas are the full (fixed-size) new
+    states and simply replace the old cache."""
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
     out = []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer == "attn":
-            def wr(cache, d):
-                Lc = cache.shape[2]
-                mask = jnp.arange(Lc)[None, :] == pos_b[:, None]  # [B, L]
-                mask = mask.reshape((1,) + mask.shape + (1,) * (cache.ndim - 3))
-                return jnp.where(mask, d[:, :, None].astype(cache.dtype), cache)
+            if block_tables is None:
+                def wr(cache, d):
+                    Lc = cache.shape[2]
+                    mask = jnp.arange(Lc)[None, :] == pos_b[:, None]  # [B, L]
+                    mask = mask.reshape((1,) + mask.shape + (1,) * (cache.ndim - 3))
+                    return jnp.where(mask, d[:, :, None].astype(cache.dtype), cache)
+            else:
+                n_pg = block_tables.shape[1]
+
+                def wr(cache, d):
+                    ps = cache.shape[2]
+                    trash = cache.shape[1] - 1
+                    pg = block_tables[
+                        jnp.arange(B), jnp.clip(pos_b // ps, 0, n_pg - 1)
+                    ]
+                    pg = jnp.where(pos_b < n_pg * ps, pg, trash)
+                    return cache.at[:, pg, pos_b % ps].set(d.astype(cache.dtype))
 
             out.append(jax.tree.map(wr, caches[i], deltas[i]))
         else:
@@ -400,8 +450,14 @@ def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int):
     return out
 
 
-def decode_step(params, tok, caches, pos, cfg: ModelConfig, *, n_groups: int = 1):
+def decode_step(params, tok, caches, pos, cfg: ModelConfig, *, n_groups: int = 1,
+                block_tables=None):
     """One decode step.  tok [B] int32 (or [B,1,D] embeds); pos scalar or [B].
+
+    ``block_tables`` [B, n_pg] switches attention caches to the paged layout
+    (page pools + per-request block tables, see serving/kvcache.py); the
+    attention mixers gather K/V pages through the table and the fresh-token
+    write scatters into (page, offset).
 
     Returns (logits [B,V], new caches)."""
     if jnp.issubdtype(tok.dtype, jnp.integer):
@@ -414,8 +470,9 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig, *, n_groups: int = 1
         pos_v = jnp.broadcast_to(jnp.asarray(pos), (B,))
         x = x + jnp.take(params["embed"]["pos"], pos_v, axis=0)[:, None]
     x = constrain(x, ("batch", None, None))
-    x, deltas, _ = _run_stack(params, x, cfg, mode="decode", caches=caches, pos=pos, n_groups=n_groups)
-    new_caches = merge_cache_deltas(cfg, caches, deltas, pos, B)
+    x, deltas, _ = _run_stack(params, x, cfg, mode="decode", caches=caches, pos=pos,
+                              n_groups=n_groups, block_tables=block_tables)
+    new_caches = merge_cache_deltas(cfg, caches, deltas, pos, B, block_tables=block_tables)
     x = L.norm_apply(params["final_norm"], x, cfg)
     logits = L.unembed_apply(params["embed"], x[:, 0], cfg)
     logits = constrain(logits, ("batch", "vocab"))

@@ -5,5 +5,6 @@ from .engine import (  # noqa: F401
     GenRequest,
     MonolithicEngine,
     PrefillEngine,
+    SchedulerExhausted,
 )
 from .sampling import SamplingParams, sample  # noqa: F401

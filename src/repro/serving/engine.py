@@ -33,7 +33,6 @@ bucketed batched prefill — is the real thing.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -61,10 +60,33 @@ class GenRequest:
 
 
 def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest bucket holding ``n``; raises past the largest bucket.
+
+    The old next-power-of-two fallback silently minted a fresh jit key per
+    oversized length (unbounded compile cache) and let prompts that cannot
+    fit any decode slot fail only at admit time — servers now reject such
+    prompts up front in ``submit()``."""
     for b in buckets:
         if n <= b:
             return b
-    return int(2 ** math.ceil(math.log2(n)))
+    raise ValueError(
+        f"prompt length {n} exceeds the largest prefill bucket {buckets[-1]}; "
+        f"extend `buckets` or reject the request at submit()"
+    )
+
+
+class SchedulerExhausted(RuntimeError):
+    """``run(max_steps=...)`` ran out of scheduling rounds with work left.
+
+    Carries what finished (``done``: rid -> tokens) and what did not
+    (``unfinished``: rids still queued / waiting / decoding) instead of
+    silently dropping in-flight requests.  Server state is left intact, so
+    calling ``run()`` again resumes where it stopped."""
+
+    def __init__(self, msg: str, done: Dict[int, List[int]], unfinished: List[int]):
+        super().__init__(msg)
+        self.done = done
+        self.unfinished = unfinished
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +209,17 @@ class DecodeEngine:
     The engine owns its sampling PRNG key (inside ``DecodeState``), split
     once per decode step — so token streams are bit-identical between
     ``step_block(k)`` and k calls of ``step_block(1)`` under a fixed seed.
+
+    ``paged=True`` switches the KV cache to the paged layout
+    (``kvcache.PagedDecodeState``): attention slabs become page pools shared
+    across slots, each slot holds a block table, and pages are allocated on
+    demand inside the fused decode scan by the device-resident allocator.
+    Admission becomes KV-capacity aware: a request needs a free slot AND
+    enough unreserved pages for its prompt plus a growth reservation
+    (max_new_tokens + the decode-block overshoot margin), so ``max_slots``
+    can exceed what slab HBM would allow and short requests no longer pin
+    ``max_len`` positions each.  Token streams are bit-identical to the slab
+    engine under a fixed seed (same math, same PRNG stream).
     """
 
     def __init__(
@@ -200,6 +233,9 @@ class DecodeEngine:
         decode_block: int = 8,
         donate: bool = True,
         seed: int = 0,
+        paged: bool = False,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -208,16 +244,30 @@ class DecodeEngine:
         self.sampling = sampling
         self.decode_block = max(1, decode_block)
         self.donate = donate
+        self.paged = paged
         self.slots = kvcache.SlotState(max_slots, max_len)
         # fold_in a tag so the decode sampling stream is never the same
         # threefry stream as a server/prefill PRNGKey(seed) chain
-        self.state = kvcache.init_decode_state(
-            cfg, max_slots, max_len, jax.random.fold_in(jax.random.PRNGKey(seed), 1)
-        )
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+        if paged:
+            if max_len % page_size:
+                raise ValueError(f"max_len {max_len} not a multiple of page_size {page_size}")
+            self.page_size = page_size
+            self.pages_per_slot = max_len // page_size
+            # default pool: the slab engine's HBM budget, in pages
+            self.n_pages = n_pages if n_pages is not None else max_slots * self.pages_per_slot
+            self._reserved = [0] * max_slots  # pages reserved per slot (host mirror)
+            self.state: Any = kvcache.init_paged_decode_state(
+                cfg, max_slots, max_len, page_size, self.n_pages, key
+            )
+        else:
+            self.state = kvcache.init_decode_state(cfg, max_slots, max_len, key)
         self.requests: Dict[int, GenRequest] = {}
         self._block_fns: Dict[int, Any] = {}  # k -> jitted fused block
         self._admit_fns: Dict[Tuple[int, int], Any] = {}  # (L1, B) -> jitted admit
-        self._release = self._jit(self._release_impl)
+        self._release = self._jit(
+            kvcache.paged_release if paged else self._release_impl
+        )
 
     # -- jitted state transitions (all donate the DecodeState) --------------
 
@@ -233,25 +283,94 @@ class DecodeEngine:
 
     def _block_fn(self, k: int):
         if k not in self._block_fns:
-            cfg, sampling = self.cfg, self.sampling
+            cfg, sampling, max_len = self.cfg, self.sampling, self.max_len
 
-            def blk(params, state: kvcache.DecodeState):
-                def one(st: kvcache.DecodeState, _):
-                    key, sub = jax.random.split(st.key)
-                    logits, caches = M.decode_step(
-                        params, st.tokens, st.caches, st.positions, cfg
+            if self.paged:
+                ps, n_pg = self.page_size, self.pages_per_slot
+                rows = jnp.arange(self.max_slots)
+
+                def blk(params, state: kvcache.PagedDecodeState):
+                    # On-demand page allocation, hoisted to block granularity:
+                    # the k steps of this block write positions [pos, pos+k)
+                    # per slot, so each slot crosses at most k // ps + 1 page
+                    # boundaries — map those pages up front (the admission
+                    # reservation guarantees free pages exist).  Still one
+                    # dispatch, zero host syncs.
+                    owner, bt = state.page_owner, state.block_tables
+                    first = ((state.positions + ps - 1) // ps) * ps
+                    for j in range(k // ps + 1):
+                        b_pos = first + j * ps
+                        need = state.active & (b_pos < state.positions + k) & (
+                            b_pos < max_len
+                        )
+                        owner, new_pages = kvcache.alloc_decode_pages(owner, need)
+                        # scatter fresh pages into the needing slots' table rows
+                        # only; other rows aim at column n_pg and are dropped
+                        cur = jnp.where(need, b_pos // ps, n_pg)
+                        bt = bt.at[rows, cur].set(new_pages, mode="drop")
+
+                    # Gather the slab-layout view of the pools ONCE, run the k
+                    # steps against it (byte-for-byte the slab scan body, so
+                    # per-step cost and token streams match the slab engine),
+                    # then write the block's fresh positions back to the pool.
+                    # The view is transient within this jitted block.
+                    pos0 = state.positions
+                    active = state.active
+                    view = kvcache.paged_gather_view(state.caches, bt, cfg)
+
+                    def one(carry, _):
+                        view, tokens, positions, key = carry
+                        key, sub = jax.random.split(key)
+                        logits, view = M.decode_step(
+                            params, tokens, view, positions, cfg
+                        )
+                        nxt = sample(logits, sub, sampling)
+                        nxt = jnp.where(active, nxt, tokens)
+                        # overshoot guard: stop advancing at max_len (see slab path)
+                        positions = jnp.where(
+                            active & (positions < max_len), positions + 1, positions
+                        )
+                        return (view, nxt, positions, key), nxt
+
+                    (view, tokens, positions, key), toks = jax.lax.scan(
+                        one, (view, state.tokens, pos0, state.key), None, length=k
                     )
-                    nxt = sample(logits, sub, sampling)
-                    # inactive slots keep emitting their old token (masked on host)
-                    nxt = jnp.where(st.active, nxt, st.tokens)
-                    positions = jnp.where(st.active, st.positions + 1, st.positions)
+                    caches = kvcache.paged_writeback(
+                        state.caches, view, bt, pos0, k, cfg
+                    )
                     return (
-                        kvcache.DecodeState(caches, nxt, positions, st.active, key),
-                        nxt,
+                        kvcache.PagedDecodeState(
+                            caches, bt, owner, tokens, positions, active, key
+                        ),
+                        toks,  # [k, max_slots]
                     )
+            else:
 
-                state, toks = jax.lax.scan(one, state, None, length=k)
-                return state, toks  # toks [k, max_slots]
+                def blk(params, state: kvcache.DecodeState):
+                    def one(st: kvcache.DecodeState, _):
+                        key, sub = jax.random.split(st.key)
+                        logits, caches = M.decode_step(
+                            params, st.tokens, st.caches, st.positions, cfg
+                        )
+                        nxt = sample(logits, sub, sampling)
+                        # inactive slots keep emitting their old token (masked on host)
+                        nxt = jnp.where(st.active, nxt, st.tokens)
+                        # overshoot guard: a slot whose request finished mid-block
+                        # stays active until the post-block release; freeze its
+                        # position at max_len so the KV write (masked `== pos`)
+                        # and the page lookup in the paged twin never run past
+                        # the cache — no garbage writes, no unbounded positions
+                        positions = jnp.where(
+                            st.active & (st.positions < max_len),
+                            st.positions + 1, st.positions,
+                        )
+                        return (
+                            kvcache.DecodeState(caches, nxt, positions, st.active, key),
+                            nxt,
+                        )
+
+                    state, toks = jax.lax.scan(one, state, None, length=k)
+                    return state, toks  # toks [k, max_slots]
 
             self._block_fns[k] = self._jit(blk, donate_state_argnum=1)
         return self._block_fns[k]
@@ -266,19 +385,63 @@ class DecodeEngine:
         if key not in self._admit_fns:
             cfg = self.cfg
 
-            def adm(state: kvcache.DecodeState, kv, b, slot, token, pos):
-                single = kvcache.slice_request(kv, b)
-                caches = kvcache.insert_request(state.caches, single, slot, cfg)
-                return kvcache.DecodeState(
-                    caches=caches,
-                    tokens=state.tokens.at[slot].set(token),
-                    positions=state.positions.at[slot].set(pos),
-                    active=state.active.at[slot].set(True),
-                    key=state.key,
-                )
+            if self.paged:
+                ps = self.page_size
+
+                def adm(state: kvcache.PagedDecodeState, kv, b, slot, token, pos):
+                    single = kvcache.slice_request(kv, b)
+                    return kvcache.paged_admit(
+                        state, single, slot, token, pos, cfg, page_size=ps
+                    )
+            else:
+
+                def adm(state: kvcache.DecodeState, kv, b, slot, token, pos):
+                    single = kvcache.slice_request(kv, b)
+                    caches = kvcache.insert_request(state.caches, single, slot, cfg)
+                    return kvcache.DecodeState(
+                        caches=caches,
+                        tokens=state.tokens.at[slot].set(token),
+                        positions=state.positions.at[slot].set(pos),
+                        active=state.active.at[slot].set(True),
+                        key=state.key,
+                    )
 
             self._admit_fns[key] = self._jit(adm)
         return self._admit_fns[key]
+
+    # -- admission capacity (KV-capacity-aware for the paged cache) ---------
+
+    def _pages_needed(self, true_len: int, max_new_tokens: int) -> int:
+        """Pages to reserve at admit: the prompt + every decode write the
+        request can make, including up to ``decode_block - 1`` overshoot
+        steps after it finishes mid-block, capped at ``max_len``."""
+        cap = min(true_len + max_new_tokens + self.decode_block - 2, self.max_len)
+        cap = max(cap, true_len)
+        return -(-cap // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        """Unreserved pages (host mirror; only meaningful when paged)."""
+        return self.n_pages - sum(self._reserved) if self.paged else 0
+
+    def can_ever_admit(self, true_len: int, max_new_tokens: int) -> bool:
+        """Whether this request could be admitted to an EMPTY engine."""
+        if true_len + max_new_tokens > self.max_len:
+            return False
+        if self.paged and self._pages_needed(true_len, max_new_tokens) > self.n_pages:
+            return False
+        return True
+
+    def can_admit(self, true_len: int, max_new_tokens: int) -> bool:
+        """Whether admission would succeed right now: a free slot AND (paged)
+        enough unreserved pages for prompt + growth reservation."""
+        if not self.can_ever_admit(true_len, max_new_tokens):
+            return False
+        if self.slots.n_active >= self.max_slots:
+            return False
+        if self.paged and self._pages_needed(true_len, max_new_tokens) > self.free_pages:
+            return False
+        return True
 
     # -- public API ---------------------------------------------------------
 
@@ -294,12 +457,24 @@ class DecodeEngine:
         """Insert a prefilled request into a free slot (the KV handoff).
 
         ``kv_pack`` may be a batched prefill pack; ``batch_index`` selects
-        the row, sliced out on device inside the jitted admit."""
+        the row, sliced out on device inside the jitted admit.  Returns None
+        when the engine is momentarily full (no slot, or — paged — not enough
+        unreserved pages); raises when the request can never fit."""
         if true_len + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.rid} needs {true_len + req.max_new_tokens} > max_len")
+        if self.paged:
+            need = self._pages_needed(true_len, req.max_new_tokens)
+            if need > self.n_pages:
+                raise ValueError(
+                    f"request {req.rid} needs {need} pages > pool of {self.n_pages}"
+                )
+            if need > self.free_pages:
+                return None
         slot = self.slots.alloc(req.rid)
         if slot is None:
             return None
+        if self.paged:
+            self._reserved[slot] = need
         self.state = self._admit_fn(kv_pack)(
             self.state,
             kv_pack,
@@ -330,6 +505,9 @@ class DecodeEngine:
         if self.slots.n_active == 0:
             return []
         k = k if k is not None else self._auto_block()
+        if self.paged and k > self.decode_block:
+            # the page reservation only covers decode_block-1 overshoot steps
+            raise ValueError(f"paged step_block k={k} > decode_block={self.decode_block}")
         self.state, toks = self._block_fn(k)(self.params, self.state)
         block = np.asarray(toks)  # [k, max_slots] — the one host sync
         out: List[Tuple[int, int]] = []
@@ -354,6 +532,9 @@ class DecodeEngine:
         if freed:
             keep = np.ones((self.max_slots,), bool)
             keep[freed] = False
+            if self.paged:
+                for s in freed:
+                    self._reserved[s] = 0
             self.state = self._release(self.state, jnp.asarray(keep))
         return out
 
@@ -398,9 +579,30 @@ class DisaggregatedServer:
         # (req, kv_batch, batch_index, first_token, true_len)
         self.waiting: List[Tuple[GenRequest, Any, int, int, int]] = []
         self.all_requests: Dict[int, GenRequest] = {}
+        self.peak_active = 0  # max concurrent decode requests seen (for benchmarks)
         self._rr = 0
 
     def submit(self, req: GenRequest):
+        """Queue a request, rejecting up front what the cluster can never
+        serve: prompts past the largest prefill bucket (the old path minted an
+        unbounded jit key per oversized length) and prompt+max_new combinations
+        no decode engine has capacity for (the old path blew up only at admit)."""
+        n = len(req.prompt)
+        limits = [e.buckets[-1] for e in self.prefills if e.bucketed]
+        if limits and n > min(limits):
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} exceeds the largest "
+                f"prefill bucket {min(limits)}"
+            )
+        if req.max_new_tokens > 1 and not any(
+            d.can_ever_admit(n, req.max_new_tokens) for d in self.decodes
+        ):
+            cap = max(d.max_len for d in self.decodes)
+            raise ValueError(
+                f"request {req.rid}: prompt {n} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds every decode engine's capacity "
+                f"(max_len {cap})"
+            )
         self.queue.append(req)
         self.all_requests[req.rid] = req
 
@@ -420,49 +622,76 @@ class DisaggregatedServer:
         self.queue = rest
         return group
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Drive to completion: batched prefill, admit, fused decode blocks."""
-        steps = 0
-        while (
-            self.queue
-            or self.waiting
-            or any(d.requests for d in self.decodes)
-        ) and steps < max_steps:
-            steps += 1
-            # 1) one same-bucket prefill batch per round (round-robin engines).
-            # Gate on free decode capacity: each waiting entry pins its whole
-            # padded batch pack on device, so prefilling ahead of slots the
-            # decode pool can't absorb only accumulates dead KV buffers.
-            free_slots = sum(d.max_slots - d.slots.n_active for d in self.decodes)
-            if self.queue and len(self.waiting) < max(free_slots, 1):
-                eng = self.prefills[self._rr % len(self.prefills)]
-                self._rr += 1
-                group = (
-                    self._take_bucket_group(eng.buckets)
-                    if eng.bucketed
-                    else [self.queue.pop(0)]
-                )
-                pad_to = self.max_prefill_batch if eng.bucketed else None
-                toks, kvb, tls = eng.prefill_batch(group, self._next_key(), pad_to=pad_to)
-                kvb = self.transfer(kvb)  # KV handoff (pod-to-pod in production)
-                for i, req in enumerate(group):
-                    if req.max_new_tokens <= 1:
-                        req.tokens.append(toks[i])
-                        req.done = True
-                    else:
-                        self.waiting.append((req, kvb, i, toks[i], tls[i]))
-            # 2) admit waiting requests into free decode slots (most-free first)
-            still = []
-            for req, kvb, bi, tok, true_len in self.waiting:
-                dec = max(self.decodes, key=lambda d: d.max_slots - d.slots.n_active)
-                if dec.slots.n_active < dec.max_slots:
-                    dec.admit(req, kvb, tok, true_len, batch_index=bi)
+    def _pending(self) -> bool:
+        return bool(
+            self.queue or self.waiting or any(d.requests for d in self.decodes)
+        )
+
+    def run_round(self):
+        """One scheduling round: batched prefill, admit, fused decode blocks."""
+        # 1) one same-bucket prefill batch per round (round-robin engines).
+        # Gate on free decode capacity: each waiting entry pins its whole
+        # padded batch pack on device, so prefilling ahead of slots the
+        # decode pool can't absorb only accumulates dead KV buffers.
+        free_slots = sum(d.max_slots - d.slots.n_active for d in self.decodes)
+        if self.queue and len(self.waiting) < max(free_slots, 1):
+            eng = self.prefills[self._rr % len(self.prefills)]
+            self._rr += 1
+            group = (
+                self._take_bucket_group(eng.buckets)
+                if eng.bucketed
+                else [self.queue.pop(0)]
+            )
+            pad_to = self.max_prefill_batch if eng.bucketed else None
+            toks, kvb, tls = eng.prefill_batch(group, self._next_key(), pad_to=pad_to)
+            kvb = self.transfer(kvb)  # KV handoff (pod-to-pod in production)
+            for i, req in enumerate(group):
+                if req.max_new_tokens <= 1:
+                    req.tokens.append(toks[i])
+                    req.done = True
                 else:
-                    still.append((req, kvb, bi, tok, true_len))
-            self.waiting = still
-            # 3) one fused decode block everywhere
-            for dec in self.decodes:
-                dec.step_block()
+                    self.waiting.append((req, kvb, i, toks[i], tls[i]))
+        # 2) admit waiting requests into decode engines with capacity (a free
+        # slot and, for paged engines, enough unreserved KV pages) — most
+        # spare capacity first
+        still = []
+        for req, kvb, bi, tok, true_len in self.waiting:
+            cands = [
+                d for d in self.decodes if d.can_admit(true_len, req.max_new_tokens)
+            ]
+            admitted = False
+            if cands:
+                dec = max(cands, key=lambda d: d.max_slots - d.slots.n_active)
+                admitted = dec.admit(req, kvb, tok, true_len, batch_index=bi) is not None
+            if not admitted:
+                still.append((req, kvb, bi, tok, true_len))
+        self.waiting = still
+        self.peak_active = max(
+            self.peak_active, sum(d.slots.n_active for d in self.decodes)
+        )
+        # 3) one fused decode block everywhere
+        for dec in self.decodes:
+            dec.step_block()
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive to completion.  Raises ``SchedulerExhausted`` (carrying the
+        finished and unfinished request ids) if ``max_steps`` rounds pass with
+        requests still in flight, instead of silently dropping them."""
+        steps = 0
+        while self._pending() and steps < max_steps:
+            steps += 1
+            self.run_round()
+        if self._pending():
+            done = {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
+            unfinished = sorted(
+                rid for rid, r in self.all_requests.items() if not r.done
+            )
+            raise SchedulerExhausted(
+                f"hit max_steps={max_steps} with {len(unfinished)} request(s) "
+                f"unfinished: {unfinished[:8]}{'...' if len(unfinished) > 8 else ''}",
+                done=done,
+                unfinished=unfinished,
+            )
         return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
 
 
@@ -471,15 +700,31 @@ class MonolithicEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 8, max_len: int = 512,
                  sampling: SamplingParams = SamplingParams(), seed: int = 0,
-                 decode_block: int = 8):
+                 decode_block: int = 8, paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         self.prefill = PrefillEngine(params, cfg, sampling)
         self.decode = DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
-                                   sampling=sampling, seed=seed, decode_block=decode_block)
+                                   sampling=sampling, seed=seed, decode_block=decode_block,
+                                   paged=paged, page_size=page_size, n_pages=n_pages)
         self.key = jax.random.PRNGKey(seed)
         self.queue: List[GenRequest] = []
         self.all_requests: Dict[int, GenRequest] = {}
 
     def submit(self, req: GenRequest):
+        n = len(req.prompt)
+        if self.prefill.bucketed and n > self.prefill.buckets[-1]:
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} exceeds the largest "
+                f"prefill bucket {self.prefill.buckets[-1]}"
+            )
+        if req.max_new_tokens > 1 and not self.decode.can_ever_admit(
+            n, req.max_new_tokens
+        ):
+            raise ValueError(
+                f"request {req.rid}: prompt {n} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds decode capacity (max_len "
+                f"{self.decode.max_len})"
+            )
         self.queue.append(req)
         self.all_requests[req.rid] = req
 
@@ -491,13 +736,28 @@ class MonolithicEngine:
         steps = 0
         while (self.queue or self.decode.requests) and steps < max_steps:
             steps += 1
-            if self.queue and self.decode.slots.n_active < self.decode.max_slots:
-                req = self.queue.pop(0)
-                tok, kv, true_len = self.prefill.prefill(req, self._next_key())
-                if req.max_new_tokens <= 1:
-                    req.tokens.append(tok)
-                    req.done = True
-                else:
-                    self.decode.admit(req, kv, tok, true_len)
+            if self.queue:
+                req = self.queue[0]
+                if self.decode.can_admit(len(req.prompt), req.max_new_tokens) or (
+                    req.max_new_tokens <= 1
+                ):
+                    self.queue.pop(0)
+                    tok, kv, true_len = self.prefill.prefill(req, self._next_key())
+                    if req.max_new_tokens <= 1:
+                        req.tokens.append(tok)
+                        req.done = True
+                    else:
+                        self.decode.admit(req, kv, tok, true_len)
             self.decode.step_block()
+        if self.queue or self.decode.requests:
+            done = {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
+            unfinished = sorted(
+                rid for rid, r in self.all_requests.items() if not r.done
+            )
+            raise SchedulerExhausted(
+                f"hit max_steps={max_steps} with {len(unfinished)} request(s) "
+                f"unfinished: {unfinished[:8]}{'...' if len(unfinished) > 8 else ''}",
+                done=done,
+                unfinished=unfinished,
+            )
         return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}

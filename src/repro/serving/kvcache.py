@@ -24,6 +24,32 @@ may contain garbage K/V at positions [true_len, bucket).  That is safe by
 construction: decode starts writing at position true_len and the attention
 mask only ever reads positions < pos, so every padded position is
 overwritten before it is first attended.
+
+Paged KV cache (the vLLM/SGLang layout, TPU-shaped)
+---------------------------------------------------
+The slab cache pins ``max_len`` positions per slot no matter how short the
+request — exactly the HBM waste the paper's memory-bound Decode Chip cannot
+afford.  ``PagedDecodeState`` replaces the per-slot attention slabs with:
+
+* **page pools**: every attention cache leaf becomes
+  ``[R, n_pages + 1, page_size, ...]`` — a pool of fixed-size pages shared by
+  all slots.  Page index ``n_pages`` (the last one) is the *trash page*: all
+  masked/out-of-range writes are steered there instead of being predicated,
+  so every cache write lowers to one unconditional scatter/DUS.
+* **block tables**: ``[max_slots, max_len // page_size]`` int32 mapping each
+  slot's logical page j to a physical pool page; unmapped entries hold the
+  trash index, so gathers through a partial table read (masked) trash.
+* **a device-resident allocator**: ``page_owner`` ``[n_pages]`` int32
+  (-1 = free, else owning slot).  Allocation = rank the first free pages with
+  a sized ``jnp.nonzero``; release = one ``where`` over owners.  Both run
+  inside the donated jitted transitions — the free list never syncs to host.
+
+Mamba/conv state is fixed-size per request and stays per-slot
+(``[R, max_slots, ...]``); only attention leaves page.
+
+The bucketed-prefill garbage contract carries over per page: admit copies
+whole prompt pages (including bucket garbage in the last partial page), and
+decode overwrites position ``pos`` before any step attends it.
 """
 from __future__ import annotations
 
@@ -154,3 +180,244 @@ def kv_cache_bytes(cfg: ModelConfig, max_slots: int, max_len: int) -> int:
         int(jnp.prod(jnp.array(s.shape))) * jnp.dtype(s.dtype).itemsize
         for s in jax.tree.leaves(specs)
     )
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: pools + block tables + device-resident free-page allocator
+# ---------------------------------------------------------------------------
+
+
+class PagedDecodeState(NamedTuple):
+    """Paged decode-loop state, device-resident across steps (one pytree).
+
+    caches        attn leaves [R, n_pages+1, page_size, ...] (last page = trash);
+                  mamba leaves [R, max_slots, ...] (fixed-size, per-slot)
+    block_tables  [max_slots, max_len // page_size] int32; unmapped = n_pages
+    page_owner    [n_pages] int32; -1 = free, else owning slot
+    tokens        [max_slots] int32   last emitted token per slot
+    positions     [max_slots] int32   next cache write position per slot
+    active        [max_slots] bool    slot currently owns a live request
+    key           PRNG key consumed one split per decode step
+    """
+
+    caches: Cache
+    block_tables: jnp.ndarray
+    page_owner: jnp.ndarray
+    tokens: jnp.ndarray
+    positions: jnp.ndarray
+    active: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init_paged_decode_state(
+    cfg: ModelConfig, max_slots: int, max_len: int, page_size: int, n_pages: int, key
+) -> PagedDecodeState:
+    assert max_len % page_size == 0, (max_len, page_size)
+    pages_per_slot = max_len // page_size
+    return PagedDecodeState(
+        caches=M.zeros_paged_cache(cfg, max_slots, n_pages + 1, page_size),
+        block_tables=jnp.full((max_slots, pages_per_slot), n_pages, jnp.int32),
+        page_owner=jnp.full((n_pages,), -1, jnp.int32),
+        tokens=jnp.zeros((max_slots,), jnp.int32),
+        positions=jnp.zeros((max_slots,), jnp.int32),
+        active=jnp.zeros((max_slots,), bool),
+        key=key,
+    )
+
+
+def alloc_decode_pages(page_owner, need):
+    """Grab one free page per slot where ``need`` [max_slots] bool is set.
+
+    Returns (new_owner, page_ids [max_slots] int32); slots that need nothing
+    (or an exhausted pool — unreachable under the engine's reservation-based
+    admission) get the trash index ``n_pages``.  Runs inside the fused decode
+    scan: pure ranking arithmetic, no host sync.
+    """
+    n_pages = page_owner.shape[0]
+    S = need.shape[0]
+    (free_idx,) = jnp.nonzero(page_owner < 0, size=S, fill_value=n_pages)
+    rank = jnp.clip(jnp.cumsum(need) - 1, 0, S - 1)
+    pages = jnp.where(need, free_idx[rank], n_pages)
+    owner = page_owner.at[pages].set(
+        jnp.arange(S, dtype=page_owner.dtype), mode="drop"
+    )
+    return owner, pages.astype(jnp.int32)
+
+
+def paged_admit(
+    state: PagedDecodeState, single: Cache, slot, token, true_len, cfg: ModelConfig,
+    *, page_size: int,
+) -> PagedDecodeState:
+    """Allocate ceil(true_len / page_size) pages for ``slot`` and scatter the
+    prefilled single-request cache (B=1) into them (the paged KV handoff).
+
+    ``slot``/``token``/``true_len`` may be traced — the engine jits this with
+    the state donated.  Prompt pages are written whole; writes for logical
+    pages past the allocation land on the trash page (see module docstring).
+    """
+    ps = page_size
+    pages_per_slot = state.block_tables.shape[1]
+    n_pages = state.page_owner.shape[0]
+    n_need = (jnp.asarray(true_len, jnp.int32) + ps - 1) // ps
+    (free_idx,) = jnp.nonzero(state.page_owner < 0, size=pages_per_slot, fill_value=n_pages)
+    take = jnp.arange(pages_per_slot) < n_need
+    page_ids = jnp.where(take, free_idx, n_pages).astype(jnp.int32)
+    owner = state.page_owner.at[page_ids].set(
+        jnp.asarray(slot, state.page_owner.dtype), mode="drop"
+    )
+    block_tables = state.block_tables.at[slot].set(page_ids)
+
+    caches = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            def ins(dst, src):
+                # dst [R, P+1, ps, ...], src [R, 1, L1, ...] -> ONE scatter of
+                # all prompt pages; pages past the allocation (bucket garbage)
+                # carry the trash index and land on the trash page
+                L1 = src.shape[2]
+                n_src = min(-(-L1 // ps), pages_per_slot)
+                pad = n_src * ps - L1
+                row = src[:, 0]
+                if pad > 0:
+                    row = jnp.pad(row, [(0, 0), (0, pad)] + [(0, 0)] * (row.ndim - 2))
+                pages = row[:, : n_src * ps].reshape(
+                    (row.shape[0], n_src, ps) + row.shape[2:]
+                )
+                return dst.at[:, page_ids[:n_src]].set(pages.astype(dst.dtype))
+        else:
+            def ins(dst, src):
+                return jax.lax.dynamic_update_index_in_dim(dst, src[:, 0].astype(dst.dtype), slot, 1)
+        caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+
+    return PagedDecodeState(
+        caches=caches,
+        block_tables=block_tables,
+        page_owner=owner,
+        tokens=state.tokens.at[slot].set(token),
+        positions=state.positions.at[slot].set(true_len),
+        active=state.active.at[slot].set(True),
+        key=state.key,
+    )
+
+
+def paged_gather_view(caches: Cache, block_tables, cfg: ModelConfig) -> Cache:
+    """Materialize the slab-layout view of the paged pools for one decode
+    block: attn leaves [R, P+1, ps, ...] -> [R, S, max_len, ...] through the
+    block tables; mamba leaves pass through (already per-slot).
+
+    The fused decode block gathers this ONCE, runs its k steps against the
+    view (byte-for-byte the slab math -> bit-identical streams), and writes
+    the k fresh positions back to the pool with ``paged_writeback`` — so the
+    per-step cost matches the slab engine and the gather/scatter amortizes
+    over the block.  The view is a transient working buffer inside the jitted
+    block (freed between blocks); persistent KV state is only the pool."""
+    S = block_tables.shape[0]
+    out = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            def g(pool):
+                rows = pool[:, block_tables]  # [R, S, n_pg, ps, ...]
+                return rows.reshape(
+                    (rows.shape[0], S, rows.shape[2] * rows.shape[3]) + rows.shape[4:]
+                )
+            out.append(jax.tree.map(g, caches[i]))
+        else:
+            out.append(caches[i])
+    return out
+
+
+def paged_writeback(
+    caches: Cache, view: Cache, block_tables, pos0, k: int, cfg: ModelConfig
+) -> Cache:
+    """Copy the logical pages each slot wrote during the block — positions
+    [pos0, pos0 + k) span at most (k-1)//page_size + 2 of them — from the
+    view back into the page pools, WHOLE pages at a time (page-granular
+    scatters of contiguous rows, not per-position writes).
+
+    Copying a whole touched page is exact: positions before pos0 carry the
+    values gathered from the pool at block start, and positions past the
+    write head are garbage under the same overwrite-before-attend contract as
+    bucketed prefill.  Slots whose pages are out of reach — frozen at
+    max_len, released (trash-mapped) — land on the trash page.  Mamba leaves
+    take the view's (updated, per-slot) state wholesale."""
+    S = pos0.shape[0]
+    n_pg = block_tables.shape[1]
+    rows_idx = jnp.arange(S)
+    out = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            def wb(pool, v):
+                ps = pool.shape[2]
+                trash = pool.shape[1] - 1
+                vp = v.reshape(v.shape[:2] + (n_pg, ps) + v.shape[3:])
+                outp = pool
+                # one flat-indexed scatter per touched logical page (rank-1
+                # page indices with a contiguous page payload lower to block
+                # copies; a single combined rank-2-indexed scatter does not)
+                for j in range((k - 1) // ps + 2):
+                    lp = pos0 // ps + j  # [S] logical page
+                    valid = (lp * ps < pos0 + k) & (lp < n_pg)
+                    lpc = jnp.clip(lp, 0, n_pg - 1)
+                    page = jnp.take_along_axis(
+                        vp, lpc.reshape((1, S, 1) + (1,) * (vp.ndim - 3)), axis=2
+                    )[:, :, 0]  # [R, S, ps, ...]
+                    pg = jnp.where(valid, block_tables[rows_idx, lpc], trash)
+                    outp = outp.at[:, pg].set(page.astype(pool.dtype))
+                return outp
+
+            out.append(jax.tree.map(wb, caches[i], view[i]))
+        else:
+            out.append(view[i])
+    return out
+
+
+def paged_release(state: PagedDecodeState, keep) -> PagedDecodeState:
+    """Free every page owned by slots with keep[slot] == False, reset their
+    block-table rows to the trash sentinel, and deactivate them — one dispatch."""
+    owner = state.page_owner
+    S = keep.shape[0]
+    n_pages = owner.shape[0]
+    kept = jnp.where(owner >= 0, keep[jnp.clip(owner, 0, S - 1)], True)
+    return state._replace(
+        page_owner=jnp.where(kept, owner, -1),
+        block_tables=jnp.where(
+            keep[:, None], state.block_tables, jnp.int32(n_pages)
+        ).astype(state.block_tables.dtype),
+        active=state.active & keep,
+    )
+
+
+def paged_extract_request(
+    state: PagedDecodeState, slot: int, length: int, cfg: ModelConfig, *, page_size: int
+) -> Cache:
+    """Gather one request's pages back into a contiguous B=1 pack
+    (decode->prefill chip-reallocation path).  Host-side, concrete indices."""
+    ps = page_size
+    n_pg = -(-length // ps)
+    bt = state.block_tables[slot, :n_pg]
+    out = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        c = state.caches[i]
+        if mixer == "attn":
+            def ex(pool):
+                rows = pool[:, bt]  # [R, n_pg, ps, ...]
+                flat = rows.reshape((rows.shape[0], n_pg * ps) + rows.shape[3:])
+                return flat[:, None, :length]
+            out.append(jax.tree.map(ex, c))
+        else:
+            out.append(jax.tree.map(lambda a: a[:, slot : slot + 1], c))
+    return out
+
+
+def paged_kv_cache_bytes(
+    cfg: ModelConfig, max_slots: int, n_pages: int, page_size: int, max_len: int = 0
+) -> int:
+    """HBM footprint of the paged pools (incl. the trash page) + per-slot
+    mamba state + the block tables and allocator arrays."""
+    specs = M.init_paged_cache_specs(cfg, max_slots, n_pages + 1, page_size)
+    pool = sum(
+        int(jnp.prod(jnp.array(s.shape))) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(specs)
+    )
+    tables = n_pages * 4 + (max_slots * (max_len // page_size)) * 4
+    return pool + tables

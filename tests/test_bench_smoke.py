@@ -1,0 +1,22 @@
+"""Benchmark rot guard: ``python -m benchmarks.serving_bench --smoke`` must
+keep working (imports, engine APIs, slab-vs-paged stream equivalence) without
+waiting for the full benchmark run."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_serving_bench_smoke():
+    env = dict(os.environ)
+    src = str(REPO / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_bench", "--smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert out.returncode == 0, f"smoke failed:\n{out.stdout}\n{out.stderr}"
+    assert "SMOKE OK" in out.stdout
+    assert "smoke_stream_mismatches,0" in out.stdout

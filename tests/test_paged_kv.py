@@ -1,0 +1,343 @@
+"""Paged KV cache: block tables, the device-resident page allocator, the
+paged Pallas decode kernel, and the acceptance invariant — paged decode emits
+bit-identical token streams to the slab engine under a fixed seed.
+
+Also holds the regression tests for the bugfixes that ride with paging:
+mid-block decode overshoot past ``max_len`` (positions freeze, no writes past
+the cache) and page-capacity-aware admission.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_paged_pallas
+from repro.models import model as M
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    PrefillEngine,
+    SamplingParams,
+)
+from repro.serving import kvcache
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    """jamba: mamba + attn — mamba state must stay per-slot while attn pages."""
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=6, lo=5, hi=40):
+    rng = np.random.default_rng(seed)
+    return [
+        GenRequest(i, rng.integers(0, cfg.vocab_size, size=int(rng.integers(lo, hi))),
+                   max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _server(params, cfg, *, paged, max_slots=3, max_len=128, n_pages=None,
+            decode_block=8, temperature=0.0, seed=0):
+    sp = SamplingParams(temperature=temperature)
+    return DisaggregatedServer(
+        [PrefillEngine(params, cfg, sp)],
+        [DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
+                      sampling=sp, decode_block=decode_block, paged=paged,
+                      page_size=PAGE, n_pages=n_pages, seed=seed)],
+        seed=seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged Pallas kernel vs pure-JAX reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,d", [(3, 4, 2, 16), (2, 8, 8, 32)])
+def test_paged_decode_kernel_matches_ref(dtype, B, H, KV, d):
+    rng = np.random.default_rng(0)
+    P, ps, n_pg = 11, PAGE, 6
+    q = jnp.asarray(rng.normal(size=(B, H, d)), dtype)
+    kp = jnp.asarray(rng.normal(size=(P, ps, KV, d)), dtype)
+    vp = jnp.asarray(rng.normal(size=(P, ps, KV, d)), dtype)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, n_pg)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, n_pg * ps, size=(B,)), jnp.int32)
+    out = decode_attention_paged_pallas(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.decode_attention_paged_ref(q, kp, vp, bt, lengths)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_paged_kernel_ignores_pages_past_length():
+    """Entries past ``lengths`` may point anywhere (trash page): masked out."""
+    rng = np.random.default_rng(1)
+    B, H, KV, d, P, n_pg = 2, 4, 2, 16, 9, 4
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, n_pg)), jnp.int32)
+    lengths = jnp.array([PAGE + 3, 2 * PAGE], jnp.int32)
+    out1 = decode_attention_paged_pallas(q, kp, vp, bt, lengths, interpret=True)
+    # rewire every table entry past the valid prefix to a different page
+    bt2 = bt.at[:, 2:].set((bt[:, 2:] + 1) % P)
+    out2 = decode_attention_paged_pallas(q, kp, vp, bt2, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_paged_kernel_max_length_bound():
+    rng = np.random.default_rng(2)
+    B, H, KV, d, P, n_pg = 2, 4, 2, 16, 9, 8
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, n_pg)), jnp.int32)
+    lengths = jnp.array([20, 40], jnp.int32)
+    full = decode_attention_paged_pallas(q, kp, vp, bt, lengths, interpret=True)
+    bounded = decode_attention_paged_pallas(
+        q, kp, vp, bt, lengths, max_length=40, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(bounded))
+
+
+# ---------------------------------------------------------------------------
+# Model-level paged decode (decode_step(block_tables=...)) == slab decode.
+# This is the XLA twin of the Pallas paged kernel and the wiring the TPU
+# backend uses to run decode straight off the pools (no gathered view); the
+# engine's per-block view path must stay bit-identical to it.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fixture", ["setup", "hybrid_setup"])
+def test_decode_step_block_tables_matches_slab(fixture, request):
+    cfg, params = request.getfixturevalue(fixture)
+    max_slots, max_len = 3, 64
+    n_pages = max_slots * max_len // PAGE
+    st = kvcache.init_paged_decode_state(
+        cfg, max_slots, max_len, PAGE, n_pages, jax.random.PRNGKey(1)
+    )
+    slab_caches = M.zeros_cache(cfg, max_slots, max_len)
+    toks = jnp.arange(37, dtype=jnp.int32)[None]
+    _, single, _ = M.prefill(params, toks, cfg)
+    st = kvcache.paged_admit(st, single, jnp.int32(1), jnp.int32(5), jnp.int32(37),
+                             cfg, page_size=PAGE)
+    slab_caches = kvcache.insert_request(slab_caches, single, 1, cfg)
+    tok = jnp.array([0, 5, 0], jnp.int32)
+    pos = jnp.array([0, 37, 0], jnp.int32)
+    lg_s, slab_caches = M.decode_step(params, tok, slab_caches, pos, cfg)
+    lg_p, paged_caches = M.decode_step(params, tok, st.caches, pos, cfg,
+                                       block_tables=st.block_tables)
+    np.testing.assert_array_equal(np.asarray(lg_s[1]), np.asarray(lg_p[1]))
+    # the paged write landed the same K/V at position 37 as the slab write
+    back = kvcache.paged_extract_request(
+        st._replace(caches=paged_caches), 1, 38, cfg, page_size=PAGE
+    )
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer != "attn":
+            continue
+        for w, g in zip(jax.tree.leaves(slab_caches[i]), jax.tree.leaves(back[i])):
+            np.testing.assert_array_equal(
+                np.asarray(w[:, 1:2, :38], np.float32), np.asarray(g, np.float32)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: paged engine == slab engine, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_paged_matches_slab_streams(setup, temperature):
+    """The tentpole invariant: paged and slab decode produce bit-identical
+    token streams under a fixed seed (greedy AND sampled)."""
+    cfg, params = setup
+    outs = []
+    for paged in (False, True):
+        srv = _server(params, cfg, paged=paged, temperature=temperature)
+        for r in _requests(cfg, 6, seed=1):
+            srv.submit(r)
+        outs.append(srv.run())
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.slow
+def test_paged_matches_slab_hybrid(hybrid_setup):
+    """Hybrid mamba/attn: per-slot SSM state + paged attention pools."""
+    cfg, params = hybrid_setup
+    outs = []
+    for paged in (False, True):
+        srv = _server(params, cfg, paged=paged)
+        for r in _requests(cfg, 5, seed=2, max_new=4):
+            srv.submit(r)
+        outs.append(srv.run())
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_drains_clean(setup):
+    """After every request completes: all pages free, tables trash-mapped,
+    reservations zero."""
+    cfg, params = setup
+    srv = _server(params, cfg, paged=True)
+    for r in _requests(cfg, 7, seed=3, max_new=5):
+        srv.submit(r)
+    srv.run()
+    eng = srv.decodes[0]
+    assert bool(jnp.all(eng.state.page_owner == -1))
+    assert bool(jnp.all(eng.state.block_tables == eng.n_pages))
+    assert eng._reserved == [0] * eng.max_slots
+    assert not bool(jnp.any(eng.state.active))
+
+
+def test_pages_bounded_by_reservation_mid_flight(setup):
+    """Physically allocated pages never exceed the host-side reservation."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE)
+    key = jax.random.PRNGKey(0)
+    for r in _requests(cfg, 3, seed=4, max_new=12):
+        key, k = jax.random.split(key)
+        tok, kv, tl = pre.prefill(r, k)
+        assert eng.admit(r, kv, tok, tl) is not None
+    while eng.requests:
+        eng.step_block()
+        used = int(jnp.sum(eng.state.page_owner >= 0))
+        assert used <= sum(eng._reserved)
+        assert used <= eng.n_pages
+
+
+def test_admission_waits_for_pages(setup):
+    """A tiny pool admits fewer concurrent requests than there are slots —
+    pages, not slots, are the binding limit — yet continuous batching still
+    completes everything."""
+    cfg, params = setup
+    # every request reserves 2-3 pages (prompt 20-38, max_new=4, block
+    # margin) so a 3-page pool serializes them despite 4 free slots
+    srv = _server(params, cfg, paged=True, max_slots=4, n_pages=3, decode_block=4)
+    for r in _requests(cfg, 5, seed=5, max_new=4, lo=20, hi=39):
+        srv.submit(r)
+    out = srv.run()
+    assert len(out) == 5
+    assert all(len(v) == 4 for v in out.values())
+    assert srv.peak_active == 1
+
+
+def test_oversized_page_demand_rejected(setup):
+    """A request that could never fit the pool is rejected at submit()."""
+    cfg, params = setup
+    srv = _server(params, cfg, paged=True, max_slots=2, n_pages=2)
+    with pytest.raises(ValueError, match="capacity"):
+        srv.submit(GenRequest(0, np.arange(60) % cfg.vocab_size, max_new_tokens=8))
+
+
+# ---------------------------------------------------------------------------
+# Decode-overshoot bugfix: a request ending exactly at max_len, mid-block
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_overshoot_at_max_len_frozen(setup, paged):
+    """A slot finishing exactly at ``max_len`` inside a decode_block > 1 block
+    must not advance positions past the cache or corrupt other slots."""
+    cfg, params = setup
+    max_len = 64
+    sp = SamplingParams(temperature=0.0)
+
+    def drive(decode_block):
+        pre = PrefillEngine(params, cfg, sp)
+        eng = DecodeEngine(params, cfg, max_slots=2, max_len=max_len, sampling=sp,
+                           decode_block=decode_block, paged=paged, page_size=PAGE)
+        rng = np.random.default_rng(6)
+        # r0 ends exactly at max_len: true_len + max_new == max_len, with
+        # max_new chosen so the finish lands mid-block for decode_block=8
+        p0 = rng.integers(0, cfg.vocab_size, size=51)
+        r0 = GenRequest(0, p0, max_new_tokens=max_len - len(p0))  # 13 tokens
+        r1 = GenRequest(1, rng.integers(0, cfg.vocab_size, size=20), max_new_tokens=30)
+        key = jax.random.PRNGKey(0)
+        for r in (r0, r1):
+            key, k = jax.random.split(key)
+            tok, kv, tl = pre.prefill(r, k)
+            eng.admit(r, kv, tok, tl)
+        steps = 0
+        while eng.requests and steps < 100:
+            steps += 1
+            eng.step_block()
+        return eng, {0: list(r0.tokens), 1: list(r1.tokens)}
+
+    eng_f, fused = drive(decode_block=8)
+    # positions froze at max_len even though the slot overshot mid-block
+    assert int(jnp.max(eng_f.state.positions)) <= max_len
+    # the companion request is unaffected by r0's overshoot: identical to a
+    # step-at-a-time run where r0's slot is released promptly
+    _, stepwise = drive(decode_block=1)
+    assert fused == stepwise
+
+
+# ---------------------------------------------------------------------------
+# extract_request round trip (decode -> prefill chip reallocation), paged
+# ---------------------------------------------------------------------------
+
+
+def test_paged_extract_reinsert_continuation(setup):
+    """insert -> decode a few tokens -> extract -> re-insert into a fresh
+    paged engine -> the continuation matches the uninterrupted stream."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    req = _requests(cfg, 1, seed=7, max_new=10)[0]
+    key = jax.random.PRNGKey(0)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                            decode_block=1, paged=True, page_size=PAGE)
+
+    # uninterrupted reference
+    tok, kv, tl = pre.prefill(req, key)
+    eng = fresh()
+    eng.admit(req, kv, tok, tl)
+    while eng.requests:
+        eng.step_block()
+    full = list(req.tokens)
+
+    # interrupted: decode 4 tokens, extract, re-insert elsewhere, continue
+    req2 = _requests(cfg, 1, seed=7, max_new=10)[0]
+    tok, kv, tl = pre.prefill(req2, key)
+    eng_a = fresh()
+    slot = eng_a.admit(req2, kv, tok, tl)
+    for _ in range(4):
+        eng_a.step_block()
+    n_dec = len(req2.tokens) - 1  # tokens after the prefill token
+    length = tl + n_dec
+    assert eng_a.slots.lengths[slot] == length
+    pack = kvcache.paged_extract_request(eng_a.state, slot, length, cfg,
+                                         page_size=PAGE)
+    cont = GenRequest(99, req2.prompt, max_new_tokens=10 - n_dec)
+    eng_b = fresh()
+    eng_b.admit(cont, pack, req2.tokens[-1], length)
+    while eng_b.requests:
+        eng_b.step_block()
+    assert req2.tokens[:-1] + cont.tokens == full

@@ -15,8 +15,10 @@ from repro.serving import (
     MonolithicEngine,
     PrefillEngine,
     SamplingParams,
+    SchedulerExhausted,
     sample,
 )
+from repro.serving.engine import DEFAULT_BUCKETS, _bucket
 from repro.serving.kvcache import SlotState, insert_request, batch_cache
 
 
@@ -36,6 +38,7 @@ def _requests(cfg, n, seed=0, max_new=8):
     ]
 
 
+@pytest.mark.slow
 def test_disagg_equals_monolithic_greedy(setup):
     cfg, params = setup
     srv = DisaggregatedServer([PrefillEngine(params, cfg)],
@@ -76,6 +79,7 @@ def test_two_decode_engines(setup):
     assert len(out) == 8
 
 
+@pytest.mark.slow
 def test_decode_engine_matches_sequential(setup):
     """Batched slot decode == one-at-a-time generation (greedy)."""
     cfg0, params = setup
@@ -116,6 +120,67 @@ def test_eos_stops_generation(setup):
     mono2.submit(r)
     out = mono2.run()
     assert len(out[0]) == 10  # no eos -> full length
+
+
+def test_run_raises_on_max_steps_with_unfinished(setup):
+    """Hitting max_steps with requests in flight raises instead of silently
+    returning only the finished ones; server state survives for a resume."""
+    cfg, params = setup
+    srv = DisaggregatedServer([PrefillEngine(params, cfg)],
+                              [DecodeEngine(params, cfg, max_slots=2, max_len=128)])
+    for r in _requests(cfg, 4, seed=9, max_new=8):
+        srv.submit(r)
+    with pytest.raises(SchedulerExhausted) as ei:
+        srv.run(max_steps=1)
+    assert ei.value.unfinished  # in-flight requests are named, not dropped
+    assert set(ei.value.done) | set(ei.value.unfinished) == {0, 1, 2, 3}
+    out = srv.run()  # state intact: a fresh run() finishes the rest
+    assert len(out) == 4
+    assert all(len(v) == 8 for v in out.values())
+
+
+def test_monolithic_run_raises_on_max_steps(setup):
+    cfg, params = setup
+    mono = MonolithicEngine(params, cfg, max_slots=2, max_len=128)
+    for r in _requests(cfg, 3, seed=10, max_new=8):
+        mono.submit(r)
+    with pytest.raises(SchedulerExhausted) as ei:
+        mono.run(max_steps=1)
+    assert ei.value.unfinished
+    out = mono.run()
+    assert len(out) == 3
+
+
+def test_bucket_raises_past_largest():
+    """No more silent next-power-of-two jit keys past the bucket list."""
+    assert _bucket(DEFAULT_BUCKETS[-1]) == DEFAULT_BUCKETS[-1]
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        _bucket(DEFAULT_BUCKETS[-1] + 1)
+
+
+def test_submit_rejects_oversized_prompt(setup):
+    """Prompt past the largest bucket is rejected at submit, not at prefill."""
+    cfg, params = setup
+    srv = DisaggregatedServer([PrefillEngine(params, cfg)],
+                              [DecodeEngine(params, cfg, max_slots=2, max_len=8192)])
+    big = GenRequest(0, np.zeros(DEFAULT_BUCKETS[-1] + 1, np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        srv.submit(big)
+    mono = MonolithicEngine(params, cfg, max_slots=2, max_len=8192)
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        mono.submit(big)
+
+
+def test_submit_rejects_beyond_decode_capacity(setup):
+    """Prompt + max_new past every decode engine's max_len fails at submit,
+    not deep inside admit."""
+    cfg, params = setup
+    srv = DisaggregatedServer([PrefillEngine(params, cfg)],
+                              [DecodeEngine(params, cfg, max_slots=2, max_len=64)])
+    with pytest.raises(ValueError, match="capacity"):
+        srv.submit(GenRequest(0, np.zeros(60, np.int32), max_new_tokens=8))
+    # a prefill-only request (max_new <= 1) never needs a decode slot
+    srv.submit(GenRequest(1, np.zeros(60, np.int32), max_new_tokens=1))
 
 
 def test_slot_state():

@@ -110,6 +110,47 @@ def test_insert_extract_roundtrip(fixture, request):
             )
 
 
+def test_extract_decode_reinsert_continuation(setup):
+    """The decode->prefill chip-reallocation path (paper's longevity story):
+    insert -> decode a few tokens -> extract the slot's live cache ->
+    re-insert into a fresh engine -> the continuation matches the
+    uninterrupted stream.  (Paged twin: tests/test_paged_kv.py.)"""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    key = jax.random.PRNGKey(0)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                            decode_block=1)
+
+    req = _requests(cfg, 1, seed=11, max_new=10)[0]
+    tok, kv, tl = pre.prefill(req, key)
+    eng = fresh()
+    eng.admit(req, kv, tok, tl)
+    while eng.requests:
+        eng.step_block()
+    full = list(req.tokens)
+
+    req2 = _requests(cfg, 1, seed=11, max_new=10)[0]
+    tok, kv, tl = pre.prefill(req2, key)
+    eng_a = fresh()
+    slot = eng_a.admit(req2, kv, tok, tl)
+    for _ in range(4):
+        eng_a.step_block()
+    n_dec = len(req2.tokens) - 1
+    length = tl + n_dec
+    assert eng_a.slots.lengths[slot] == length
+    pack = extract_request(eng_a.state.caches, slot, length, cfg)
+    cont = GenRequest(99, req2.prompt, max_new_tokens=10 - n_dec)
+    eng_b = fresh()
+    eng_b.admit(cont, pack, req2.tokens[-1], length)
+    while eng_b.requests:
+        eng_b.step_block()
+    assert req2.tokens[:-1] + cont.tokens == full
+
+
+@pytest.mark.slow
 def test_hybrid_server_end_to_end(hybrid_setup):
     """Bucketed batched prefill + fused decode on a mamba/attn hybrid."""
     cfg, params = hybrid_setup
@@ -155,6 +196,7 @@ def test_donated_step_equivalence(setup):
     assert a == b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("temperature", [0.0, 0.8])
 def test_fused_block_equals_step_at_a_time(setup, temperature):
     """Multi-token fused decode == one-at-a-time, bit-identical streams.
