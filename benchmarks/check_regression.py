@@ -1,0 +1,144 @@
+"""CI regression gate: diff a fresh ``serving_bench --smoke`` run against the
+committed ``BENCH_serving.json``.
+
+Run as a CI step (after the smoke step, so bench *breakage* and bench
+*regression* fail separately)::
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+What is compared — and why ratios, not absolutes: CI runners and dev machines
+differ in speed by far more than any real regression, so wall-clock numbers
+are only compared RELATIVE to the same run's own baseline (paged vs slab on
+the same machine, same minute).  Deterministic metrics — stream mismatches
+and the reservation-math KV accounting — are compared exactly.
+
+Failure conditions (``--tolerance`` defaults to 0.25):
+
+* any stream mismatch count > 0 (slab vs paged, shared vs unshared),
+* fresh paged/slab tokens-per-s ratio worse than the committed ratio by more
+  than the tolerance (decode throughput regression),
+* fresh paged/slab decode-s-per-token ratio worse than committed by more
+  than the tolerance,
+* shared-prefix new-KV saving below the 30% acceptance floor, or drifted
+  from the committed value (the accounting is deterministic — any drift
+  means the reservation math changed and BENCH_serving.json must be
+  regenerated deliberately).
+
+``compare()`` is pure and imported by tier-1 tests, so the gate's logic is
+itself under test without paying for a bench run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+from typing import List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+SAVING_FLOOR = 0.30
+
+
+def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple[str, bool, str]]:
+    """Diff fresh smoke metrics against the committed ``smoke_reference``.
+
+    Returns [(check name, passed, detail)]; the run fails if any check fails.
+    """
+    checks: List[Tuple[str, bool, str]] = []
+
+    def add(name: str, ok: bool, detail: str) -> None:
+        checks.append((name, bool(ok), detail))
+
+    mm = fresh.get("stream_mismatches", -1)
+    add("paged_stream_mismatches", mm == 0, f"{mm} (acceptance: 0)")
+    smm = fresh.get("shared_prefix", {}).get("stream_mismatches", -1)
+    add("shared_stream_mismatches", smm == 0, f"{smm} (acceptance: 0)")
+
+    # timing: scale-free ratios against the committed ratios
+    f_tps = fresh["tokens_per_s"]["ratio"]
+    r_tps = reference["tokens_per_s"]["ratio"]
+    add(
+        "tokens_per_s_ratio",
+        f_tps >= r_tps * (1 - tolerance),
+        f"fresh paged/slab {f_tps:.3f} vs committed {r_tps:.3f} "
+        f"(floor {r_tps * (1 - tolerance):.3f})",
+    )
+    f_spt = fresh["decode_s_per_token"]["ratio"]
+    r_spt = reference["decode_s_per_token"]["ratio"]
+    add(
+        "decode_s_per_token_ratio",
+        f_spt <= r_spt * (1 + tolerance),
+        f"fresh paged/slab {f_spt:.3f} vs committed {r_spt:.3f} "
+        f"(ceiling {r_spt * (1 + tolerance):.3f})",
+    )
+
+    # deterministic reservation math: exact agreement + acceptance floor
+    f_sav = fresh["shared_prefix"]["kv_new_bytes_per_request"]["saving_frac"]
+    r_sav = reference["shared_prefix"]["kv_new_bytes_per_request"]["saving_frac"]
+    add(
+        "kv_new_bytes_saving_floor",
+        f_sav >= SAVING_FLOOR,
+        f"{f_sav:.4f} (acceptance: >= {SAVING_FLOOR})",
+    )
+    add(
+        "kv_new_bytes_saving_committed",
+        abs(f_sav - r_sav) < 1e-6,
+        f"fresh {f_sav:.6f} vs committed {r_sav:.6f} — reservation math is "
+        f"deterministic; drift means BENCH_serving.json is stale",
+    )
+    return checks
+
+
+def run_fresh_smoke() -> dict:
+    """Run ``serving_bench --smoke --json`` in a subprocess; returns metrics."""
+    with tempfile.TemporaryDirectory() as td:
+        out_path = Path(td) / "smoke.json"
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serving_bench", "--smoke",
+             "--json", str(out_path)],
+            cwd=REPO, capture_output=True, text=True, timeout=900,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"smoke run failed (rc={proc.returncode}):\n"
+                f"{proc.stdout}\n{proc.stderr}"
+            )
+        return json.loads(out_path.read_text())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_serving.json"))
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--fresh-json", default=None,
+                    help="use a pre-computed smoke JSON instead of running one")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    reference = baseline.get("smoke_reference")
+    if reference is None:
+        print("FAIL: baseline has no smoke_reference section — regenerate "
+              "BENCH_serving.json with the full benchmark run")
+        return 1
+    if args.fresh_json:
+        fresh = json.loads(Path(args.fresh_json).read_text())
+    else:
+        fresh = run_fresh_smoke()
+
+    checks = compare(fresh, reference, args.tolerance)
+    width = max(len(n) for n, _, _ in checks)
+    failed = 0
+    for name, ok, detail in checks:
+        print(f"{'PASS' if ok else 'FAIL'}  {name:<{width}}  {detail}")
+        failed += not ok
+    if failed:
+        print(f"{failed} regression check(s) failed")
+        return 1
+    print("regression check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

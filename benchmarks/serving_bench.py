@@ -14,13 +14,21 @@ device-resident and prefill runs in big bucketed batches:
   * the paged KV cache vs the slab fast path: identical token streams,
     decode tokens/s (acceptance: within +-10%), KV bytes reserved per served
     request, and max concurrent requests at a fixed HBM budget (short
-    requests stop pinning max_len positions each).
+    requests stop pinning max_len positions each),
+  * refcounted prefix sharing (``prefix_cache=True``): identical token
+    streams to the unshared paged engine on a shared-system-prompt workload,
+    NEW KV bytes reserved per request (acceptance: >= 30% lower), and peak
+    concurrency at a fixed small pool (shared pages stop counting against
+    every request).
 
-Writes ``BENCH_serving.json`` into the working directory.
+Writes ``BENCH_serving.json`` into the working directory, including a
+``smoke_reference`` section that ``benchmarks/check_regression.py`` diffs
+fresh ``--smoke`` runs against in CI.
 
-``--smoke`` runs a seconds-scale slice (fast slab vs paged equivalence only,
-no baselines, no file output) — exercised by a tier-1 test so benchmark rot
-is caught in-tree.
+``--smoke`` runs a seconds-scale slice (fast slab vs paged vs shared-prefix
+equivalence, no baselines, no BENCH file) — exercised by a tier-1 test so
+benchmark rot is caught in-tree; ``--json PATH`` dumps the smoke metrics for
+the regression check.
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ DECODE_BLOCK = 8
 MAX_SLOTS = 4
 MAX_LEN = 128
 PAGE_SIZE = 16
+PREFIX_LEN = 32  # shared system-prompt tokens (2 pages)
 MAX_NEW = 8 if FAST else 24
 N_REQUESTS = 8 if FAST else 16
 
@@ -63,14 +72,34 @@ def _requests(cfg, n, max_new=None, seed=0):
     ]
 
 
+def _shared_requests(cfg, n, base=0, max_new=None, seed=11):
+    """n requests sharing a PREFIX_LEN-token system prompt + unique tails."""
+    max_new = MAX_NEW if max_new is None else max_new
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, cfg.vocab_size, size=PREFIX_LEN)
+    tails = np.random.default_rng(seed + base + 1)
+    return [
+        GenRequest(
+            base + i,
+            np.concatenate(
+                [common, tails.integers(0, cfg.vocab_size, size=int(tails.integers(4, 16)))]
+            ),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
 def _build_server(params, cfg, fast: bool, *, paged: bool = False,
-                  max_slots: int = MAX_SLOTS) -> DisaggregatedServer:
+                  prefix: bool = False, max_slots: int = MAX_SLOTS,
+                  n_pages=None) -> DisaggregatedServer:
     if fast:
         pre = PrefillEngine(params, cfg, bucketed=True)
         dec = DecodeEngine(params, cfg, max_slots=max_slots, max_len=MAX_LEN,
                            decode_block=DECODE_BLOCK, donate=True, paged=paged,
-                           page_size=PAGE_SIZE,
-                           n_pages=MAX_SLOTS * MAX_LEN // PAGE_SIZE)
+                           page_size=PAGE_SIZE, prefix_cache=prefix,
+                           n_pages=n_pages if n_pages is not None
+                           else MAX_SLOTS * MAX_LEN // PAGE_SIZE)
         return DisaggregatedServer([pre], [dec], max_prefill_batch=MAX_SLOTS)
     pre = PrefillEngine(params, cfg, bucketed=False)
     dec = DecodeEngine(params, cfg, max_slots=max_slots, max_len=MAX_LEN,
@@ -222,28 +251,104 @@ def _max_concurrency(params, cfg, paged: bool):
     return srv.peak_active
 
 
+def _shared_prefix_workload(params, cfg, *, prefix: bool, max_new, n, waves=2):
+    """Run the shared-system-prompt workload; returns (streams, mean new-KV
+    bytes reserved per request, total shared pages, wall seconds)."""
+    per_pos = kv_cache_bytes(cfg, 1, 1)
+    srv = _build_server(params, cfg, fast=True, paged=True, prefix=prefix)
+    out = {}
+    t0 = time.perf_counter()
+    for w in range(waves):
+        for r in _shared_requests(cfg, n, base=w * 100, max_new=max_new):
+            srv.submit(r)
+        out.update(srv.run())
+    dt = time.perf_counter() - t0
+    eng = srv.decodes[0]
+    new_bytes = eng.stats["new_pages"] / eng.stats["admits"] * PAGE_SIZE * per_pos
+    shared_total = eng.stats["shared_pages"]
+    return out, new_bytes, shared_total, dt
+
+
+def _shared_prefix_concurrency(params, cfg, *, prefix: bool, pool_pages: int = 20):
+    """Peak concurrent decode requests at a FIXED small page pool: shared
+    prefix pages count once, not per request, so the prefix-cached engine
+    stacks more requests into the same pool.  max_new is sized so requests
+    stay in flight across several scheduling rounds — pages, not the
+    per-round prefill batch, must be the binding limit."""
+    srv = _build_server(params, cfg, fast=True, paged=True, prefix=prefix,
+                        max_slots=MAX_SLOTS * 4, n_pages=pool_pages)
+    for r in _shared_requests(cfg, 16, base=0, max_new=24, seed=13):
+        srv.submit(r)
+    srv.run()
+    return srv.peak_active
+
+
+def _smoke_metrics(params, cfg):
+    """The seconds-scale equivalence slice (also embedded in the full run as
+    the committed ``smoke_reference`` for benchmarks/check_regression.py)."""
+    slab_tps, _, slab_streams = _end_to_end(params, cfg, fast=True)
+    paged_tps, _, paged_streams = _end_to_end(params, cfg, fast=True, paged=True)
+    mismatches = int(sum(slab_streams[r] != paged_streams[r] for r in slab_streams))
+    slab_step, _ = _decode_walltime(params, cfg, fast=True)
+    paged_step, _ = _decode_walltime(params, cfg, fast=True, paged=True)
+    base_streams, base_bytes, _, _ = _shared_prefix_workload(
+        params, cfg, prefix=False, max_new=MAX_NEW, n=N_REQUESTS
+    )
+    shr_streams, shr_bytes, shared_total, _ = _shared_prefix_workload(
+        params, cfg, prefix=True, max_new=MAX_NEW, n=N_REQUESTS
+    )
+    shared_mismatches = int(
+        sum(base_streams[r] != shr_streams[r] for r in base_streams)
+    )
+    return {
+        "tokens_per_s": {"slab": slab_tps, "paged": paged_tps,
+                         "ratio": paged_tps / slab_tps},
+        "decode_s_per_token": {"slab": slab_step, "paged": paged_step,
+                               "ratio": paged_step / slab_step},
+        "stream_mismatches": mismatches,
+        "shared_prefix": {
+            "stream_mismatches": shared_mismatches,
+            "kv_new_bytes_per_request": {"paged": base_bytes, "shared": shr_bytes,
+                                         "saving_frac": 1 - shr_bytes / base_bytes},
+            "shared_pages_total": int(shared_total),
+        },
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale slice for the tier-1 rot check: "
-                         "fast slab vs paged stream equivalence, no baselines")
+                         "fast slab vs paged vs shared-prefix stream "
+                         "equivalence, no baselines")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --smoke: dump the smoke metrics as JSON "
+                         "(consumed by benchmarks/check_regression.py)")
     args, _ = ap.parse_known_args(argv)
+    global MAX_NEW, N_REQUESTS
 
     cfg = reduced(ARCHS[ARCH])
     params = M.init_params(jax.random.PRNGKey(0), cfg)
 
     if args.smoke:
-        b = Bench("serving bench --smoke (slab vs paged fast path)")
-        global MAX_NEW, N_REQUESTS
+        b = Bench("serving bench --smoke (slab vs paged vs shared prefix)")
         MAX_NEW, N_REQUESTS = 4, 3
-        slab_tps, _, slab_streams = _end_to_end(params, cfg, fast=True)
-        paged_tps, _, paged_streams = _end_to_end(params, cfg, fast=True, paged=True)
-        mismatches = sum(slab_streams[r] != paged_streams[r] for r in slab_streams)
-        b.row("smoke_tokens_per_s_slab", slab_tps, "")
-        b.row("smoke_tokens_per_s_paged", paged_tps, "")
-        b.row("smoke_stream_mismatches", mismatches, "acceptance: 0")
+        sm = _smoke_metrics(params, cfg)
+        b.row("smoke_tokens_per_s_slab", sm["tokens_per_s"]["slab"], "")
+        b.row("smoke_tokens_per_s_paged", sm["tokens_per_s"]["paged"], "")
+        b.row("smoke_stream_mismatches", sm["stream_mismatches"], "acceptance: 0")
+        b.row("smoke_shared_stream_mismatches",
+              sm["shared_prefix"]["stream_mismatches"], "acceptance: 0")
+        b.row("smoke_kv_new_bytes_saving",
+              sm["shared_prefix"]["kv_new_bytes_per_request"]["saving_frac"],
+              "acceptance: >= 0.30")
         b.dump()
-        assert mismatches == 0, "paged streams diverged from slab"
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(sm, f, indent=2)
+        assert sm["stream_mismatches"] == 0, "paged streams diverged from slab"
+        assert sm["shared_prefix"]["stream_mismatches"] == 0, \
+            "shared-prefix streams diverged from unshared paged"
         print("SMOKE OK")
         return
 
@@ -294,7 +399,38 @@ def main(argv=None) -> None:
     b.row("kv_bytes_saving", 1 - paged_bytes / slab_bytes, "fraction of slab freed")
     b.row("max_concurrent_fixed_hbm_slab", conc_slab, f"{MAX_SLOTS} slots x {MAX_LEN}")
     b.row("max_concurrent_fixed_hbm_paged", conc_paged, "same pool, paged admission")
+
+    # -- refcounted prefix sharing vs the unshared paged engine -------------
+    base_streams, base_new_bytes, _, base_wall = _shared_prefix_workload(
+        params, cfg, prefix=False, max_new=MAX_NEW, n=N_REQUESTS
+    )
+    shr_streams, shr_new_bytes, shared_total, shr_wall = _shared_prefix_workload(
+        params, cfg, prefix=True, max_new=MAX_NEW, n=N_REQUESTS
+    )
+    shared_mismatches = int(
+        sum(base_streams[r] != shr_streams[r] for r in base_streams)
+    )
+    conc_base = _shared_prefix_concurrency(params, cfg, prefix=False)
+    conc_shared = _shared_prefix_concurrency(params, cfg, prefix=True)
+    saving = 1 - shr_new_bytes / base_new_bytes
+    b.row("shared_prefix_stream_mismatches", shared_mismatches,
+          "acceptance: 0 (bit-identical to unshared paged)")
+    b.row("kv_new_bytes_per_request_unshared", base_new_bytes,
+          f"{PREFIX_LEN}-token system prompt re-reserved per request")
+    b.row("kv_new_bytes_per_request_shared", shr_new_bytes,
+          "prefix pages mapped, only tail + growth reserved")
+    b.row("kv_new_bytes_saving", saving, "acceptance: >= 0.30")
+    b.row("shared_pages_total", shared_total, "prefix pages mapped instead of recomputed")
+    b.row("max_concurrent_fixed_pool_unshared", conc_base, "20-page pool")
+    b.row("max_concurrent_fixed_pool_shared", conc_shared,
+          "same pool; shared pages count once, not per request")
     b.dump()
+
+    # seconds-scale smoke slice, committed as the CI regression reference
+    full_mn, full_nr = MAX_NEW, N_REQUESTS
+    MAX_NEW, N_REQUESTS = 4, 3
+    smoke_reference = _smoke_metrics(params, cfg)
+    MAX_NEW, N_REQUESTS = full_mn, full_nr
 
     results = {
         "arch": cfg.name,
@@ -326,6 +462,19 @@ def main(argv=None) -> None:
             "page_size": PAGE_SIZE,
             "n_pages": MAX_SLOTS * MAX_LEN // PAGE_SIZE,
         },
+        "prefix_sharing": {
+            "stream_mismatches": shared_mismatches,
+            "kv_new_bytes_per_request": {"unshared": base_new_bytes,
+                                         "shared": shr_new_bytes,
+                                         "saving_frac": saving},
+            "shared_pages_total": int(shared_total),
+            "e2e_wall_s": {"unshared": base_wall, "shared": shr_wall},
+            "max_concurrent_fixed_pool": {"unshared": int(conc_base),
+                                          "shared": int(conc_shared),
+                                          "pool_pages": 20},
+            "prefix_len": PREFIX_LEN,
+        },
+        "smoke_reference": smoke_reference,
         "config": {"decode_block": DECODE_BLOCK, "max_slots": MAX_SLOTS,
                    "max_len": MAX_LEN, "max_new": MAX_NEW, "n_requests": N_REQUESTS},
     }

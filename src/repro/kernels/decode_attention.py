@@ -213,6 +213,13 @@ def decode_attention_paged_pallas(
     a request's length may point anywhere valid (e.g. the trash page), their
     scores are masked to -inf before the online-softmax merge.
 
+    Prefix sharing rides on the same contract: two rows may alias the SAME
+    physical page (refcounted in the serving allocator) and a row's table may
+    be REMAPPED between calls by copy-on-write — the kernel re-reads the
+    scalar-prefetched table every call and carries no per-row state, so both
+    are transparent here (guarded by
+    tests/test_prefix_sharing.py::test_paged_kernel_honors_shared_tables).
+
     ``max_length``: static upper bound on ``lengths`` — caps the split grid
     at ceil(max_length / page_size) pages, exactly like the slab kernel's
     split bound.

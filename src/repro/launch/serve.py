@@ -49,7 +49,14 @@ def main():
                     help="KV positions per page (paged mode)")
     ap.add_argument("--pages", type=int, default=None,
                     help="pool size in pages (default: slab-equivalent HBM)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prefix sharing + copy-on-write (paged "
+                         "mode): requests whose prompts share a page-aligned "
+                         "prefix map the cached pages instead of recomputing "
+                         "them; prefill runs only the uncached tail")
     args = ap.parse_args()
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged")
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -61,7 +68,7 @@ def main():
         DecodeEngine(params, cfg, max_slots=args.max_slots, max_len=args.max_len, sampling=sp,
                      decode_block=args.decode_block, donate=not args.no_donate,
                      seed=args.seed + i, paged=args.paged, page_size=args.page_size,
-                     n_pages=args.pages)
+                     n_pages=args.pages, prefix_cache=args.prefix_cache)
         for i in range(args.decode_engines)
     ]
     srv = DisaggregatedServer(prefills, decodes, seed=args.seed,

@@ -25,19 +25,24 @@ from .layers import _normal, pdt
 
 
 def rope_cos_sin(positions, d: int, theta: float):
-    """positions [S] (int) -> cos, sin [S, d/2] float32."""
+    """positions [S] or [B, S] (int) -> cos, sin [..., d/2] float32."""
     inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
-    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * inv
     return jnp.cos(ang), jnp.sin(ang)
 
 
 def apply_rope(x, cos, sin):
-    """x [B, S, H, d]; cos/sin [S, d/2] (half-rotation, llama-style)."""
+    """x [B, S, H, d]; cos/sin [S, d/2], or [B, S, d/2] for per-request
+    absolute positions (prefix-offset prefill).  Half-rotation, llama-style."""
     d2 = x.shape[-1] // 2
     x1 = x[..., :d2].astype(jnp.float32)
     x2 = x[..., d2:].astype(jnp.float32)
-    c = cos[None, :, None, :]
-    s = sin[None, :, None, :]
+    if cos.ndim == 3:
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    else:
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
 
 
@@ -120,6 +125,22 @@ def _mask_bias(q_pos, k_pos, causal: bool, kv_len=None, slopes=None, kv_heads=1,
     return bias
 
 
+def _mask_bias_b(q_pos, k_pos, k_valid, causal: bool, slopes=None, kv_heads=1, groups=1):
+    """Batched-positions twin of ``_mask_bias`` for prefix-offset prefill:
+    q_pos/k_pos [B, q]/[B, k] absolute positions, k_valid [B, k] explicit key
+    validity -> bias [B, KV|1, G|1, q, k]."""
+    valid = k_valid[:, None, :]
+    if causal:
+        valid = valid & (k_pos[:, None, :] <= q_pos[:, :, None])
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, None]
+    if slopes is not None:
+        dist = (k_pos[:, None, :] - q_pos[:, :, None]).astype(jnp.float32)
+        ab = slopes.reshape(1, kv_heads, groups, 1, 1) * dist[:, None, None]
+        ab = jnp.where(valid[:, None, None], ab, 0.0)
+        bias = bias + ab
+    return bias
+
+
 def attn_core(
     q,
     k,
@@ -130,6 +151,7 @@ def attn_core(
     k_positions,
     kv_len=None,
     true_len=None,
+    k_valid=None,
     slopes=None,
     q_chunk: Optional[int] = None,
     scale: Optional[float] = None,
@@ -142,15 +164,21 @@ def attn_core(
     ``true_len`` [B] masks keys at positions >= true_len[b] — the per-request
     length mask for right-padded (bucketed) prefill batches.  Padding keys get
     -1e30 before the softmax, so exp underflows to exactly 0 and real-token
-    outputs are bit-identical to the unpadded computation."""
+    outputs are bit-identical to the unpadded computation.
+
+    Prefix-offset (tail-only) prefill passes per-request ABSOLUTE positions:
+    q_positions/k_positions [B, Sq]/[B, Skv] plus an explicit ``k_valid``
+    [B, Skv] key mask (prefix-length + tail-length validity); ``kv_len`` and
+    ``true_len`` are the 1D-positions path's masks and are ignored there."""
     B, Sq, H, dq = q.shape
     KV = k.shape[2]
     G = H // KV
     dv = v.shape[-1]
     scale = scale if scale is not None else dq ** -0.5
     qg = q.reshape(B, Sq, KV, G, dq)
+    batched_pos = jnp.asarray(q_positions).ndim == 2
     kv_valid = None
-    if true_len is not None:
+    if not batched_pos and true_len is not None:
         tl = jnp.asarray(true_len)
         kv_valid = k_positions[None, :] < tl[:, None]  # [B, Skv]
 
@@ -158,9 +186,12 @@ def attn_core(
         # qb [B, c, KV, G, dq] -> out [B, c, KV, G, dv]
         s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k, preferred_element_type=jnp.float32)
         s = s * scale
-        s = s + _mask_bias(qpos, k_positions, causal, kv_len, slopes, KV, G)
-        if kv_valid is not None:
-            s = jnp.where(kv_valid[:, None, None, None, :], s, -1e30)
+        if batched_pos:
+            s = s + _mask_bias_b(qpos, k_positions, k_valid, causal, slopes, KV, G)
+        else:
+            s = s + _mask_bias(qpos, k_positions, causal, kv_len, slopes, KV, G)
+            if kv_valid is not None:
+                s = jnp.where(kv_valid[:, None, None, None, :], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
 
@@ -170,7 +201,10 @@ def attn_core(
         assert Sq % q_chunk == 0, (Sq, q_chunk)
         nc = Sq // q_chunk
         qs = jnp.moveaxis(qg.reshape(B, nc, q_chunk, KV, G, dq), 1, 0)
-        ps = q_positions.reshape(nc, q_chunk)
+        if batched_pos:
+            ps = jnp.moveaxis(q_positions.reshape(B, nc, q_chunk), 1, 0)
+        else:
+            ps = q_positions.reshape(nc, q_chunk)
 
         def body(_, xs):
             qb, qpos = xs
@@ -251,14 +285,28 @@ def _qkv(p, x, cfg: ModelConfig):
     return q, k, v
 
 
-def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool, true_len=None):
+def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool, true_len=None,
+                prefix_kv=None, prefix_len=None):
     """x [B,S,D] -> (out [B,S,D], cache {k,v:[B,S,KV,dh]} or None).
 
     ``true_len`` [B]: per-request valid prefix for right-padded batches; keys
     beyond it are masked (cache rows beyond it are overwritten by decode
-    before they are ever attended, see serving/kvcache.py)."""
+    before they are ever attended, see serving/kvcache.py).
+
+    ``prefix_kv`` {k,v: [B, Lp, KV, dh]} + ``prefix_len`` [B] switch to
+    prefix-offset (tail-only) prefill: ``x`` holds only the UNCACHED tail of
+    each prompt, queries/keys sit at absolute positions prefix_len[b] + j,
+    and attention runs over [cached prefix ‖ fresh tail].  Prefix keys are
+    already roped (the cache stores post-RoPE K); entries at or past
+    prefix_len[b] — gather padding — are masked to exact zeros, so the tail
+    computation is bit-identical to a full-prompt prefill of the same tokens.
+    ``true_len`` then counts TAIL tokens and the returned cache is tail-only.
+    """
     B, S, _ = x.shape
-    pos = jnp.arange(S)
+    if prefix_kv is not None:
+        pos = prefix_len[:, None] + jnp.arange(S)[None, :]  # [B, S] absolute
+    else:
+        pos = jnp.arange(S)
     q, k, v = _qkv(p, x, cfg)
     if cfg.pos_emb == "rope":
         cos, sin = rope_cos_sin(pos, cfg.d_head, cfg.rope_theta)
@@ -269,17 +317,42 @@ def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool, true_l
     q = constrain(q, ("batch", None, "heads", "head_dim"))
     k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
     v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
-    o = attn_core(
-        q, k, v,
-        causal=cfg.causal,
-        q_positions=pos,
-        k_positions=pos,
-        true_len=true_len,
-        slopes=slopes,
-        q_chunk=default_q_chunk(S),
-    )
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     cache = {"k": k, "v": v} if want_cache else None
+    if prefix_kv is not None:
+        pk = prefix_kv["k"].astype(k.dtype)
+        pv = prefix_kv["v"].astype(v.dtype)
+        Lp = pk.shape[1]
+        lp_idx = jnp.arange(Lp)
+        k_all = jnp.concatenate([pk, k], axis=1)
+        v_all = jnp.concatenate([pv, v], axis=1)
+        k_positions = jnp.concatenate(
+            [jnp.broadcast_to(lp_idx[None, :], (B, Lp)), pos], axis=1
+        )
+        k_valid = jnp.concatenate(
+            [lp_idx[None, :] < prefix_len[:, None],
+             jnp.arange(S)[None, :] < jnp.asarray(true_len)[:, None]],
+            axis=1,
+        )
+        o = attn_core(
+            q, k_all, v_all,
+            causal=cfg.causal,
+            q_positions=pos,
+            k_positions=k_positions,
+            k_valid=k_valid,
+            slopes=slopes,
+            q_chunk=default_q_chunk(S),
+        )
+    else:
+        o = attn_core(
+            q, k, v,
+            causal=cfg.causal,
+            q_positions=pos,
+            k_positions=pos,
+            true_len=true_len,
+            slopes=slopes,
+            q_chunk=default_q_chunk(S),
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, cache
 
 
@@ -410,11 +483,21 @@ def _mla_ckv(p, x, cfg, cos, sin):
     return ckv, k_rope
 
 
-def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
-    """Naive (expanded) MLA for prefill; caches the compressed ckv."""
+def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None,
+                prefix_kv=None, prefix_len=None):
+    """Naive (expanded) MLA for prefill; caches the compressed ckv.
+
+    ``prefix_kv`` {ckv: [B, Lp, r], k_rope: [B, Lp, rd]} + ``prefix_len`` [B]
+    run prefix-offset (tail-only) prefill: the cached compressed prefix is
+    expanded through ``wkv_b`` (the same einsum a full prefill applies, so
+    the bits match) and attended ahead of the fresh tail — see gqa_prefill.
+    """
     a = cfg.mla
     B, S, _ = x.shape
-    pos = jnp.arange(S)
+    if prefix_kv is not None:
+        pos = prefix_len[:, None] + jnp.arange(S)[None, :]  # [B, S] absolute
+    else:
+        pos = jnp.arange(S)
     cos, sin = rope_cos_sin(pos, a.qk_rope_head_dim, cfg.rope_theta)
     q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)
     ckv, k_rope = _mla_ckv(p, x, cfg, cos, sin)
@@ -428,17 +511,50 @@ def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
     q = constrain(q, ("batch", None, "heads", None))
     k = constrain(k, ("batch", None, "heads", None))
     v = constrain(v, ("batch", None, "heads", None))
-    o = attn_core(
-        q, k, v,
-        causal=cfg.causal,
-        q_positions=pos,
-        k_positions=pos,
-        true_len=true_len,
-        q_chunk=default_q_chunk(S),
-        scale=(a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5,
-    )
-    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
     cache = {"ckv": ckv, "k_rope": k_rope} if want_cache else None
+    scale = (a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5
+    if prefix_kv is not None:
+        pckv = prefix_kv["ckv"].astype(ckv.dtype)
+        pkrope = prefix_kv["k_rope"].astype(k_rope.dtype)
+        Lp = pckv.shape[1]
+        kv_p = jnp.einsum("bsr,rhk->bshk", pckv, p["wkv_b"])
+        k_p = jnp.concatenate(
+            [kv_p[..., : a.qk_nope_head_dim],
+             jnp.broadcast_to(pkrope[:, :, None], (B, Lp, H, a.qk_rope_head_dim))],
+            -1,
+        )
+        v_p = kv_p[..., a.qk_nope_head_dim :]
+        lp_idx = jnp.arange(Lp)
+        k_all = jnp.concatenate([k_p, k], axis=1)
+        v_all = jnp.concatenate([v_p, v], axis=1)
+        k_positions = jnp.concatenate(
+            [jnp.broadcast_to(lp_idx[None, :], (B, Lp)), pos], axis=1
+        )
+        k_valid = jnp.concatenate(
+            [lp_idx[None, :] < prefix_len[:, None],
+             jnp.arange(S)[None, :] < jnp.asarray(true_len)[:, None]],
+            axis=1,
+        )
+        o = attn_core(
+            q, k_all, v_all,
+            causal=cfg.causal,
+            q_positions=pos,
+            k_positions=k_positions,
+            k_valid=k_valid,
+            q_chunk=default_q_chunk(S),
+            scale=scale,
+        )
+    else:
+        o = attn_core(
+            q, k, v,
+            causal=cfg.causal,
+            q_positions=pos,
+            k_positions=pos,
+            true_len=true_len,
+            q_chunk=default_q_chunk(S),
+            scale=scale,
+        )
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
     return out, cache
 
 

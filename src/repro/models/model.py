@@ -223,13 +223,21 @@ def _slopes(cfg: ModelConfig):
     return attn.alibi_slopes(cfg.n_heads) if cfg.pos_emb == "alibi" else None
 
 
-def _embed_in(params, batch, cfg: ModelConfig):
-    """batch: int tokens [B,S] or precomputed embeddings [B,S,D] (stub frontends)."""
+def _embed_in(params, batch, cfg: ModelConfig, pos0=None):
+    """batch: int tokens [B,S] or precomputed embeddings [B,S,D] (stub frontends).
+
+    ``pos0`` [B]: per-request absolute position offset (prefix-offset prefill)
+    for learned position embeddings; rope/alibi handle offsets in the mixers.
+    """
     if jnp.issubdtype(batch.dtype, jnp.integer):
         x = L.embed_apply(params["embed"], batch, cfg)
-        x = L.add_positions(params["embed"], x, cfg)
     else:
         x = batch.astype(L.pdt(cfg))
+    if pos0 is not None and cfg.pos_emb == "learned":
+        S = x.shape[1]
+        idx = pos0[:, None] + jnp.arange(S)[None, :]  # [B, S]
+        x = x + jnp.take(params["embed"]["pos"], idx, axis=0)
+    else:
         x = L.add_positions(params["embed"], x, cfg)
     return constrain(x, ("batch", "seq", None))
 
@@ -243,6 +251,8 @@ def _block_apply(
     n_groups: int = 1,
     true_len=None,
     block_tables=None,
+    prefix_kv=None,
+    prefix_len=None,
 ):
     """One (mixer, ffn) block. Returns (x, new_cache, aux)."""
     aux = {}
@@ -262,13 +272,21 @@ def _block_apply(
             want = mode == "prefill"
             if cfg.attn_type == "mla":
                 a_out, new_cache = attn.mla_prefill(
-                    bp["mixer"], h, cfg, want_cache=want, true_len=true_len
+                    bp["mixer"], h, cfg, want_cache=want, true_len=true_len,
+                    prefix_kv=prefix_kv, prefix_len=prefix_len,
                 )
             else:
                 a_out, new_cache = attn.gqa_prefill(
-                    bp["mixer"], h, cfg, slopes=slopes, want_cache=want, true_len=true_len
+                    bp["mixer"], h, cfg, slopes=slopes, want_cache=want, true_len=true_len,
+                    prefix_kv=prefix_kv, prefix_len=prefix_len,
                 )
     elif mixer == "mamba":
+        if prefix_kv is not None:
+            raise ValueError(
+                "prefix-offset prefill is attention-only: SSM state is a "
+                "whole-prompt function (hybrid engines use the full-recompute "
+                "pages-only sharing path)"
+            )
         if mode == "decode":
             a_out, new_cache = ssm_mod.mamba_decode(bp["mixer"], h, cfg, cache, pos)
         else:
@@ -298,21 +316,24 @@ def _zero_aux():
 
 
 def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_groups=1,
-               remat: bool = False, true_len=None, block_tables=None):
+               remat: bool = False, true_len=None, block_tables=None,
+               prefix_kv=None, prefix_len=None):
     """Scan over n_repeats; pattern positions applied sequentially in the body."""
     slopes = _slopes(cfg)
     P = len(cfg.block_pattern)
 
-    def body(x, xs):
+    def body(x, xs, prefix_reps=None):
         reps, cache_reps = xs
         new_caches = []
         aux_sum = _zero_aux()
         for i, (mixer, ffn) in enumerate(cfg.block_pattern):
             c = None if cache_reps is None else cache_reps[i]
+            pk = None if prefix_reps is None else prefix_reps[i]
             x_new, nc, aux = _block_apply(
                 reps[i], x, cfg, mixer, ffn,
                 mode=mode, cache=c, pos=pos, slopes=slopes, n_groups=n_groups,
                 true_len=true_len, block_tables=block_tables,
+                prefix_kv=pk, prefix_len=prefix_len,
             )
             x = x_new
             new_caches.append(nc)
@@ -320,7 +341,18 @@ def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_gr
                 aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
         return x, (new_caches, aux_sum)
 
-    if caches is None:
+    if caches is None and prefix_kv is not None:
+        # prefix-offset prefill: the cached prefix K/V rides as read-only
+        # scan xs alongside the params (same stacked-[R] layout as decode)
+        def sbp(carry, xs_t):
+            reps, pref = xs_t
+            x, (ncs, aux) = body(carry, (reps, None), prefix_reps=pref)
+            return x, (ncs, aux)
+
+        x, (stacked_caches, aux_seq) = jax.lax.scan(
+            sbp, x, (params["blocks"], prefix_kv)
+        )
+    elif caches is None:
         # scan only over params
         def sb(carry, reps):
             x, (ncs, aux) = body(carry, (reps, None))
@@ -363,7 +395,8 @@ def forward_train(params, batch, cfg: ModelConfig, *, n_groups: int = 1, remat: 
 
 
 def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
-            pad_cache_to: Optional[int] = None, true_len=None):
+            pad_cache_to: Optional[int] = None, true_len=None,
+            prefix_kv=None, prefix_len=None):
     """Prefill pass.  Returns (last-position logits [B,V], caches).
 
     ``pad_cache_to``: right-pad attention KV caches to this length so decode
@@ -374,10 +407,22 @@ def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
     in-kernel, and the returned logits are taken at position true_len-1 per
     row instead of the last padded position.  Rows with true_len == 0 are
     dummy (batch padding); their logits/caches are garbage by contract.
+
+    ``prefix_kv`` (list per pattern position of cached attn K/V,
+    [R, B, Lp, ...] leaves) + ``prefix_len`` [B] int32 switch to
+    prefix-offset (tail-only) prefill: ``batch`` holds only each prompt's
+    uncached tail, queries run at absolute positions prefix_len[b] + j over
+    [cached prefix ‖ tail], and the returned caches cover the tail only.
+    ``true_len`` then counts tail tokens (logits at tail position
+    true_len - 1, i.e. absolute prefix_len + true_len - 1).  Attention-only
+    models; SSM mixers raise (their state needs the whole prompt).
     """
-    x = _embed_in(params, batch, cfg)
+    x = _embed_in(params, batch, cfg,
+                  pos0=None if prefix_len is None else jnp.asarray(prefix_len))
     x, caches, aux = _run_stack(params, x, cfg, mode="prefill", n_groups=n_groups,
-                                true_len=true_len)
+                                true_len=true_len, prefix_kv=prefix_kv,
+                                prefix_len=None if prefix_len is None
+                                else jnp.asarray(prefix_len))
     x = L.norm_apply(params["final_norm"], x, cfg)
     if true_len is None:
         last = x[:, -1]

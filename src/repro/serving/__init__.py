@@ -5,6 +5,8 @@ from .engine import (  # noqa: F401
     GenRequest,
     MonolithicEngine,
     PrefillEngine,
+    PrefixMatch,
     SchedulerExhausted,
 )
+from .prefix_cache import PrefixIndex, chunk_hashes  # noqa: F401
 from .sampling import SamplingParams, sample  # noqa: F401

@@ -43,6 +43,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as M
 from . import kvcache
+from .prefix_cache import PrefixIndex, chunk_hashes
 from .sampling import SamplingParams, sample
 
 DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
@@ -57,6 +58,28 @@ class GenRequest:
     # outputs
     tokens: List[int] = field(default_factory=list)
     done: bool = False
+
+
+@dataclass
+class PrefixMatch:
+    """A prompt's hit against a decode engine's prefix index.
+
+    pages     physical pool pages of the matched page-aligned prefix
+    n_shared  == len(pages) logical pages covered
+    hashes    chain hashes for ALL full prompt chunks (drives registration of
+              the not-yet-cached chunks after admit)
+    tail      True iff the kv_pack handed to ``admit`` holds ONLY the
+              uncached tail (its first page is logical page n_shared).  It
+              describes the PACK, not the model: ``match_prefix`` always
+              returns False, and the scheduler flips it after actually
+              running a tail-only prefill.  Passing a full-prompt pack with
+              tail=True would scatter prompt-head K/V onto tail pages.
+    """
+
+    pages: List[int]
+    n_shared: int
+    hashes: List[bytes]
+    tail: bool = False
 
 
 def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
@@ -141,7 +164,8 @@ class PrefillEngine:
         return self._fns[key]
 
     def prefill_batch(
-        self, reqs: List[GenRequest], key, *, pad_to: Optional[int] = None
+        self, reqs: List[GenRequest], key, *, pad_to: Optional[int] = None,
+        prefix=None,
     ) -> Tuple[List[int], Any, List[int]]:
         """Prefill same-bucket requests stacked to [B, S_bucket].
 
@@ -150,20 +174,60 @@ class PrefillEngine:
         (``kvcache.slice_request``).  ``pad_to`` right-pads the batch with
         dummy rows (true_len=0) so the jit cache sees one batch size per
         bucket.
+
+        ``prefix`` = (prefix_pack, shared_lens) switches to prefix-offset
+        (tail-only) prefill: row i runs only ``prompt[shared_lens[i]:]`` at
+        absolute positions ``shared_lens[i] + j``, attending the cached
+        prefix K/V in ``prefix_pack`` ([R, B, Lp, ...] attn leaves, gathered
+        from a paged decode engine's pool).  ``shared_lens`` are page-chunk
+        aligned and always leave >= 1 tail token (the logits position must be
+        recomputed).  The returned ``true_lens`` are still the FULL prompt
+        lengths (admit positions); the kv pack covers the tail only.
         """
-        true_lens = [len(r.prompt) for r in reqs]
-        S = self._pad_len(max(true_lens))
+        if prefix is None:
+            shared_lens = [0] * len(reqs)
+        else:
+            _, shared_lens = prefix
+        full_lens = [len(r.prompt) for r in reqs]
+        tails = [n - s for n, s in zip(full_lens, shared_lens)]
+        S = self._pad_len(max(tails))
         B = max(pad_to or len(reqs), len(reqs))
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, : true_lens[i]] = np.asarray(r.prompt, np.int32)
+            toks[i, : tails[i]] = np.asarray(r.prompt[shared_lens[i] :], np.int32)
         tl = np.zeros((B,), np.int32)
-        tl[: len(reqs)] = true_lens
-        first, caches = self._fn(S, B)(
-            self.params, jnp.asarray(toks), jnp.asarray(tl), key
-        )
+        tl[: len(reqs)] = tails
+        if prefix is None:
+            first, caches = self._fn(S, B)(
+                self.params, jnp.asarray(toks), jnp.asarray(tl), key
+            )
+        else:
+            pack = prefix[0]
+            Lp = max(
+                (a.shape[2] for a in jax.tree.leaves(pack) if a.ndim >= 3), default=0
+            )
+            plen = np.zeros((B,), np.int32)
+            plen[: len(reqs)] = shared_lens
+            first, caches = self._prefix_fn(S, B, Lp)(
+                self.params, jnp.asarray(toks), jnp.asarray(tl), key,
+                pack, jnp.asarray(plen),
+            )
         first = np.asarray(first)
-        return [int(first[i]) for i in range(len(reqs))], caches, true_lens
+        return [int(first[i]) for i in range(len(reqs))], caches, full_lens
+
+    def _prefix_fn(self, S: int, B: int, Lp: int):
+        key = (S, B, Lp)
+        if key not in self._fns:
+            cfg, sampling = self.cfg, self.sampling
+
+            def f(p, toks, tl, k, pkv, plen):
+                logits, caches, _ = M.prefill(
+                    p, toks, cfg, true_len=tl, prefix_kv=pkv, prefix_len=plen
+                )
+                return sample(logits, k, sampling), caches
+
+            self._fns[key] = jax.jit(f)
+        return self._fns[key]
 
     def prefill(self, req: GenRequest, key) -> Tuple[int, Any, int]:
         """Single-request prefill.  Returns (first_token, kv_pack, true_len).
@@ -213,13 +277,26 @@ class DecodeEngine:
     ``paged=True`` switches the KV cache to the paged layout
     (``kvcache.PagedDecodeState``): attention slabs become page pools shared
     across slots, each slot holds a block table, and pages are allocated on
-    demand inside the fused decode scan by the device-resident allocator.
-    Admission becomes KV-capacity aware: a request needs a free slot AND
-    enough unreserved pages for its prompt plus a growth reservation
+    demand inside the fused decode scan by the device-resident refcounted
+    allocator.  Admission becomes KV-capacity aware: a request needs a free
+    slot AND enough unreserved pages for its prompt plus a growth reservation
     (max_new_tokens + the decode-block overshoot margin), so ``max_slots``
     can exceed what slab HBM would allow and short requests no longer pin
     ``max_len`` positions each.  Token streams are bit-identical to the slab
     engine under a fixed seed (same math, same PRNG stream).
+
+    ``prefix_cache=True`` (paged only) adds refcounted prefix sharing: prompt
+    pages are registered in a host-side chained-hash index
+    (``prefix_cache.PrefixIndex``) holding a +1 device refcount per cached
+    page, and a request whose prompt shares a page-aligned prefix with a
+    cached one maps the cached physical pages into its block table instead of
+    recomputing and rewriting them — the reservation then counts only the NEW
+    pages (tail + growth), prefill runs only on the uncached tail (attention-
+    only models; hybrids recompute but still share pages), and the fused
+    decode block performs copy-on-write before writing any page with
+    ``refs > 1``.  Streams stay bit-identical to the unshared paged engine.
+    ``fork()`` clones a live request into a new slot at zero KV cost
+    (best-of-n); the branches diverge through COW.
     """
 
     def __init__(
@@ -236,6 +313,7 @@ class DecodeEngine:
         paged: bool = False,
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        prefix_cache: bool = False,
     ):
         self.params = params
         self.cfg = cfg
@@ -245,6 +323,7 @@ class DecodeEngine:
         self.decode_block = max(1, decode_block)
         self.donate = donate
         self.paged = paged
+        self.prefix_cache = bool(paged and prefix_cache)
         self.slots = kvcache.SlotState(max_slots, max_len)
         # fold_in a tag so the decode sampling stream is never the same
         # threefry stream as a server/prefill PRNGKey(seed) chain
@@ -256,7 +335,28 @@ class DecodeEngine:
             self.pages_per_slot = max_len // page_size
             # default pool: the slab engine's HBM budget, in pages
             self.n_pages = n_pages if n_pages is not None else max_slots * self.pages_per_slot
-            self._reserved = [0] * max_slots  # pages reserved per slot (host mirror)
+            # host mirrors for the refcounted allocator: _href mirrors the
+            # device refcounts of ADMIT-TIME pages (slot holds + cache holds;
+            # decode-time growth/COW allocations are covered by _growth);
+            # page truth stays on device in state.page_refs.
+            self._href = np.zeros(self.n_pages, np.int64)
+            self._growth = [0] * max_slots  # outstanding decode-time allocation allowance
+            self._slot_new = [0] * max_slots  # non-shared pages mapped at admit
+            self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+            self._tail_ok = all(m == "attn" for m, _ in cfg.block_pattern)
+            self.prefix: Optional[PrefixIndex] = (
+                PrefixIndex(page_size) if self.prefix_cache else None
+            )
+            self._pins: Dict[int, List[int]] = {}  # rid -> pinned prefix pages
+            self._gather_fns: Dict[Tuple[int, int], Any] = {}
+            self._fork_fn = None
+            # admission stats: per-request entries live only while the
+            # request does (pruned at release — a long-running server must
+            # not grow without bound); `stats` keeps the cumulative totals
+            # benchmarks read after a workload drains
+            self.admit_new_pages: Dict[int, int] = {}
+            self.admit_shared_pages: Dict[int, int] = {}
+            self.stats = {"admits": 0, "new_pages": 0, "shared_pages": 0}
             self.state: Any = kvcache.init_paged_decode_state(
                 cfg, max_slots, max_len, page_size, self.n_pages, key
             )
@@ -290,33 +390,45 @@ class DecodeEngine:
                 rows = jnp.arange(self.max_slots)
 
                 def blk(params, state: kvcache.PagedDecodeState):
+                    pos0 = state.positions
+                    active = state.active
+                    bt0 = state.block_tables
+                    # Copy-on-write first: any page this block will write
+                    # (positions [pos0, pos0+k) of a writing slot) that is
+                    # shared (refs > 1) gets a fresh page; the writer's table
+                    # entry is redirected and the shared count decremented.
+                    # The view below still gathers through the OLD tables, so
+                    # the shared page's prefix bytes ride into the view and
+                    # the whole-page writeback lands them on the copy.
+                    will_write = active & (pos0 < max_len)
+                    refs, bt = kvcache.cow_redirect(
+                        state.page_refs, bt0, pos0, will_write, k, ps
+                    )
                     # On-demand page allocation, hoisted to block granularity:
                     # the k steps of this block write positions [pos, pos+k)
                     # per slot, so each slot crosses at most k // ps + 1 page
                     # boundaries — map those pages up front (the admission
                     # reservation guarantees free pages exist).  Still one
                     # dispatch, zero host syncs.
-                    owner, bt = state.page_owner, state.block_tables
-                    first = ((state.positions + ps - 1) // ps) * ps
+                    first = ((pos0 + ps - 1) // ps) * ps
                     for j in range(k // ps + 1):
                         b_pos = first + j * ps
-                        need = state.active & (b_pos < state.positions + k) & (
-                            b_pos < max_len
-                        )
-                        owner, new_pages = kvcache.alloc_decode_pages(owner, need)
+                        need = active & (b_pos < pos0 + k) & (b_pos < max_len)
+                        refs, new_pages = kvcache.alloc_decode_pages(refs, need)
                         # scatter fresh pages into the needing slots' table rows
                         # only; other rows aim at column n_pg and are dropped
                         cur = jnp.where(need, b_pos // ps, n_pg)
                         bt = bt.at[rows, cur].set(new_pages, mode="drop")
 
-                    # Gather the slab-layout view of the pools ONCE, run the k
-                    # steps against it (byte-for-byte the slab scan body, so
-                    # per-step cost and token streams match the slab engine),
-                    # then write the block's fresh positions back to the pool.
-                    # The view is transient within this jitted block.
-                    pos0 = state.positions
-                    active = state.active
-                    view = kvcache.paged_gather_view(state.caches, bt, cfg)
+                    # Gather the slab-layout view of the pools ONCE — through
+                    # the PRE-COW tables (fresh boundary/COW pages hold
+                    # garbage that decode overwrites before attending) — run
+                    # the k steps against it (byte-for-byte the slab scan
+                    # body, so per-step cost and token streams match the slab
+                    # engine), then write the block's fresh positions back to
+                    # the pool through the POST-COW tables.  The view is
+                    # transient within this jitted block.
+                    view = kvcache.paged_gather_view(state.caches, bt0, cfg)
 
                     def one(carry, _):
                         view, tokens, positions, key = carry
@@ -340,7 +452,7 @@ class DecodeEngine:
                     )
                     return (
                         kvcache.PagedDecodeState(
-                            caches, bt, owner, tokens, positions, active, key
+                            caches, bt, refs, tokens, positions, active, key
                         ),
                         toks,  # [k, max_slots]
                     )
@@ -388,10 +500,13 @@ class DecodeEngine:
             if self.paged:
                 ps = self.page_size
 
-                def adm(state: kvcache.PagedDecodeState, kv, b, slot, token, pos):
+                def adm(state: kvcache.PagedDecodeState, kv, b, slot, token, pos,
+                        shared_pages, n_shared, reg_mask, pack_page0):
                     single = kvcache.slice_request(kv, b)
                     return kvcache.paged_admit(
-                        state, single, slot, token, pos, cfg, page_size=ps
+                        state, single, slot, token, pos, cfg, page_size=ps,
+                        shared_pages=shared_pages, n_shared=n_shared,
+                        reg_mask=reg_mask, pack_page0=pack_page0,
                     )
             else:
 
@@ -420,9 +535,46 @@ class DecodeEngine:
         return -(-cap // self.page_size)
 
     @property
+    def _reserved(self) -> List[int]:
+        """Per-slot pages reserved beyond any shared prefix (derived, not
+        stored: non-shared admit pages + outstanding growth — a single
+        source of truth with the ``free_pages`` accounting)."""
+        if not self.paged:
+            return []
+        return [n + g for n, g in zip(self._slot_new, self._growth)]
+
+    @property
     def free_pages(self) -> int:
-        """Unreserved pages (host mirror; only meaningful when paged)."""
-        return self.n_pages - sum(self._reserved) if self.paged else 0
+        """Pages free for a NEW reservation (host mirror; paged only):
+        pool minus host-known held pages (live slot mappings + prefix-cache
+        holds) minus every slot's outstanding decode-growth allowance."""
+        if not self.paged:
+            return 0
+        held = int((self._href > 0).sum())
+        return self.n_pages - held - sum(self._growth)
+
+    def _evictable_pages(self) -> int:
+        """Prefix-cache pages that could be reclaimed right now: unpinned and
+        held ONLY by the cache (evicting a page still mapped by live slots
+        frees no capacity)."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.evictable(lambda p: self._href[p] == 1)
+
+    def _evict_for(self, need: int) -> bool:
+        """LRU-evict cache-only prefix pages until ``need`` pages are free."""
+        while self.free_pages < need:
+            if self.prefix is None:
+                return False
+            page = self.prefix.evict_one(lambda p: self._href[p] == 1)
+            if page is None:
+                return False
+            # drop the device-side cache hold; refs hit 0 -> reclaimable
+            self.state = self.state._replace(
+                page_refs=self.state.page_refs.at[page].add(-1)
+            )
+            self._href[page] -= 1
+        return True
 
     def can_ever_admit(self, true_len: int, max_new_tokens: int) -> bool:
         """Whether this request could be admitted to an EMPTY engine."""
@@ -432,18 +584,76 @@ class DecodeEngine:
             return False
         return True
 
-    def can_admit(self, true_len: int, max_new_tokens: int) -> bool:
+    def can_admit(self, true_len: int, max_new_tokens: int, n_shared: int = 0) -> bool:
         """Whether admission would succeed right now: a free slot AND (paged)
-        enough unreserved pages for prompt + growth reservation."""
+        enough unreserved pages — counting only pages NOT covered by a shared
+        prefix, and counting LRU-evictable cache-only pages as free."""
         if not self.can_ever_admit(true_len, max_new_tokens):
             return False
         if self.slots.n_active >= self.max_slots:
             return False
-        if self.paged and self._pages_needed(true_len, max_new_tokens) > self.free_pages:
-            return False
+        if self.paged:
+            need = self._pages_needed(true_len, max_new_tokens) - n_shared
+            if need > self.free_pages + self._evictable_pages():
+                return False
         return True
 
     # -- public API ---------------------------------------------------------
+
+    def match_prefix(self, prompt, rid: Optional[int] = None, *,
+                     hashes: Optional[List[bytes]] = None,
+                     touch: bool = True) -> Optional[PrefixMatch]:
+        """Look up the prompt's page-aligned prefix in the prefix index.
+
+        Returns a ``PrefixMatch`` (n_shared may be 0 — it still carries the
+        chunk hashes for post-admit registration) or None when the engine has
+        no prefix cache.  With ``rid`` set, the matched pages are pinned until
+        ``admit``/``release_prefix_pin`` so LRU eviction cannot take them.
+        ``hashes`` skips recomputing the chunk hashes (they are a pure
+        function of the immutable prompt — the scheduler memoizes them);
+        ``touch=False`` marks a scheduler scan that must not refresh LRU
+        recency (the touch happens at ``pin_prefix`` when a match is taken).
+        """
+        if not self.prefix_cache:
+            return None
+        ps = self.page_size
+        n = len(prompt)
+        if hashes is None:
+            hashes = chunk_hashes(prompt, ps, self.pages_per_slot)
+        # cap: at least one prompt token is always recomputed (logits need
+        # the last position's hidden state)
+        cap = min((n - 1) // ps, self.pages_per_slot)
+        pages = self.prefix.match(hashes[:cap], touch=touch)
+        # tail=False: safe for any pack.  The scheduler sets tail=True only
+        # after it actually prefilled just the uncached tail (see PrefixMatch).
+        m = PrefixMatch(pages=pages, n_shared=len(pages), hashes=hashes)
+        if rid is not None and pages:
+            self.pin_prefix(rid, m)
+        return m
+
+    def pin_prefix(self, rid: int, match: PrefixMatch) -> None:
+        if self.prefix is not None and match.pages and rid not in self._pins:
+            self.prefix.pin(match.pages)
+            self.prefix.touch(match.hashes[: match.n_shared])
+            self._pins[rid] = list(match.pages)
+
+    def release_prefix_pin(self, rid: int) -> None:
+        pages = self._pins.pop(rid, None)
+        if pages and self.prefix is not None:
+            self.prefix.unpin(pages)
+
+    def gather_prefix(self, tables) -> Any:
+        """Gather cached prefix pages into a contiguous [R, B, Lp, ...] pack
+        for tail-only prefill.  ``tables`` [B, n_pg] int32 physical pages,
+        trash-padded; read-only on the pool (no donation)."""
+        tables = np.asarray(tables, np.int32)
+        key = tables.shape
+        if key not in self._gather_fns:
+            cfg = self.cfg
+            self._gather_fns[key] = jax.jit(
+                lambda caches, t: kvcache.gather_prefix_pack(caches, t, cfg)
+            )
+        return self._gather_fns[key](self.state.caches, jnp.asarray(tables))
 
     def admit(
         self,
@@ -453,39 +663,174 @@ class DecodeEngine:
         true_len: int,
         *,
         batch_index: int = 0,
+        prefix: Optional[PrefixMatch] = None,
     ) -> Optional[int]:
         """Insert a prefilled request into a free slot (the KV handoff).
 
         ``kv_pack`` may be a batched prefill pack; ``batch_index`` selects
         the row, sliced out on device inside the jitted admit.  Returns None
         when the engine is momentarily full (no slot, or — paged — not enough
-        unreserved pages); raises when the request can never fit."""
+        unreserved pages); raises when the request can never fit.
+
+        ``prefix``: a ``match_prefix`` hit — the matched physical pages are
+        mapped into the slot's block table (each +1 ref) instead of being
+        recomputed, and the reservation counts only NEW pages.  ``kv_pack``
+        is a full-prompt pack unless ``prefix.tail`` says the scheduler
+        prefilled only the uncached tail; full-pack prefix writes are steered
+        to the trash page.  After the admit the host registers the request's
+        not-yet-cached full prompt chunks in the prefix index (+1 cache hold
+        each, applied inside the jitted admit via ``reg_mask``)."""
         if true_len + req.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.rid} needs {true_len + req.max_new_tokens} > max_len")
         if self.paged:
-            need = self._pages_needed(true_len, req.max_new_tokens)
+            ps = self.page_size
+            pps = self.pages_per_slot
+            if self.prefix is not None and prefix is None:
+                # admit-time re-match: the pack covers the full prompt (the
+                # prefill ran before this prompt's chunks were registered —
+                # e.g. same-batch duplicates), but already-cached pages can
+                # still be MAPPED instead of re-written (the prefix writes
+                # steer to the trash page): the capacity win without the
+                # compute win.  rid pins the matched pages so the eviction
+                # below can never free a page this very admit is mapping.
+                prefix = self.match_prefix(req.prompt, rid=req.rid)
+            n_shared = prefix.n_shared if prefix is not None else 0
+            need_total = self._pages_needed(true_len, req.max_new_tokens)
+            need = need_total - n_shared
             if need > self.n_pages:
+                self.release_prefix_pin(req.rid)  # caller drops the request
                 raise ValueError(
                     f"request {req.rid} needs {need} pages > pool of {self.n_pages}"
                 )
-            if need > self.free_pages:
-                return None
+            # matched pages are pinned (by the scheduler or the re-match
+            # above), so eviction can only take pages this admit does NOT map
+            if need > self.free_pages and not self._evict_for(need):
+                return None  # pin survives: the caller retries this admit
         slot = self.slots.alloc(req.rid)
         if slot is None:
             return None
         if self.paged:
-            self._reserved[slot] = need
-        self.state = self._admit_fn(kv_pack)(
-            self.state,
-            kv_pack,
-            jnp.int32(batch_index),
-            jnp.int32(slot),
-            jnp.int32(first_token),
-            jnp.int32(true_len),
-        )
+            n_need = -(-true_len // ps)
+            shared_arr = np.full((pps,), self.n_pages, np.int32)
+            if n_shared:
+                shared_arr[:n_shared] = prefix.pages
+            # which fresh pages the host will register (full prompt chunks
+            # whose chain hash is not yet in the index) — they start at
+            # refs == 2 (slot hold + cache hold) inside the jitted admit
+            reg_mask = np.zeros((pps,), bool)
+            hashes: List[bytes] = []
+            if self.prefix is not None:
+                hashes = prefix.hashes  # re-match above guarantees a match obj
+                for j in range(n_shared, min(true_len // ps, pps, len(hashes))):
+                    if hashes[j] not in self.prefix:
+                        reg_mask[j] = True
+            pack_page0 = n_shared if (prefix is not None and prefix.tail) else 0
+            self.state = self._admit_fn(kv_pack)(
+                self.state,
+                kv_pack,
+                jnp.int32(batch_index),
+                jnp.int32(slot),
+                jnp.int32(first_token),
+                jnp.int32(true_len),
+                jnp.asarray(shared_arr),
+                jnp.int32(n_shared),
+                jnp.asarray(reg_mask),
+                jnp.int32(pack_page0),
+            )
+            # admit-time host bookkeeping (one tiny sync, same lifecycle spot
+            # as the first-token readback): learn the physical pages so the
+            # host can mirror holds, register chunks, and route future
+            # prefix matches
+            row = [int(p) for p in np.asarray(self.state.block_tables[slot])[:n_need]]
+            self._slot_pages[slot] = row
+            for p in row:
+                self._href[p] += 1
+            if self.prefix is not None:
+                for j in range(pps):
+                    if reg_mask[j]:
+                        self.prefix.insert(hashes[j], row[j])
+                        self._href[row[j]] += 1
+            self._growth[slot] = need_total - n_need
+            self._slot_new[slot] = n_need - n_shared
+            self.admit_new_pages[req.rid] = need
+            self.admit_shared_pages[req.rid] = n_shared
+            self.stats["admits"] += 1
+            self.stats["new_pages"] += need
+            self.stats["shared_pages"] += n_shared
+            self.release_prefix_pin(req.rid)
+        else:
+            self.state = self._admit_fn(kv_pack)(
+                self.state,
+                kv_pack,
+                jnp.int32(batch_index),
+                jnp.int32(slot),
+                jnp.int32(first_token),
+                jnp.int32(true_len),
+            )
         self.slots.lengths[slot] = true_len
         self.requests[req.rid] = req
         req.tokens.append(first_token)
+        return slot
+
+    def fork(
+        self, new_req: GenRequest, src_rid: int, token: Optional[int] = None
+    ) -> Optional[int]:
+        """Clone a live request's decode state into a free slot at zero KV
+        cost (best-of-n / beam branch): the block-table row is copied with a
+        +1 refcount per mapped page; no cache bytes move.  ``token`` replaces
+        the branch's last emitted token so the streams diverge — the first
+        write either branch makes into the shared tail page is redirected to
+        a private copy by the fused block's copy-on-write.
+
+        The fork reserves its remaining growth pages plus 2 COW-copy pages
+        (both branches may copy the shared tail page within one block).
+        Returns the new slot or None when slots/pages are exhausted."""
+        if not self.paged:
+            raise ValueError("fork() requires the paged KV cache")
+        if src_rid not in self.requests:
+            raise KeyError(f"request {src_rid} is not decoding here")
+        src_slot = self.slots.request_ids.index(src_rid)
+        src_req = self.requests[src_rid]
+        ps = self.page_size
+        cur_len = min(self.slots.lengths[src_slot], self.max_len)
+        remaining = new_req.max_new_tokens - len(src_req.tokens)
+        if remaining <= 0:
+            raise ValueError(
+                f"fork of {src_rid}: max_new_tokens {new_req.max_new_tokens} "
+                f"already exhausted by the {len(src_req.tokens)} cloned tokens"
+            )
+        n_mapped = -(-cur_len // ps)
+        need_total = self._pages_needed(cur_len, remaining)
+        growth = max(need_total - n_mapped, 0) + 2
+        if growth > self.free_pages and not self._evict_for(growth):
+            return None
+        slot = self.slots.alloc(new_req.rid)
+        if slot is None:
+            return None
+        new_req.tokens = list(src_req.tokens)
+        tok = int(token) if token is not None else new_req.tokens[-1]
+        new_req.tokens[-1] = tok
+        if self._fork_fn is None:
+            cfg = self.cfg
+            self._fork_fn = self._jit(
+                lambda st, s, d, t: kvcache.paged_fork(st, s, d, t, cfg)
+            )
+        self.state = self._fork_fn(
+            self.state, jnp.int32(src_slot), jnp.int32(slot), jnp.int32(tok)
+        )
+        row = [int(p) for p in np.asarray(self.state.block_tables[slot])[:n_mapped]]
+        self._slot_pages[slot] = row
+        for p in row:
+            self._href[p] += 1
+        self._growth[slot] = growth
+        self._slot_new[slot] = 0  # every mapped page is shared with the source
+        self.slots.lengths[slot] = cur_len
+        self.requests[new_req.rid] = new_req
+        self.admit_new_pages[new_req.rid] = growth
+        self.admit_shared_pages[new_req.rid] = n_mapped
+        self.stats["admits"] += 1
+        self.stats["new_pages"] += growth
+        self.stats["shared_pages"] += n_mapped
         return slot
 
     def _auto_block(self) -> int:
@@ -528,13 +873,24 @@ class DecodeEngine:
                     self.slots.free(slot)
                     freed.append(slot)
                     del self.requests[rid]
+                    if self.paged:
+                        # per-request stat entries live only as long as the
+                        # request; cumulative totals stay in self.stats
+                        self.admit_new_pages.pop(rid, None)
+                        self.admit_shared_pages.pop(rid, None)
                     break
         if freed:
             keep = np.ones((self.max_slots,), bool)
             keep[freed] = False
             if self.paged:
                 for s in freed:
-                    self._reserved[s] = 0
+                    self._growth[s] = 0
+                    self._slot_new[s] = 0
+                    for p in self._slot_pages[s]:
+                        self._href[p] -= 1
+                    self._slot_pages[s] = []
+            # device release is decrement-only: pages shared with other slots
+            # or held by the prefix cache keep refs > 0 and their bytes
             self.state = self._release(self.state, jnp.asarray(keep))
         return out
 
@@ -553,9 +909,17 @@ class DisaggregatedServer:
 
     Each scheduling round drains one same-bucket BATCH of queued prompts per
     round (greedy: the oldest request picks the bucket, then every queued
-    request in that bucket joins up to ``max_prefill_batch``), admits
-    waiting requests into decode slots, and runs one fused decode block per
-    decode engine.
+    request with a compatible group key — same tail bucket, same prefix
+    capacity, same routed decode engine — joins up to ``max_prefill_batch``),
+    admits waiting requests into decode slots, and runs one fused decode
+    block per decode engine.
+
+    With prefix-caching decode engines, scheduling is KV-cache aware
+    (production-stack-style routing): each queued prompt is matched against
+    every engine's prefix index, the longest hit pins its pages and routes
+    the request to that engine, prefill runs only on the uncached tail
+    (attention-only models), and admit maps the cached pages instead of
+    rewriting them.
 
     ``transfer`` is the KV handoff hook: identity on single host; on a real
     cluster it is the pod-to-pod device transfer (see launch/serve.py).
@@ -576,11 +940,15 @@ class DisaggregatedServer:
         self.key = jax.random.PRNGKey(seed)
         self.max_prefill_batch = max(1, max_prefill_batch)
         self.queue: List[GenRequest] = []
-        # (req, kv_batch, batch_index, first_token, true_len)
-        self.waiting: List[Tuple[GenRequest, Any, int, int, int]] = []
+        # (req, kv_batch, batch_index, first_token, true_len,
+        #  prefix_match | None, routed decode engine | None)
+        self.waiting: List[Tuple] = []
         self.all_requests: Dict[int, GenRequest] = {}
         self.peak_active = 0  # max concurrent decode requests seen (for benchmarks)
         self._rr = 0
+        # (rid, page_size) -> chunk hashes: prompts are immutable, so the
+        # per-round routing scans never re-hash a queued prompt
+        self._hash_memo: Dict[Tuple[int, int], List[bytes]] = {}
 
     def submit(self, req: GenRequest):
         """Queue a request, rejecting up front what the cluster can never
@@ -610,17 +978,64 @@ class DisaggregatedServer:
         self.key, k = jax.random.split(self.key)
         return k
 
-    def _take_bucket_group(self, buckets) -> List[GenRequest]:
-        """Pop the oldest request's bucket-mates (greedy same-bucket batch)."""
-        want = _bucket(len(self.queue[0].prompt), buckets)
-        group, rest = [], []
-        for r in self.queue:
-            if len(group) < self.max_prefill_batch and _bucket(len(r.prompt), buckets) == want:
-                group.append(r)
-            else:
-                rest.append(r)
+    def _match_for(self, req: GenRequest):
+        """KV-cache-aware routing: the decode engine already holding the
+        longest prefix of this prompt (cf. production-stack's router).
+
+        A scan, not a take: chunk hashes are memoized per (request, page
+        size) — prompts are immutable — and index recency is NOT refreshed
+        (``touch=False``); the selected match touches at pin time."""
+        best, best_eng = None, None
+        for d in self.decodes:
+            if not getattr(d, "prefix_cache", False):
+                continue
+            if not d.can_ever_admit(len(req.prompt), req.max_new_tokens):
+                continue
+            hk = (req.rid, d.page_size)
+            if hk not in self._hash_memo:
+                self._hash_memo[hk] = chunk_hashes(
+                    req.prompt, d.page_size, d.pages_per_slot
+                )
+            m = d.match_prefix(req.prompt, hashes=self._hash_memo[hk], touch=False)
+            if m and m.n_shared > 0 and (best is None or m.n_shared > best.n_shared):
+                best, best_eng = m, d
+        return best, best_eng
+
+    def _group_key(self, req: GenRequest, match, eng_d, buckets):
+        """Prefill-batch compatibility key: same tail bucket, same prefix
+        capacity bucket, same routed decode engine."""
+        if match is None:
+            return (_bucket(len(req.prompt), buckets), None, None)
+        tail = len(req.prompt) - match.n_shared * eng_d.page_size
+        n_pg_b = 1 << max(match.n_shared - 1, 0).bit_length()  # pow2 >= n_shared
+        n_pg_b = min(max(n_pg_b, 1), eng_d.pages_per_slot)
+        return (_bucket(tail, buckets), n_pg_b, id(eng_d))
+
+    def _take_shared_group(self, buckets):
+        """Pop the oldest request's group-mates under prefix-aware keys and
+        pin the selected matches until admit.  Returns (group, matches) with
+        matches[i] = (PrefixMatch | None, routed DecodeEngine | None)."""
+        head = self.queue[0]
+        m0, d0 = self._match_for(head)
+        want = self._group_key(head, m0, d0, buckets)
+        group, matches, rest = [head], [(m0, d0)], []
+        for r in self.queue[1:]:
+            if len(group) < self.max_prefill_batch:
+                m, d = self._match_for(r)
+                if self._group_key(r, m, d, buckets) == want:
+                    group.append(r)
+                    matches.append((m, d))
+                    continue
+            rest.append(r)
         self.queue = rest
-        return group
+        for r, (m, d) in zip(group, matches):
+            if m is not None:
+                d.pin_prefix(r.rid, m)
+            # the request leaves the queue: its memoized hashes ride on in
+            # the PrefixMatch (admit registration), the memo entry can go
+            for d2 in self.decodes:
+                self._hash_memo.pop((r.rid, getattr(d2, "page_size", 0)), None)
+        return group, matches
 
     def _pending(self) -> bool:
         return bool(
@@ -637,34 +1052,74 @@ class DisaggregatedServer:
         if self.queue and len(self.waiting) < max(free_slots, 1):
             eng = self.prefills[self._rr % len(self.prefills)]
             self._rr += 1
-            group = (
-                self._take_bucket_group(eng.buckets)
-                if eng.bucketed
-                else [self.queue.pop(0)]
-            )
+            if eng.bucketed:
+                group, matches = self._take_shared_group(eng.buckets)
+            else:
+                group, matches = [self.queue.pop(0)], [(None, None)]
             pad_to = self.max_prefill_batch if eng.bucketed else None
-            toks, kvb, tls = eng.prefill_batch(group, self._next_key(), pad_to=pad_to)
+            # prefix sharing: gather the matched pages from the routed decode
+            # engine's pool and prefill only the uncached tails (attention-
+            # only engines; hybrids recompute in full but still map the
+            # shared pages at admit)
+            prefix_arg = None
+            routed = next((d for (m, d) in matches if m is not None), None)
+            if routed is not None and routed._tail_ok:
+                n_pg_b = max(
+                    self._group_key(r, m, d, eng.buckets)[1] or 1
+                    for r, (m, d) in zip(group, matches)
+                )
+                B_pad = max(pad_to or len(group), len(group))
+                tables = np.full((B_pad, n_pg_b), routed.n_pages, np.int32)
+                shared_lens = []
+                for i, (m, _) in enumerate(matches):
+                    ns = 0 if m is None else m.n_shared
+                    if ns:
+                        tables[i, :ns] = m.pages
+                    shared_lens.append(ns * routed.page_size)
+                prefix_arg = (routed.gather_prefix(tables), shared_lens)
+                for m, _ in matches:
+                    if m is not None:
+                        m.tail = True  # the pack below holds only the tails
+            toks, kvb, tls = eng.prefill_batch(
+                group, self._next_key(), pad_to=pad_to, prefix=prefix_arg
+            )
             kvb = self.transfer(kvb)  # KV handoff (pod-to-pod in production)
             for i, req in enumerate(group):
+                m, d = matches[i]
                 if req.max_new_tokens <= 1:
                     req.tokens.append(toks[i])
                     req.done = True
+                    if m is not None:
+                        d.release_prefix_pin(req.rid)
                 else:
-                    self.waiting.append((req, kvb, i, toks[i], tls[i]))
+                    self.waiting.append((req, kvb, i, toks[i], tls[i], m, d))
         # 2) admit waiting requests into decode engines with capacity (a free
         # slot and, for paged engines, enough unreserved KV pages) — most
-        # spare capacity first
+        # spare capacity first.  Prefix-matched requests are ROUTED: their
+        # shared pages (and, for tail-only packs, the only pool that can
+        # complete them) live in the matching engine.
         still = []
-        for req, kvb, bi, tok, true_len in self.waiting:
-            cands = [
-                d for d in self.decodes if d.can_admit(true_len, req.max_new_tokens)
-            ]
+        for req, kvb, bi, tok, true_len, m, d in self.waiting:
             admitted = False
-            if cands:
-                dec = max(cands, key=lambda d: d.max_slots - d.slots.n_active)
-                admitted = dec.admit(req, kvb, tok, true_len, batch_index=bi) is not None
+            if m is not None and m.n_shared > 0:
+                if d.can_admit(true_len, req.max_new_tokens, n_shared=m.n_shared):
+                    admitted = (
+                        d.admit(req, kvb, tok, true_len, batch_index=bi, prefix=m)
+                        is not None
+                    )
+            else:
+                cands = [
+                    dd for dd in self.decodes
+                    if dd.can_admit(true_len, req.max_new_tokens)
+                ]
+                if cands:
+                    dec = max(cands, key=lambda dd: dd.max_slots - dd.slots.n_active)
+                    admitted = (
+                        dec.admit(req, kvb, tok, true_len, batch_index=bi)
+                        is not None
+                    )
             if not admitted:
-                still.append((req, kvb, bi, tok, true_len))
+                still.append((req, kvb, bi, tok, true_len, m, d))
         self.waiting = still
         self.peak_active = max(
             self.peak_active, sum(d.slots.n_active for d in self.decodes)

@@ -39,13 +39,29 @@ afford.  ``PagedDecodeState`` replaces the per-slot attention slabs with:
 * **block tables**: ``[max_slots, max_len // page_size]`` int32 mapping each
   slot's logical page j to a physical pool page; unmapped entries hold the
   trash index, so gathers through a partial table read (masked) trash.
-* **a device-resident allocator**: ``page_owner`` ``[n_pages]`` int32
-  (-1 = free, else owning slot).  Allocation = rank the first free pages with
-  a sized ``jnp.nonzero``; release = one ``where`` over owners.  Both run
-  inside the donated jitted transitions — the free list never syncs to host.
+* **a device-resident refcounted allocator**: ``page_refs`` ``[n_pages]``
+  int32 (0 = free, else the number of holders: slots mapping the page plus
+  one "cache hold" if the host prefix index maps it).  Allocation = rank the
+  first ``refs == 0`` pages with a sized ``jnp.nonzero``; release =
+  decrement-only (one scatter-add over the freed slots' table entries — a
+  page is reclaimed exactly when its count reaches 0, never zeroed while
+  another holder remains).  Both run inside the donated jitted transitions —
+  the free list never syncs to host.
+
+Refcounts are what make **prefix sharing** safe: two slots whose prompts
+share a page-aligned prefix map the *same* physical pages (each holding a
+ref), and the host-side prefix index (``prefix_cache.PrefixIndex``) keeps a
++1 cache hold on registered prompt pages so they survive their original
+request.  Decode writes gain **copy-on-write** (``cow_redirect``): before the
+fused block writes into a page with ``refs > 1``, the writer is redirected to
+a fresh page — the block's gather still reads the old mapping (so the shared
+prefix bytes are carried into the copy by the whole-page writeback) and the
+shared page's count is decremented.  All of it runs inside the donated jitted
+block: no per-token host syncs.
 
 Mamba/conv state is fixed-size per request and stays per-slot
-(``[R, max_slots, ...]``); only attention leaves page.
+(``[R, max_slots, ...]``); only attention leaves page (and only attention
+prefixes are shareable — SSM state is a function of the whole prompt).
 
 The bucketed-prefill garbage contract carries over per page: admit copies
 whole prompt pages (including bucket garbage in the last partial page), and
@@ -193,7 +209,8 @@ class PagedDecodeState(NamedTuple):
     caches        attn leaves [R, n_pages+1, page_size, ...] (last page = trash);
                   mamba leaves [R, max_slots, ...] (fixed-size, per-slot)
     block_tables  [max_slots, max_len // page_size] int32; unmapped = n_pages
-    page_owner    [n_pages] int32; -1 = free, else owning slot
+    page_refs     [n_pages] int32; 0 = free, else number of holders (slots
+                  mapping the page + 1 if the host prefix index holds it)
     tokens        [max_slots] int32   last emitted token per slot
     positions     [max_slots] int32   next cache write position per slot
     active        [max_slots] bool    slot currently owns a live request
@@ -202,7 +219,7 @@ class PagedDecodeState(NamedTuple):
 
     caches: Cache
     block_tables: jnp.ndarray
-    page_owner: jnp.ndarray
+    page_refs: jnp.ndarray
     tokens: jnp.ndarray
     positions: jnp.ndarray
     active: jnp.ndarray
@@ -217,7 +234,7 @@ def init_paged_decode_state(
     return PagedDecodeState(
         caches=M.zeros_paged_cache(cfg, max_slots, n_pages + 1, page_size),
         block_tables=jnp.full((max_slots, pages_per_slot), n_pages, jnp.int32),
-        page_owner=jnp.full((n_pages,), -1, jnp.int32),
+        page_refs=jnp.zeros((n_pages,), jnp.int32),
         tokens=jnp.zeros((max_slots,), jnp.int32),
         positions=jnp.zeros((max_slots,), jnp.int32),
         active=jnp.zeros((max_slots,), bool),
@@ -225,46 +242,111 @@ def init_paged_decode_state(
     )
 
 
-def alloc_decode_pages(page_owner, need):
-    """Grab one free page per slot where ``need`` [max_slots] bool is set.
+def alloc_decode_pages(page_refs, need):
+    """Grab one free (``refs == 0``) page per slot where ``need`` [max_slots]
+    bool is set, and set its refcount to 1 (the allocating slot's hold).
 
-    Returns (new_owner, page_ids [max_slots] int32); slots that need nothing
+    Returns (new_refs, page_ids [max_slots] int32); slots that need nothing
     (or an exhausted pool — unreachable under the engine's reservation-based
     admission) get the trash index ``n_pages``.  Runs inside the fused decode
-    scan: pure ranking arithmetic, no host sync.
+    scan: pure ranking arithmetic, no host sync.  Pages with any live holder
+    — slots or the prefix cache — have ``refs > 0`` and can never be handed
+    out here: reclamation happens only at refcount 0.
     """
-    n_pages = page_owner.shape[0]
+    n_pages = page_refs.shape[0]
     S = need.shape[0]
-    (free_idx,) = jnp.nonzero(page_owner < 0, size=S, fill_value=n_pages)
+    (free_idx,) = jnp.nonzero(page_refs == 0, size=S, fill_value=n_pages)
     rank = jnp.clip(jnp.cumsum(need) - 1, 0, S - 1)
     pages = jnp.where(need, free_idx[rank], n_pages)
-    owner = page_owner.at[pages].set(
-        jnp.arange(S, dtype=page_owner.dtype), mode="drop"
-    )
-    return owner, pages.astype(jnp.int32)
+    refs = page_refs.at[pages].set(1, mode="drop")
+    return refs, pages.astype(jnp.int32)
+
+
+def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: int):
+    """Copy-on-write for the fused decode block, applied before the k-step scan.
+
+    Every logical page the block will write — pages overlapping positions
+    [pos0, pos0 + k) of a writing slot — whose physical page is shared
+    (``refs > 1``) gets a fresh page: the writer's block-table entry is
+    redirected and the shared page's refcount is decremented.  The caller
+    gathers the block's view through the OLD tables (so the shared page's
+    existing prefix rides into the view) and writes back through the returned
+    tables (so the whole-page writeback lands the prefix + fresh tokens on
+    the copy, leaving the shared page untouched for its other holders).
+
+    Returns (new_refs, new_block_tables).  Pure arithmetic inside the donated
+    jitted block — no host syncs; the fork-time page reservation guarantees
+    free pages exist for every possible redirect.
+    """
+    n_pages = page_refs.shape[0]
+    S, n_pg = block_tables.shape
+    rows = jnp.arange(S)
+    refs, bt = page_refs, block_tables
+    for j in range((k - 1) // page_size + 2):
+        lp = pos0 // page_size + j  # [S] logical page
+        touched = will_write & (lp * page_size < pos0 + k) & (lp < n_pg)
+        lpc = jnp.clip(lp, 0, n_pg - 1)
+        phys = bt[rows, lpc]
+        physc = jnp.clip(phys, 0, n_pages - 1)
+        shared = touched & (phys < n_pages) & (refs[physc] > 1)
+        refs, fresh = alloc_decode_pages(refs, shared)
+        refs = refs.at[jnp.where(shared, physc, n_pages)].add(-1, mode="drop")
+        bt = bt.at[rows, jnp.where(shared, lpc, n_pg)].set(fresh, mode="drop")
+    return refs, bt
 
 
 def paged_admit(
     state: PagedDecodeState, single: Cache, slot, token, true_len, cfg: ModelConfig,
-    *, page_size: int,
+    *, page_size: int, shared_pages=None, n_shared=None, reg_mask=None,
+    pack_page0=None,
 ) -> PagedDecodeState:
-    """Allocate ceil(true_len / page_size) pages for ``slot`` and scatter the
-    prefilled single-request cache (B=1) into them (the paged KV handoff).
+    """Map ``slot``'s block table — shared prefix pages first, then freshly
+    allocated ones — and scatter the prefilled cache pack into the fresh pages
+    (the paged KV handoff).
 
     ``slot``/``token``/``true_len`` may be traced — the engine jits this with
     the state donated.  Prompt pages are written whole; writes for logical
     pages past the allocation land on the trash page (see module docstring).
+
+    Prefix sharing (all optional, defaults reproduce the unshared admit):
+
+    shared_pages  [pages_per_slot] int32 — physical pages of the matched
+                  prefix (positions past ``n_shared`` ignored).  Each gains a
+                  +1 refcount (this slot's hold); none of them is written.
+    n_shared      scalar int32 — number of leading logical pages taken from
+                  ``shared_pages``.  Always < ceil(true_len / page_size): the
+                  prefill recomputes at least the last prompt token.
+    reg_mask      [pages_per_slot] bool — logical pages the host will register
+                  in the prefix index right after this admit; those fresh
+                  pages start at refs == 2 (slot hold + cache hold).
+    pack_page0    scalar int32 — the logical page the pack's first page maps
+                  to: ``n_shared`` for a tail-only prefill pack, 0 for a
+                  full-prompt pack (hybrid models recompute everything but
+                  still map shared pages; their prefix writes are steered to
+                  the trash page instead of re-writing shared pages).
     """
     ps = page_size
     pages_per_slot = state.block_tables.shape[1]
-    n_pages = state.page_owner.shape[0]
-    n_need = (jnp.asarray(true_len, jnp.int32) + ps - 1) // ps
-    (free_idx,) = jnp.nonzero(state.page_owner < 0, size=pages_per_slot, fill_value=n_pages)
-    take = jnp.arange(pages_per_slot) < n_need
-    page_ids = jnp.where(take, free_idx, n_pages).astype(jnp.int32)
-    owner = state.page_owner.at[page_ids].set(
-        jnp.asarray(slot, state.page_owner.dtype), mode="drop"
-    )
+    n_pages = state.page_refs.shape[0]
+    true_len = jnp.asarray(true_len, jnp.int32)
+    n_shared = jnp.asarray(0 if n_shared is None else n_shared, jnp.int32)
+    pack_page0 = jnp.asarray(0 if pack_page0 is None else pack_page0, jnp.int32)
+    if shared_pages is None:
+        shared_pages = jnp.full((pages_per_slot,), n_pages, jnp.int32)
+    if reg_mask is None:
+        reg_mask = jnp.zeros((pages_per_slot,), bool)
+    n_need = (true_len + ps - 1) // ps
+    (free_idx,) = jnp.nonzero(state.page_refs == 0, size=pages_per_slot, fill_value=n_pages)
+    j = jnp.arange(pages_per_slot)
+    fresh_ids = free_idx[jnp.clip(j - n_shared, 0, pages_per_slot - 1)]
+    page_ids = jnp.where(
+        j < n_shared, shared_pages, jnp.where(j < n_need, fresh_ids, n_pages)
+    ).astype(jnp.int32)
+    # +1 hold for every mapped page (shared and fresh); +1 cache hold for the
+    # fresh pages the host registers.  Out-of-range (trash) indices drop.
+    refs = state.page_refs.at[jnp.where(j < n_need, page_ids, n_pages)].add(1, mode="drop")
+    reg = jnp.where((j >= n_shared) & (j < n_need) & reg_mask, page_ids, n_pages)
+    refs = refs.at[reg].add(1, mode="drop")
     block_tables = state.block_tables.at[slot].set(page_ids)
 
     caches = []
@@ -272,8 +354,9 @@ def paged_admit(
         if mixer == "attn":
             def ins(dst, src):
                 # dst [R, P+1, ps, ...], src [R, 1, L1, ...] -> ONE scatter of
-                # all prompt pages; pages past the allocation (bucket garbage)
-                # carry the trash index and land on the trash page
+                # the pack's pages.  Pack page m holds logical page
+                # pack_page0 + m; targets outside [n_shared, n_need) — shared
+                # prefix pages and bucket garbage — carry the trash index.
                 L1 = src.shape[2]
                 n_src = min(-(-L1 // ps), pages_per_slot)
                 pad = n_src * ps - L1
@@ -283,7 +366,13 @@ def paged_admit(
                 pages = row[:, : n_src * ps].reshape(
                     (row.shape[0], n_src, ps) + row.shape[2:]
                 )
-                return dst.at[:, page_ids[:n_src]].set(pages.astype(dst.dtype))
+                tgt_logical = pack_page0 + jnp.arange(n_src)
+                tgt = jnp.where(
+                    (tgt_logical >= n_shared) & (tgt_logical < n_need),
+                    page_ids[jnp.clip(tgt_logical, 0, pages_per_slot - 1)],
+                    n_pages,
+                )
+                return dst.at[:, tgt].set(pages.astype(dst.dtype))
         else:
             def ins(dst, src):
                 return jax.lax.dynamic_update_index_in_dim(dst, src[:, 0].astype(dst.dtype), slot, 1)
@@ -292,10 +381,47 @@ def paged_admit(
     return PagedDecodeState(
         caches=caches,
         block_tables=block_tables,
-        page_owner=owner,
+        page_refs=refs,
         tokens=state.tokens.at[slot].set(token),
         positions=state.positions.at[slot].set(true_len),
         active=state.active.at[slot].set(True),
+        key=state.key,
+    )
+
+
+def paged_fork(
+    state: PagedDecodeState, src, dst, token, cfg: ModelConfig
+) -> PagedDecodeState:
+    """Clone slot ``src``'s decode state into free slot ``dst``, sharing every
+    mapped page (best-of-n / beam forks): the block-table row is copied, each
+    mapped page gains a +1 refcount, and per-slot state (positions, mamba
+    leaves) is duplicated.  ``token`` replaces the fork's last emitted token
+    so the two branches diverge; the first write either branch makes into the
+    shared tail page triggers copy-on-write inside the fused block
+    (``cow_redirect``).  All args may be traced; jitted + donated by the
+    engine."""
+    n_pg = state.block_tables.shape[1]
+    row = jax.lax.dynamic_slice_in_dim(state.block_tables, src, 1, axis=0)[0]
+    refs = state.page_refs.at[row].add(1, mode="drop")
+    bt = jax.lax.dynamic_update_index_in_dim(state.block_tables, row, dst, 0)
+    caches = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        c = state.caches[i]
+        if mixer == "attn":
+            caches.append(c)  # shared via the table row + refcounts
+        else:
+            def cp(leaf):
+                r = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(leaf, r, dst, axis=1)
+            caches.append(jax.tree.map(cp, c))
+    pos = state.positions[src]
+    return PagedDecodeState(
+        caches=caches,
+        block_tables=bt,
+        page_refs=refs,
+        tokens=state.tokens.at[dst].set(token),
+        positions=state.positions.at[dst].set(pos),
+        active=state.active.at[dst].set(True),
         key=state.key,
     )
 
@@ -372,14 +498,21 @@ def paged_writeback(
 
 
 def paged_release(state: PagedDecodeState, keep) -> PagedDecodeState:
-    """Free every page owned by slots with keep[slot] == False, reset their
-    block-table rows to the trash sentinel, and deactivate them — one dispatch."""
-    owner = state.page_owner
-    S = keep.shape[0]
-    n_pages = owner.shape[0]
-    kept = jnp.where(owner >= 0, keep[jnp.clip(owner, 0, S - 1)], True)
+    """Release every slot with keep[slot] == False: decrement the refcount of
+    each page its block table maps, reset the row to the trash sentinel, and
+    deactivate it — one dispatch.
+
+    Decrement-only by construction: a page shared with other slots (or held
+    by the prefix cache) keeps ``refs > 0`` and its bytes; it is reclaimed —
+    becomes allocatable — exactly when the last holder lets go (refs == 0).
+    No clamping: a double release would drive a count negative, which the
+    invariant tests catch, rather than silently freeing a held page."""
+    n_pages = state.page_refs.shape[0]
+    freed = (~jnp.asarray(keep)) & state.active
+    dec = jnp.where(freed[:, None], state.block_tables, n_pages)
+    refs = state.page_refs.at[dec.reshape(-1)].add(-1, mode="drop")
     return state._replace(
-        page_owner=jnp.where(kept, owner, -1),
+        page_refs=refs,
         block_tables=jnp.where(
             keep[:, None], state.block_tables, jnp.int32(n_pages)
         ).astype(state.block_tables.dtype),
@@ -406,6 +539,33 @@ def paged_extract_request(
             out.append(jax.tree.map(ex, c))
         else:
             out.append(jax.tree.map(lambda a: a[:, slot : slot + 1], c))
+    return out
+
+
+def gather_prefix_pack(caches: Cache, tables, cfg: ModelConfig) -> Cache:
+    """Gather cached prefix pages into a contiguous prefix-KV pack for
+    tail-only prefill: attn pool leaves [R, P+1, ps, ...] + ``tables``
+    [B, n_pg] int32 -> [R, B, n_pg * ps, ...].
+
+    ``tables`` rows are the matched physical pages, trash-padded past each
+    request's shared length (and for unmatched rows); trash content is masked
+    to exactly zero probability by the prefix-length mask in the attention
+    mixers, so padding never perturbs the tail computation.  Mamba leaves
+    yield None — SSM state is a whole-prompt function and is never shared
+    (hybrid models take the full-recompute, pages-only sharing path).
+    """
+    B = tables.shape[0]
+    out = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            def g(pool):
+                rows = pool[:, tables]  # [R, B, n_pg, ps, ...]
+                return rows.reshape(
+                    (rows.shape[0], B, rows.shape[2] * rows.shape[3]) + rows.shape[4:]
+                )
+            out.append(jax.tree.map(g, caches[i]))
+        else:
+            out.append(None)
     return out
 
 

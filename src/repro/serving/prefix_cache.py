@@ -1,0 +1,147 @@
+"""Host-side prefix index for the paged KV cache (refcounted prefix sharing).
+
+The paged pools and block tables already let two slots map the same physical
+page; this module supplies the HOST half of prefix sharing: a map from
+*chained* hashes of page-sized token chunks to the physical page that holds
+that chunk's K/V, with LRU ordering and pin counts.  The DEVICE half is the
+refcounted allocator in ``kvcache`` (``page_refs``): every index entry holds a
++1 "cache hold" on its page, so the device-resident allocator (which only
+hands out pages with ``refs == 0``) can never recycle a cached page while the
+host still maps it.  Division of truth:
+
+* **on device** (inside the donated state): ``page_refs`` — the only thing
+  allocation/release/COW consult; it is authoritative for "is this page live".
+* **on host** (here): *which prompt prefix* a page holds — pure metadata.
+  Losing it (eviction) costs recompute, never correctness.
+
+Hashes are chained — ``h_j = H(h_{j-1} || tokens[j*ps:(j+1)*ps])`` — so a
+chunk's identity includes its whole prefix: the same 16 tokens after two
+different prefixes are two different cache entries (their K/V differ through
+attention).  A request's shareable prefix is the longest leading run of its
+chunk hashes present in the index, additionally capped at
+``(true_len - 1) // page_size`` chunks so at least one prompt token is always
+left for prefill to recompute (logits need the last position's hidden state).
+
+This mirrors vLLM's hash-block prefix caching and the KV-cache-aware routing
+of production-stack/Nexus: requests are routed to (admitted into) the engine
+that already holds their prefix pages.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+def chunk_hashes(tokens, page_size: int, max_chunks: Optional[int] = None) -> List[bytes]:
+    """Chained hashes of the full ``page_size``-token chunks of ``tokens``.
+
+    ``h_j`` covers tokens ``[0, (j+1) * page_size)`` — prefix-complete, so a
+    hash hit implies the whole prefix matches, not just the chunk body.
+    """
+    arr = np.asarray(tokens, np.int32)
+    n = len(arr) // page_size
+    if max_chunks is not None:
+        n = min(n, max_chunks)
+    out: List[bytes] = []
+    prev = b""
+    for j in range(n):
+        m = hashlib.blake2b(digest_size=16)
+        m.update(prev)
+        m.update(arr[j * page_size : (j + 1) * page_size].tobytes())
+        prev = m.digest()
+        out.append(prev)
+    return out
+
+
+class PrefixIndex:
+    """hash -> physical page, LRU-ordered, with per-page pin counts.
+
+    Pins bridge the match -> admit gap: a matched prefix is pinned until the
+    request is admitted (or abandoned) so LRU eviction cannot free pages a
+    scheduled prefill is about to attend through.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._entries: "OrderedDict[bytes, int]" = OrderedDict()  # hash -> page
+        self._pins: Dict[int, int] = {}  # page -> pin count
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, h: bytes) -> bool:
+        return h in self._entries
+
+    def pages(self) -> List[int]:
+        return list(self._entries.values())
+
+    def match(self, hashes: List[bytes], touch: bool = True) -> List[int]:
+        """Physical pages of the longest leading run of ``hashes`` present.
+
+        ``touch`` moves every hit to the LRU tail so hot prefixes survive.
+        Scheduler *scans* (requests merely considered, not selected) pass
+        ``touch=False`` so cold queued prompts cannot refresh recency round
+        after round; the touch happens when the match is actually taken
+        (``touch()``, called from the engine's pin)."""
+        pages: List[int] = []
+        for h in hashes:
+            page = self._entries.get(h)
+            if page is None:
+                break
+            if touch:
+                self._entries.move_to_end(h)
+            pages.append(page)
+        return pages
+
+    def touch(self, hashes: List[bytes]) -> None:
+        """LRU-refresh the entries for ``hashes`` (a selected match)."""
+        for h in hashes:
+            if h in self._entries:
+                self._entries.move_to_end(h)
+
+    def insert(self, h: bytes, page: int) -> bool:
+        """Register ``page`` under ``h``; False if the hash already exists
+        (the existing mapping is kept and touched — duplicate K/V content on
+        another page is possible but never re-registered)."""
+        if h in self._entries:
+            self._entries.move_to_end(h)
+            return False
+        self._entries[h] = page
+        return True
+
+    def pin(self, pages: List[int]) -> None:
+        for p in pages:
+            self._pins[p] = self._pins.get(p, 0) + 1
+
+    def unpin(self, pages: List[int]) -> None:
+        for p in pages:
+            n = self._pins.get(p, 0) - 1
+            if n <= 0:
+                self._pins.pop(p, None)
+            else:
+                self._pins[p] = n
+
+    def pinned(self, page: int) -> bool:
+        return self._pins.get(page, 0) > 0
+
+    def evictable(self, cache_only: Callable[[int], bool]) -> int:
+        """How many entries could be evicted right now (unpinned and, per the
+        caller's predicate, held only by the cache — evicting a page still
+        mapped by live slots frees no capacity)."""
+        return sum(
+            1
+            for p in self._entries.values()
+            if not self.pinned(p) and cache_only(p)
+        )
+
+    def evict_one(self, cache_only: Callable[[int], bool]) -> Optional[int]:
+        """Drop the LRU-oldest evictable entry; returns its page (the caller
+        must release the device-side cache hold) or None."""
+        for h, p in self._entries.items():  # OrderedDict iterates LRU-first
+            if not self.pinned(p) and cache_only(p):
+                del self._entries[h]
+                return p
+        return None

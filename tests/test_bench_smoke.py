@@ -1,22 +1,95 @@
 """Benchmark rot guard: ``python -m benchmarks.serving_bench --smoke`` must
-keep working (imports, engine APIs, slab-vs-paged stream equivalence) without
-waiting for the full benchmark run."""
+keep working (imports, engine APIs, slab-vs-paged-vs-shared-prefix stream
+equivalence) without waiting for the full benchmark run — and the CI
+regression gate's comparator logic is unit-tested here so the gate itself
+cannot rot silently."""
+import copy
+import json
 import os
 import subprocess
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks.check_regression import SAVING_FLOOR, compare  # noqa: E402
 
 
-def test_serving_bench_smoke():
+def test_serving_bench_smoke(tmp_path):
     env = dict(os.environ)
     src = str(REPO / "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    json_path = tmp_path / "smoke.json"
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.serving_bench", "--smoke"],
+        [sys.executable, "-m", "benchmarks.serving_bench", "--smoke",
+         "--json", str(json_path)],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=540,
     )
     assert out.returncode == 0, f"smoke failed:\n{out.stdout}\n{out.stderr}"
     assert "SMOKE OK" in out.stdout
     assert "smoke_stream_mismatches,0" in out.stdout
+    assert "smoke_shared_stream_mismatches,0" in out.stdout
+    sm = json.loads(json_path.read_text())
+    assert sm["stream_mismatches"] == 0
+    assert sm["shared_prefix"]["stream_mismatches"] == 0
+    assert sm["shared_prefix"]["kv_new_bytes_per_request"]["saving_frac"] >= SAVING_FLOOR
+
+
+def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0):
+    return {
+        "tokens_per_s": {"slab": 1000.0, "paged": 1000.0 * tps_ratio,
+                         "ratio": tps_ratio},
+        "decode_s_per_token": {"slab": 1e-4, "paged": 1e-4 * spt_ratio,
+                               "ratio": spt_ratio},
+        "stream_mismatches": mism,
+        "shared_prefix": {
+            "stream_mismatches": smism,
+            "kv_new_bytes_per_request": {"paged": 8000.0,
+                                         "shared": 8000.0 * (1 - saving),
+                                         "saving_frac": saving},
+            "shared_pages_total": 10,
+        },
+    }
+
+
+def test_regression_compare_passes_identical():
+    ref = _metrics()
+    assert all(ok for _, ok, _ in compare(copy.deepcopy(ref), ref))
+
+
+def test_regression_compare_tolerates_machine_noise():
+    # 20% slower ratio on a different machine: inside the 25% tolerance
+    checks = compare(_metrics(tps_ratio=0.9 * 0.8, spt_ratio=1.1 * 1.2), _metrics())
+    assert all(ok for _, ok, _ in checks)
+
+
+def test_regression_compare_fails_on_mismatches():
+    checks = dict((n, ok) for n, ok, _ in compare(_metrics(smism=2), _metrics()))
+    assert not checks["shared_stream_mismatches"]
+    checks = dict((n, ok) for n, ok, _ in compare(_metrics(mism=1), _metrics()))
+    assert not checks["paged_stream_mismatches"]
+
+
+def test_regression_compare_fails_on_throughput_regression():
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(tps_ratio=0.9 * 0.7), _metrics())
+    )
+    assert not checks["tokens_per_s_ratio"]
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(spt_ratio=1.1 * 1.3), _metrics())
+    )
+    assert not checks["decode_s_per_token_ratio"]
+
+
+def test_regression_compare_fails_on_kv_accounting_drift():
+    # deterministic accounting drifted from the committed value -> stale BENCH
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(saving=0.40), _metrics(saving=0.45))
+    )
+    assert not checks["kv_new_bytes_saving_committed"]
+    # and the hard 30% acceptance floor
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(saving=0.2), _metrics(saving=0.2))
+    )
+    assert not checks["kv_new_bytes_saving_floor"]

@@ -205,7 +205,7 @@ def test_allocator_drains_clean(setup):
         srv.submit(r)
     srv.run()
     eng = srv.decodes[0]
-    assert bool(jnp.all(eng.state.page_owner == -1))
+    assert bool(jnp.all(eng.state.page_refs == 0))
     assert bool(jnp.all(eng.state.block_tables == eng.n_pages))
     assert eng._reserved == [0] * eng.max_slots
     assert not bool(jnp.any(eng.state.active))
@@ -225,7 +225,7 @@ def test_pages_bounded_by_reservation_mid_flight(setup):
         assert eng.admit(r, kv, tok, tl) is not None
     while eng.requests:
         eng.step_block()
-        used = int(jnp.sum(eng.state.page_owner >= 0))
+        used = int(jnp.sum(eng.state.page_refs > 0))
         assert used <= sum(eng._reserved)
         assert used <= eng.n_pages
 

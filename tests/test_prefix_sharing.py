@@ -1,0 +1,430 @@
+"""Refcounted prefix sharing + copy-on-write for the paged KV cache.
+
+The acceptance invariant: a server with ``prefix_cache=True`` emits token
+streams BIT-IDENTICAL to the unshared paged engine (greedy and sampled,
+attention-only / hybrid / MLA) while reserving strictly fewer new KV pages
+for shared-prefix workloads.  Plus the allocator invariants that make it
+safe: release is decrement-only (a page is reclaimed only at refcount 0),
+the prefix index holds a +1 cache ref per registered page, LRU eviction
+frees cache-only pages under admission pressure, and ``fork()`` branches
+diverge through copy-on-write without corrupting the shared prefix.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_paged_pallas
+from repro.models import model as M
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    PrefillEngine,
+    SamplingParams,
+)
+from repro.serving.prefix_cache import PrefixIndex, chunk_hashes
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg = reduced(ARCHS["minicpm3-4b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    """jamba: SSM state is a whole-prompt function — sharing must fall back
+    to full recompute + page mapping (capacity win, no compute win)."""
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _shared_requests(cfg, n, base=0, prefix_len=32, lo=4, hi=16, max_new=5, seed=0):
+    """n requests sharing a ``prefix_len``-token system prompt + unique tails."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, cfg.vocab_size, size=prefix_len)
+    tails = np.random.default_rng(seed + base + 1)
+    return [
+        GenRequest(
+            base + i,
+            np.concatenate(
+                [common, tails.integers(0, cfg.vocab_size, size=int(tails.integers(lo, hi)))]
+            ),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def _server(params, cfg, *, prefix, max_slots=4, max_len=128, n_pages=None,
+            decode_block=8, temperature=0.0, seed=0, max_prefill_batch=8):
+    sp = SamplingParams(temperature=temperature)
+    return DisaggregatedServer(
+        [PrefillEngine(params, cfg, sp)],
+        [DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
+                      sampling=sp, decode_block=decode_block, paged=True,
+                      page_size=PAGE, n_pages=n_pages, seed=seed,
+                      prefix_cache=prefix)],
+        seed=seed, max_prefill_batch=max_prefill_batch,
+    )
+
+
+def _run_waves(srv, cfg, waves=2, n=4, **kw):
+    """Two submission waves: wave 1 populates the index (admit-time page
+    mapping), wave 2 exercises the tail-only prefill path."""
+    out = {}
+    for w in range(waves):
+        for r in _shared_requests(cfg, n, base=w * 100, **kw):
+            srv.submit(r)
+        out.update(srv.run())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: shared streams == unshared streams, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_shared_streams_match_unshared(setup, temperature):
+    cfg, params = setup
+    outs = []
+    for prefix in (False, True):
+        # max_prefill_batch=1 keeps the prefill PRNG-key sequence identical
+        # between the two schedules for the sampled case
+        srv = _server(params, cfg, prefix=prefix, temperature=temperature,
+                      max_prefill_batch=1 if temperature else 8)
+        outs.append(_run_waves(srv, cfg))
+        if prefix:
+            eng = srv.decodes[0]
+            assert eng.stats["shared_pages"] > 0, "no sharing happened"
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.slow
+def test_shared_streams_match_unshared_mla(mla_setup):
+    cfg, params = mla_setup
+    outs = []
+    for prefix in (False, True):
+        srv = _server(params, cfg, prefix=prefix)
+        outs.append(_run_waves(srv, cfg))
+        if prefix:
+            eng = srv.decodes[0]
+            assert eng.stats["shared_pages"] > 0
+            # MLA is attention-only: wave 2 must use tail-only prefill
+            assert any(len(k) == 3 for k in srv.prefills[0]._fns)
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.slow
+def test_shared_streams_match_unshared_hybrid(hybrid_setup):
+    cfg, params = hybrid_setup
+    outs = []
+    for prefix in (False, True):
+        srv = _server(params, cfg, prefix=prefix)
+        outs.append(_run_waves(srv, cfg))
+        if prefix:
+            eng = srv.decodes[0]
+            assert not eng._tail_ok
+            assert eng.stats["shared_pages"] > 0
+            # hybrid never tail-prefills (SSM state needs the whole prompt)
+            assert not any(len(k) == 3 for k in srv.prefills[0]._fns)
+    assert outs[0] == outs[1]
+
+
+def test_tail_prefill_used_and_streams_match(setup):
+    """Wave 2 requests (prefix already registered) go through the tail-only
+    prefill path — distinct (S, B, Lp) jit keys — and still match bitwise."""
+    cfg, params = setup
+    srv_ref = _server(params, cfg, prefix=False)
+    out_ref = _run_waves(srv_ref, cfg)
+    srv = _server(params, cfg, prefix=True)
+    out = _run_waves(srv, cfg)
+    assert out == out_ref
+    tail_keys = [k for k in srv.prefills[0]._fns if len(k) == 3]
+    assert tail_keys, "tail-only prefill never compiled"
+
+
+# ---------------------------------------------------------------------------
+# Accounting: reservations count only NEW pages; refcounts mirror sharing
+# ---------------------------------------------------------------------------
+
+
+def test_admit_reserves_only_new_pages(setup):
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=4, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE,
+                       prefix_cache=True)
+    a, b = _shared_requests(cfg, 2, prefix_len=32, lo=8, hi=9, max_new=4)
+    key = jax.random.PRNGKey(0)
+    tok, kv, tl = pre.prefill(a, key)
+    assert eng.admit(a, kv, tok, tl) is not None
+    full_need = eng._pages_needed(tl, a.max_new_tokens)
+    assert eng.admit_new_pages[a.rid] == full_need  # first request: all new
+    assert eng.admit_shared_pages[a.rid] == 0
+    # two full prompt chunks registered, each holding a +1 cache ref
+    assert len(eng.prefix) == 2
+    shared_pages = eng.prefix.pages()
+    refs = np.asarray(eng.state.page_refs)
+    assert all(refs[p] == 2 for p in shared_pages)  # slot + cache
+
+    tok, kv, tl = pre.prefill(b, key)
+    m = eng.match_prefix(b.prompt, rid=b.rid)
+    assert m.n_shared == 2
+    assert not m.tail  # a match never claims a tail pack; the scheduler does
+    assert eng.admit(b, kv, tok, tl, prefix=m) is not None
+    assert eng.admit_shared_pages[b.rid] == 2
+    assert eng.admit_new_pages[b.rid] == eng._pages_needed(tl, b.max_new_tokens) - 2
+    assert eng._reserved[1] == eng.admit_new_pages[b.rid]
+    refs = np.asarray(eng.state.page_refs)
+    assert all(refs[p] == 3 for p in shared_pages)  # 2 slots + cache
+
+    # the direct-API pattern above hands admit a FULL-prompt pack with a
+    # match: decode must stay bit-identical to an unshared engine
+    # (regression: a tail=True match here would mis-scatter the pack)
+    while eng.requests:
+        eng.step_block()
+    ref_eng = DecodeEngine(params, cfg, max_slots=4, max_len=128, sampling=sp,
+                           decode_block=4, paged=True, page_size=PAGE)
+    a2, b2 = _shared_requests(cfg, 2, prefix_len=32, lo=8, hi=9, max_new=4)
+    for r in (a2, b2):
+        tok, kv, tl = pre.prefill(r, key)
+        ref_eng.admit(r, kv, tok, tl)
+    while ref_eng.requests:
+        ref_eng.step_block()
+    assert a.tokens == a2.tokens
+    assert b.tokens == b2.tokens
+
+
+def test_release_is_decrement_only(setup):
+    """The paged_release fix: freeing one sharer decrements, never zeroes; a
+    page is reclaimed (allocatable) only when the LAST holder lets go."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=4, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE,
+                       prefix_cache=True)
+    a = _shared_requests(cfg, 1, prefix_len=32, lo=8, hi=9, max_new=2)[0]
+    b = _shared_requests(cfg, 1, base=50, prefix_len=32, lo=8, hi=9, max_new=24)[0]
+    key = jax.random.PRNGKey(0)
+    tok, kv, tl = pre.prefill(a, key)
+    eng.admit(a, kv, tok, tl)
+    shared_pages = eng.prefix.pages()
+    tok, kv, tl = pre.prefill(b, key)
+    eng.admit(b, kv, tok, tl, prefix=eng.match_prefix(b.prompt))
+    # run until a (max_new=2) finishes; b keeps decoding
+    while a.rid in eng.requests:
+        eng.step_block()
+    refs = np.asarray(eng.state.page_refs)
+    # a's release decremented the shared pages but b + cache still hold them
+    assert all(refs[p] == 2 for p in shared_pages)
+    assert bool(jnp.all(eng.state.page_refs >= 0))
+    while eng.requests:
+        eng.step_block()
+    refs = np.asarray(eng.state.page_refs)
+    assert all(refs[p] == 1 for p in shared_pages)  # cache-only now
+    # everything not cache-held drained to refs == 0
+    others = [p for p in range(eng.n_pages) if p not in shared_pages]
+    assert all(refs[p] == 0 for p in others)
+
+
+def test_cached_pages_not_reallocated(setup):
+    """Reclaim-only-at-zero, from the allocator side: pages held by the
+    prefix cache (refs > 0) are never handed to a new request's fresh
+    allocation."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=4, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE,
+                       prefix_cache=True)
+    a = _shared_requests(cfg, 1, prefix_len=32, lo=8, hi=9, max_new=2)[0]
+    key = jax.random.PRNGKey(0)
+    tok, kv, tl = pre.prefill(a, key)
+    eng.admit(a, kv, tok, tl)
+    while eng.requests:
+        eng.step_block()
+    cached = set(eng.prefix.pages())
+    # a fresh UNRELATED request must not receive the cached pages
+    c = GenRequest(7, np.random.default_rng(9).integers(0, cfg.vocab_size, size=40),
+                   max_new_tokens=4)
+    tok, kv, tl = pre.prefill(c, key)
+    slot = eng.admit(c, kv, tok, tl)
+    row = set(eng._slot_pages[slot])
+    assert not (row & cached)
+
+
+def test_lru_eviction_under_pressure(setup):
+    """A tiny pool: cache-only pages are LRU-evicted so admission never
+    starves, and the index shrinks accordingly."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                       decode_block=2, paged=True, page_size=PAGE, n_pages=8,
+                       prefix_cache=True)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        # distinct 32-token prompts: each admit registers 2 chunks
+        r = GenRequest(i, rng.integers(0, cfg.vocab_size, size=34), max_new_tokens=2)
+        tok, kv, tl = pre.prefill(r, key)
+        assert eng.admit(r, kv, tok, tl) is not None, f"admission starved at {i}"
+        while eng.requests:
+            eng.step_block()
+    # pool is 8 pages; 4 requests x 2 cached chunks would need 8 cache-only
+    # pages + working pages -> eviction must have run
+    assert len(eng.prefix) < 8
+    refs = np.asarray(eng.state.page_refs)
+    assert bool(jnp.all(eng.state.page_refs >= 0))
+    assert int((refs > 0).sum()) == len(eng.prefix)
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write: fork() branches diverge without corrupting the shared pages
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prompt_len", [37, 32])  # mid-page and page-aligned
+def test_fork_cow_divergence(setup, prompt_len):
+    """Fork a live request mid-decode with a different branch token: both
+    branches continue past the shared page; COW must give the writer(s) a
+    private copy so the original's stream stays bit-identical to a no-fork
+    run."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab_size, size=prompt_len)
+    key = jax.random.PRNGKey(0)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                            decode_block=4, paged=True, page_size=PAGE, seed=0)
+
+    r0 = GenRequest(0, prompt, max_new_tokens=12)
+    tok, kv, tl = pre.prefill(r0, key)
+    eng = fresh()
+    eng.admit(r0, kv, tok, tl)
+    while eng.requests:
+        eng.step_block()
+    ref_stream = list(r0.tokens)
+
+    r1 = GenRequest(1, prompt, max_new_tokens=12)
+    tok, kv, tl = pre.prefill(r1, key)
+    eng = fresh()
+    eng.admit(r1, kv, tok, tl)
+    eng.step_block()  # 4 tokens in; fork mid-stream
+    alt = int((ref_stream[4] + 1) % cfg.vocab_size)
+    r2 = GenRequest(2, prompt, max_new_tokens=12)
+    slot = eng.fork(r2, src_rid=1, token=alt)
+    assert slot is not None
+    # the fork shares every mapped page: refs == 2 on the prompt pages
+    refs = np.asarray(eng.state.page_refs)
+    n_mapped = -(-min(eng.slots.lengths[0], 128) // PAGE)
+    src_row = np.asarray(eng.state.block_tables[0])[:n_mapped]
+    assert all(refs[p] == 2 for p in src_row)
+    while eng.requests:
+        eng.step_block()
+    # original branch: bit-identical to the no-fork reference (COW protected
+    # the shared tail page from the other branch's writes)
+    assert r1.tokens == ref_stream
+    # fork branch: same prefix, diverges exactly at the overridden token
+    assert r2.tokens[:4] == ref_stream[:4]
+    assert r2.tokens[4] == alt
+    assert r2.tokens != ref_stream
+    assert len(r2.tokens) == 12
+    # both branches ended with private pages; nothing leaked or went negative
+    assert bool(jnp.all(eng.state.page_refs == 0))
+
+
+def test_fork_capacity_reserved(setup):
+    """Fork reserves growth + COW margin; an exhausted pool refuses the fork
+    instead of silently corrupting pages."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE, n_pages=8)
+    r0 = GenRequest(0, np.random.default_rng(6).integers(0, cfg.vocab_size, size=40),
+                    max_new_tokens=60)
+    key = jax.random.PRNGKey(0)
+    tok, kv, tl = pre.prefill(r0, key)
+    assert eng.admit(r0, kv, tok, tl) is not None  # needs 7 of 8 pages
+    r1 = GenRequest(1, r0.prompt, max_new_tokens=60)
+    assert eng.fork(r1, src_rid=0) is None  # growth + COW margin exceed the pool
+    assert eng.slots.n_active == 1  # no half-forked slot left behind
+
+
+# ---------------------------------------------------------------------------
+# Kernel/ref paths honor shared (aliased) and remapped block tables
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kernel_honors_shared_tables():
+    """Two rows aliasing the same physical pages (shared prefix) must read
+    the same K/V as two rows with duplicated private copies — for both the
+    Pallas kernel and the pure-JAX reference."""
+    rng = np.random.default_rng(4)
+    B, H, KV, d, P, n_pg = 2, 4, 2, 16, 9, 4
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    # shared: both rows read pages [0, 1]; private: row 1 reads copies [2, 3]
+    kp2 = kp.at[2].set(kp[0]).at[3].set(kp[1])
+    vp2 = vp.at[2].set(vp[0]).at[3].set(vp[1])
+    bt_shared = jnp.asarray([[0, 1, 4, 4], [0, 1, 5, 5]], jnp.int32)
+    bt_priv = jnp.asarray([[0, 1, 4, 4], [2, 3, 5, 5]], jnp.int32)
+    lengths = jnp.asarray([2 * PAGE, 2 * PAGE], jnp.int32)
+    for fn in (
+        lambda *a: decode_attention_paged_pallas(*a, interpret=True),
+        ref.decode_attention_paged_ref,
+    ):
+        shared = fn(q, kp2, vp2, bt_shared, lengths)
+        priv = fn(q, kp2, vp2, bt_priv, lengths)
+        np.testing.assert_array_equal(np.asarray(shared), np.asarray(priv))
+
+
+# ---------------------------------------------------------------------------
+# Host index unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_hashes_are_prefix_complete():
+    a = chunk_hashes(np.arange(48), 16)
+    b = chunk_hashes(np.concatenate([np.arange(16) + 1, np.arange(16, 48)]), 16)
+    assert len(a) == 3
+    # same chunk bodies after a different first chunk -> different hashes
+    assert a[0] != b[0] and a[1] != b[1] and a[2] != b[2]
+    # identical prefix -> identical chain
+    assert chunk_hashes(np.arange(40), 16) == a[:2]
+
+
+def test_prefix_index_lru_and_pins():
+    idx = PrefixIndex(16)
+    idx.insert(b"a", 0)
+    idx.insert(b"b", 1)
+    idx.insert(b"c", 2)
+    assert idx.match([b"a", b"b", b"x"]) == [0, 1]
+    # c is now LRU-oldest; pin it and eviction must skip to nothing else
+    idx.pin([2])
+    assert idx.evict_one(lambda p: p == 2) is None
+    idx.unpin([2])
+    assert idx.evict_one(lambda p: p == 2) == 2
+    assert len(idx) == 2
