@@ -22,15 +22,24 @@ Failure conditions (``--tolerance`` defaults to 0.25):
 * shared-prefix new-KV saving below the 30% acceptance floor, or drifted
   from the committed value (the accounting is deterministic — any drift
   means the reservation math changed and BENCH_serving.json must be
-  regenerated deliberately).
+  regenerated deliberately),
+* scheduler policies (when the committed reference carries the section):
+  queue-wait p50/p99 in scheduling ROUNDS are pure queueing math — compared
+  exactly — the KV-aware policy must keep beating FCFS on p99 (the
+  head-of-line-blocking gate), the priority policy must still preempt, and
+  every cross-policy / preempted-resume stream mismatch count must be 0.
 
 ``compare()`` is pure and imported by tier-1 tests, so the gate's logic is
-itself under test without paying for a bench run.
+itself under test without paying for a bench run.  With
+``--github-summary`` (default: ``$GITHUB_STEP_SUMMARY`` when set, i.e.
+automatically inside GitHub Actions) the check table is also appended to the
+job summary as markdown.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 import tempfile
@@ -88,6 +97,49 @@ def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple
         f"fresh {f_sav:.6f} vs committed {r_sav:.6f} — reservation math is "
         f"deterministic; drift means BENCH_serving.json is stale",
     )
+
+    # scheduler policies: round-based metrics are deterministic queueing
+    # math, so they compare exactly (drift means the scheduler changed and
+    # the reference must be regenerated deliberately)
+    r_sched = reference.get("scheduler")
+    if r_sched is not None:
+        f_sched = fresh.get("scheduler", {})
+
+        def wait_rounds(d: dict, policy: str) -> dict:
+            return d.get(policy, {}).get("queue_wait_rounds", {})
+
+        f_fc, f_kv = wait_rounds(f_sched, "fcfs"), wait_rounds(f_sched, "kv_aware")
+        r_fc, r_kv = wait_rounds(r_sched, "fcfs"), wait_rounds(r_sched, "kv_aware")
+        smm = f_sched.get("stream_mismatches", -1)
+        add("sched_stream_mismatches", smm == 0, f"{smm} (acceptance: 0)")
+        add(
+            "sched_kv_aware_p99_improves",
+            f_kv.get("p99", 1e9) < f_fc.get("p99", -1e9),
+            f"kv-aware p99 {f_kv.get('p99')} vs fcfs p99 {f_fc.get('p99')} "
+            f"rounds (acceptance: strictly lower)",
+        )
+        add(
+            "sched_wait_rounds_committed",
+            f_fc == r_fc and f_kv == r_kv,
+            f"fresh fcfs {f_fc} / kv-aware {f_kv} vs committed {r_fc} / "
+            f"{r_kv} — round math is deterministic",
+        )
+        f_pr = f_sched.get("priority", {}).get("swap", {})
+        r_pr = r_sched.get("priority", {}).get("swap", {})
+        pmm = f_pr.get("preempted_stream_mismatches", -1)
+        add(
+            "sched_preempted_streams_bitexact",
+            pmm == 0,
+            f"{pmm} (acceptance: 0 — swap round trip is bit-exact)",
+        )
+        add(
+            "sched_preemptions_committed",
+            f_pr.get("preemptions", -1) == r_pr.get("preemptions")
+            and f_pr.get("high_wait_rounds", -1) == r_pr.get("high_wait_rounds"),
+            f"fresh preemptions={f_pr.get('preemptions')} "
+            f"high_wait={f_pr.get('high_wait_rounds')} vs committed "
+            f"{r_pr.get('preemptions')}/{r_pr.get('high_wait_rounds')}",
+        )
     return checks
 
 
@@ -108,12 +160,26 @@ def run_fresh_smoke() -> dict:
         return json.loads(out_path.read_text())
 
 
+def write_github_summary(path: str, checks: List[Tuple[str, bool, str]]) -> None:
+    """Append the check table to a GitHub Actions job summary as markdown."""
+    with open(path, "a") as f:
+        f.write("### serving bench regression check\n\n")
+        f.write("| check | status | detail |\n|---|---|---|\n")
+        for name, ok, detail in checks:
+            f.write(f"| `{name}` | {'PASS' if ok else '**FAIL**'} | {detail} |\n")
+        f.write("\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=str(REPO / "BENCH_serving.json"))
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument("--fresh-json", default=None,
                     help="use a pre-computed smoke JSON instead of running one")
+    ap.add_argument("--github-summary", default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    help="append the check table as markdown to this file "
+                         "(default: $GITHUB_STEP_SUMMARY when set, so CI job "
+                         "summaries surface the diff without log spelunking)")
     args = ap.parse_args(argv)
 
     baseline = json.loads(Path(args.baseline).read_text())
@@ -133,6 +199,8 @@ def main(argv=None) -> int:
     for name, ok, detail in checks:
         print(f"{'PASS' if ok else 'FAIL'}  {name:<{width}}  {detail}")
         failed += not ok
+    if args.github_summary:
+        write_github_summary(args.github_summary, checks)
     if failed:
         print(f"{failed} regression check(s) failed")
         return 1

@@ -19,7 +19,13 @@ device-resident and prefill runs in big bucketed batches:
     streams to the unshared paged engine on a shared-system-prompt workload,
     NEW KV bytes reserved per request (acceptance: >= 30% lower), and peak
     concurrency at a fixed small pool (shared pages stop counting against
-    every request).
+    every request),
+  * scheduler policies on a mixed short/long trace: queue-wait p50/p99 (in
+    deterministic scheduling rounds AND wall seconds) under FCFS vs the
+    KV-aware policy (acceptance: p99 reduced, tokens/s within +-10%), plus
+    priority preemption via page-level swap (preemption count, high-priority
+    admission latency with/without swap, and bit-exactness of the preempted
+    requests' resumed streams).
 
 Writes ``BENCH_serving.json`` into the working directory, including a
 ``smoke_reference`` section that ``benchmarks/check_regression.py`` diffs
@@ -46,6 +52,7 @@ from repro.serving import (
     DisaggregatedServer,
     GenRequest,
     PrefillEngine,
+    make_scheduler,
 )
 from repro.serving.kvcache import kv_cache_bytes
 
@@ -59,6 +66,8 @@ PAGE_SIZE = 16
 PREFIX_LEN = 32  # shared system-prompt tokens (2 pages)
 MAX_NEW = 8 if FAST else 24
 N_REQUESTS = 8 if FAST else 16
+SCHED_SLOTS = 8   # scheduler-policy trace: slots are plentiful,
+SCHED_POOL = 16   # pages are the binding limit (2 page-hungry reqs fill it)
 
 
 def _requests(cfg, n, max_new=None, seed=0):
@@ -283,6 +292,131 @@ def _shared_prefix_concurrency(params, cfg, *, prefix: bool, pool_pages: int = 2
     return srv.peak_active
 
 
+def _sched_trace(cfg):
+    """Mixed short/long trace in head-of-line-blocking shape: 2 page-hungry
+    requests submitted FIRST (8 pages each on the 16-page pool, so they
+    serialize nothing but monopolize pages), then 14 short ones (2 pages
+    each, finished in one decode block).  Under FCFS the shorts queue behind
+    the longs; the KV-aware policy runs the shorts first."""
+    rng = np.random.default_rng(21)
+    longs = [GenRequest(i, rng.integers(0, cfg.vocab_size, size=90),
+                        max_new_tokens=24) for i in range(2)]
+    shorts = [GenRequest(2 + i,
+                         rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 13))),
+                         max_new_tokens=8) for i in range(14)]
+    return longs + shorts
+
+
+def _sched_server(params, cfg, sched):
+    pre = PrefillEngine(params, cfg, bucketed=True)
+    dec = DecodeEngine(params, cfg, max_slots=SCHED_SLOTS, max_len=MAX_LEN,
+                       decode_block=DECODE_BLOCK, paged=True,
+                       page_size=PAGE_SIZE, n_pages=SCHED_POOL)
+    return DisaggregatedServer([pre], [dec], max_prefill_batch=SCHED_SLOTS,
+                               scheduler=sched)
+
+
+def _sched_policy_run(params, cfg, policy, waves=1):
+    """Run the mixed trace under one policy; queue-wait percentiles are
+    reported both in scheduling ROUNDS (deterministic — the smoke regression
+    gate compares them exactly) and wall seconds (full-bench reporting).
+
+    The server drains fully between waves, so every wave runs the identical
+    deterministic schedule; the tokens/s is the median wave (the full bench
+    uses ``waves=3`` because single ~3s CPU windows swing with machine noise
+    far more than the ordering effect being measured)."""
+    sched = make_scheduler(policy)
+    srv = _sched_server(params, cfg, sched)
+    # warm the prefill/decode compile caches with one full wave (covers both
+    # bucket shapes AND both auto-sized decode-block variants: k=8 while a
+    # long request lives, k=7 on shorts-only rounds)
+    for r in _sched_trace(cfg):
+        r.rid += 10_000
+        srv.submit(r)
+    srv.run()
+    times, streams, reqs, round0 = [], {}, [], 0
+    for wave in range(waves):
+        reqs = _sched_trace(cfg)
+        for r in reqs:
+            r.rid += wave * 1000
+            srv.submit(r)
+        round0 = sched.round
+        t0 = time.perf_counter()
+        streams = srv.run()
+        times.append(time.perf_counter() - t0)
+    waits_r = [sched.queue_wait_rounds[r.rid] for r in reqs]
+    waits_s = [sched.queue_wait_s[r.rid] for r in reqs]
+    n_tok = sum(len(streams[r.rid]) for r in reqs)
+    return {
+        "queue_wait_rounds": {"p50": float(np.percentile(waits_r, 50)),
+                              "p99": float(np.percentile(waits_r, 99))},
+        "queue_wait_s": {"p50": float(np.percentile(waits_s, 50)),
+                         "p99": float(np.percentile(waits_s, 99))},
+        "tokens_per_s": n_tok / float(np.median(times)),
+        "rounds": sched.round - round0,
+        "preemptions": sched.stats["preemptions"],
+    }, streams
+
+
+def _sched_priority_metrics(params, cfg):
+    """Preemption demo: 5 low-priority requests monopolize the pool, then a
+    high-priority request arrives.  With swap it preempts one victim and is
+    admitted promptly; without swap it waits for a natural release.  The
+    preempted requests' completed streams are checked BIT-identical to an
+    undisturbed run (greedy), so the swap round trip is validated end to end
+    in the bench, not just in unit tests."""
+    def lows():
+        r = np.random.default_rng(5)
+        return [GenRequest(i, r.integers(0, cfg.vocab_size, size=10),
+                           max_new_tokens=24) for i in range(5)]
+
+    ref_srv = _sched_server(params, cfg, None)  # undisturbed reference
+    ref = lows()
+    for r in ref:
+        ref_srv.submit(r)
+    ref_srv.run()
+
+    out = {}
+    for swap in (True, False):
+        sched = make_scheduler("priority", swap=swap)
+        srv = _sched_server(params, cfg, sched)
+        ls = lows()
+        for r in ls:
+            srv.submit(r)
+        srv.run_round()
+        srv.run_round()  # lows are decoding; the pool is nearly full
+        high = GenRequest(100, np.random.default_rng(6).integers(
+            0, cfg.vocab_size, size=40), max_new_tokens=16, priority=1)
+        srv.submit(high)
+        srv.run()
+        mism = int(sum(ls[i].tokens != ref[i].tokens for i in range(len(ls))))
+        out["swap" if swap else "no_swap"] = {
+            "preemptions": sched.stats["preemptions"],
+            "swap_ins": sched.stats["swap_ins"],
+            "high_wait_rounds": int(sched.queue_wait_rounds[100]),
+            "preempted_stream_mismatches": mism,
+        }
+    return out
+
+
+def _sched_metrics(params, cfg, waves=1):
+    """The scheduler-policy section (shared by smoke and the full run: the
+    round-based metrics are deterministic and wave-invariant, so the
+    committed smoke_reference gates head-of-line blocking, not just
+    throughput; the full run times extra waves for a stable tokens/s)."""
+    fcfs, fcfs_streams = _sched_policy_run(params, cfg, "fcfs", waves=waves)
+    kv, kv_streams = _sched_policy_run(params, cfg, "kv-aware", waves=waves)
+    mism = int(sum(fcfs_streams[r] != kv_streams[r] for r in fcfs_streams))
+    return {
+        "trace": {"requests": len(_sched_trace(cfg)), "pool_pages": SCHED_POOL,
+                  "slots": SCHED_SLOTS},
+        "fcfs": fcfs,
+        "kv_aware": kv,
+        "stream_mismatches": mism,
+        "priority": _sched_priority_metrics(params, cfg),
+    }
+
+
 def _smoke_metrics(params, cfg):
     """The seconds-scale equivalence slice (also embedded in the full run as
     the committed ``smoke_reference`` for benchmarks/check_regression.py)."""
@@ -312,6 +446,7 @@ def _smoke_metrics(params, cfg):
                                          "saving_frac": 1 - shr_bytes / base_bytes},
             "shared_pages_total": int(shared_total),
         },
+        "scheduler": _sched_metrics(params, cfg),
     }
 
 
@@ -342,6 +477,19 @@ def main(argv=None) -> None:
         b.row("smoke_kv_new_bytes_saving",
               sm["shared_prefix"]["kv_new_bytes_per_request"]["saving_frac"],
               "acceptance: >= 0.30")
+        sc = sm["scheduler"]
+        b.row("smoke_queue_wait_p99_rounds_fcfs",
+              sc["fcfs"]["queue_wait_rounds"]["p99"], "")
+        b.row("smoke_queue_wait_p99_rounds_kv_aware",
+              sc["kv_aware"]["queue_wait_rounds"]["p99"],
+              "acceptance: < fcfs p99")
+        b.row("smoke_sched_stream_mismatches", sc["stream_mismatches"],
+              "acceptance: 0")
+        b.row("smoke_preemptions", sc["priority"]["swap"]["preemptions"],
+              "acceptance: >= 1")
+        b.row("smoke_preempted_stream_mismatches",
+              sc["priority"]["swap"]["preempted_stream_mismatches"],
+              "acceptance: 0")
         b.dump()
         if args.json:
             with open(args.json, "w") as f:
@@ -349,6 +497,14 @@ def main(argv=None) -> None:
         assert sm["stream_mismatches"] == 0, "paged streams diverged from slab"
         assert sm["shared_prefix"]["stream_mismatches"] == 0, \
             "shared-prefix streams diverged from unshared paged"
+        assert sc["stream_mismatches"] == 0, \
+            "greedy streams diverged across scheduler policies"
+        assert sc["kv_aware"]["queue_wait_rounds"]["p99"] \
+            < sc["fcfs"]["queue_wait_rounds"]["p99"], \
+            "KV-aware failed to cut queue-wait p99 on the mixed trace"
+        assert sc["priority"]["swap"]["preemptions"] >= 1, "no preemption happened"
+        assert sc["priority"]["swap"]["preempted_stream_mismatches"] == 0, \
+            "preempted streams diverged after swap-in"
         print("SMOKE OK")
         return
 
@@ -424,7 +580,39 @@ def main(argv=None) -> None:
     b.row("max_concurrent_fixed_pool_unshared", conc_base, "20-page pool")
     b.row("max_concurrent_fixed_pool_shared", conc_shared,
           "same pool; shared pages count once, not per request")
+
+    # -- scheduler policies on the mixed short/long trace -------------------
+    sched = _sched_metrics(params, cfg, waves=3)
+    fc, kv = sched["fcfs"], sched["kv_aware"]
+    tps_ratio = kv["tokens_per_s"] / fc["tokens_per_s"]
+    b.row("sched_queue_wait_p50_rounds_fcfs", fc["queue_wait_rounds"]["p50"], "")
+    b.row("sched_queue_wait_p50_rounds_kv_aware", kv["queue_wait_rounds"]["p50"],
+          "small requests stop queueing behind page-hungry ones")
+    b.row("sched_queue_wait_p99_rounds_fcfs", fc["queue_wait_rounds"]["p99"], "")
+    b.row("sched_queue_wait_p99_rounds_kv_aware", kv["queue_wait_rounds"]["p99"],
+          "acceptance: < fcfs p99")
+    b.row("sched_queue_wait_p99_s_fcfs", fc["queue_wait_s"]["p99"], "")
+    b.row("sched_queue_wait_p99_s_kv_aware", kv["queue_wait_s"]["p99"], "")
+    b.row("sched_tokens_per_s_fcfs", fc["tokens_per_s"], "")
+    b.row("sched_tokens_per_s_kv_aware", kv["tokens_per_s"],
+          "acceptance: within +-10% of fcfs")
+    b.row("sched_tokens_per_s_ratio", tps_ratio, "")
+    b.row("sched_stream_mismatches", sched["stream_mismatches"],
+          "acceptance: 0 (greedy tokens are policy-invariant)")
+    pr = sched["priority"]
+    b.row("sched_preemptions_swap", pr["swap"]["preemptions"],
+          "page-level swap of the lowest-priority victim")
+    b.row("sched_high_wait_rounds_swap", pr["swap"]["high_wait_rounds"],
+          "high-priority admission latency WITH preemption")
+    b.row("sched_high_wait_rounds_no_swap", pr["no_swap"]["high_wait_rounds"],
+          "without swap: waits for a natural release")
+    b.row("sched_preempted_stream_mismatches",
+          pr["swap"]["preempted_stream_mismatches"],
+          "acceptance: 0 (swap round trip is bit-exact)")
     b.dump()
+    assert kv["queue_wait_rounds"]["p99"] < fc["queue_wait_rounds"]["p99"]
+    assert abs(tps_ratio - 1.0) <= 0.10, \
+        f"KV-aware tokens/s drifted {tps_ratio:.3f}x vs FCFS (acceptance +-10%)"
 
     # seconds-scale smoke slice, committed as the CI regression reference
     full_mn, full_nr = MAX_NEW, N_REQUESTS
@@ -474,6 +662,7 @@ def main(argv=None) -> None:
                                           "pool_pages": 20},
             "prefix_len": PREFIX_LEN,
         },
+        "scheduler": dict(sched, tokens_per_s_ratio=tps_ratio),
         "smoke_reference": smoke_reference,
         "config": {"decode_block": DECODE_BLOCK, "max_slots": MAX_SLOTS,
                    "max_len": MAX_LEN, "max_new": MAX_NEW, "n_requests": N_REQUESTS},

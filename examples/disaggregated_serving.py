@@ -15,7 +15,13 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.models import model as M
-from repro.serving import DecodeEngine, DisaggregatedServer, GenRequest, PrefillEngine
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    PrefillEngine,
+    make_scheduler,
+)
 
 
 def main():
@@ -27,14 +33,28 @@ def main():
     ap.add_argument("--decode-block", type=int, default=4,
                     help="fused decode steps per host sync; tokens arrive in "
                          "blocks of this size, so TBT is measured per block")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=["fcfs", "kv-aware", "priority"],
+                    help="admission policy (kv-aware reorders by reserved-"
+                         "page footprint; priority preempts via page swap)")
+    ap.add_argument("--swap", action="store_true",
+                    help="priority policy: preempt low-priority requests via "
+                         "page-level swap (switches decode to the paged KV "
+                         "cache)")
     args = ap.parse_args()
+    if args.swap and args.scheduler != "priority":
+        ap.error("--swap requires --scheduler priority (only the priority "
+                 "policy preempts)")
 
     cfg = reduced(ARCHS[args.arch])
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    paged = args.swap or args.scheduler == "kv-aware"
     server = DisaggregatedServer(
         [PrefillEngine(params, cfg) for _ in range(2)],
         [DecodeEngine(params, cfg, max_slots=4, max_len=256,
-                      decode_block=args.decode_block, seed=i) for i in range(2)],
+                      decode_block=args.decode_block, seed=i,
+                      paged=paged, page_size=16) for i in range(2)],
+        scheduler=make_scheduler(args.scheduler, swap=args.swap),
     )
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
@@ -48,12 +68,15 @@ def main():
         now = time.perf_counter() - t_start
         while submitted < args.requests and arrivals[submitted] <= now:
             prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 48)))
-            server.submit(GenRequest(submitted, prompt, max_new_tokens=args.max_new))
+            prio = 1 if (args.scheduler == "priority" and submitted % 4 == 0) else 0
+            server.submit(GenRequest(submitted, prompt, max_new_tokens=args.max_new,
+                                     priority=prio))
             token_times[submitted] = [arrivals[submitted]]
             submitted += 1
         before = {r.rid: len(r.tokens) for r in server.all_requests.values()}
-        progressed = bool(server.queue or server.waiting or any(d.requests for d in server.decodes))
-        if not progressed and submitted >= args.requests:
+        # pending() also covers swapped-out (preempted) requests, which hold
+        # no slot but are very much still in flight
+        if not server.pending() and submitted >= args.requests:
             break
         # one scheduling + decode round
         server.run_round()
@@ -79,6 +102,13 @@ def main():
     if tbt:
         print(f"TBT   p50={np.percentile(tbt, 50)*1e3:.0f}ms "
               f"p90={np.percentile(tbt, 90)*1e3:.0f}ms")
+    sched = server.scheduler
+    waits = sorted(sched.queue_wait_rounds.values())
+    if waits:
+        print(f"sched={sched.name} queue-wait rounds "
+              f"p50={np.percentile(waits, 50):.1f} "
+              f"p90={np.percentile(waits, 90):.1f} "
+              f"preemptions={sched.stats['preemptions']}")
     assert len(done) == args.requests
 
 

@@ -7,8 +7,13 @@ over two disjoint phase meshes (``mesh.make_phase_meshes``) — prefill pods
 built from Prefill-Chip machines and decode pods from Decode-Chip machines,
 provisioned by ``core.provision`` (see examples/provisioning.py).
 
+Scheduling policy is pluggable (``--scheduler {fcfs,kv-aware,priority}``;
+``--swap`` adds page-level preemption under the priority policy) and the
+per-request queue-wait percentiles + preemption counts are reported next to
+throughput.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \
-      --requests 16 --max-new 12
+      --requests 16 --max-new 12 --paged --scheduler kv-aware
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import numpy as np
 from ..configs import ARCHS, reduced as reduce_cfg
 from ..models import model as M
 from ..serving import DecodeEngine, DisaggregatedServer, GenRequest, PrefillEngine, SamplingParams
+from ..serving.scheduler import SCHEDULERS, make_scheduler
 
 
 def main():
@@ -54,9 +60,26 @@ def main():
                          "mode): requests whose prompts share a page-aligned "
                          "prefix map the cached pages instead of recomputing "
                          "them; prefill runs only the uncached tail")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=sorted(SCHEDULERS),
+                    help="admission policy: fcfs (oldest first, the seed "
+                         "behaviour), kv-aware (smallest reserved-page "
+                         "footprint first with an aging bound), priority "
+                         "(GenRequest.priority, higher first; every 4th "
+                         "request here is tagged priority 1 for the demo)")
+    ap.add_argument("--swap", action="store_true",
+                    help="priority scheduler only: preempt the lowest-"
+                         "priority running request via page-level swap "
+                         "(private KV pages to host, prefix-shared pages "
+                         "stay pooled) when a higher-priority request is "
+                         "blocked; requires --paged")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
+    if args.swap and args.scheduler != "priority":
+        ap.error("--swap requires --scheduler priority")
+    if args.swap and not args.paged:
+        ap.error("--swap requires --paged (page-level preemption)")
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -71,23 +94,35 @@ def main():
                      n_pages=args.pages, prefix_cache=args.prefix_cache)
         for i in range(args.decode_engines)
     ]
+    sched = make_scheduler(args.scheduler, swap=args.swap)
     srv = DisaggregatedServer(prefills, decodes, seed=args.seed,
-                              max_prefill_batch=args.prefill_batch)
+                              max_prefill_batch=args.prefill_batch,
+                              scheduler=sched)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 64)))
-        srv.submit(GenRequest(i, prompt, max_new_tokens=args.max_new))
+        prio = 1 if (args.scheduler == "priority" and i % 4 == 0) else 0
+        srv.submit(GenRequest(i, prompt, max_new_tokens=args.max_new,
+                              priority=prio))
     t0 = time.time()
     results = srv.run()
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
+    waits = sorted(sched.queue_wait_rounds.values())
     print(json.dumps({
         "arch": cfg.name,
+        "scheduler": sched.name,
         "requests": len(results),
         "total_new_tokens": n_tok,
         "wall_s": round(dt, 2),
         "tokens_per_s": round(n_tok / dt, 1),
+        "queue_wait_rounds": {
+            "p50": float(np.percentile(waits, 50)) if waits else 0.0,
+            "p99": float(np.percentile(waits, 99)) if waits else 0.0,
+        },
+        "preemptions": sched.stats["preemptions"],
+        "swap_ins": sched.stats["swap_ins"],
     }))
     assert len(results) == args.requests, "not all requests completed"
 

@@ -1,4 +1,5 @@
-"""Serving runtime: engines, KV-cache slots, sampling, disaggregation."""
+"""Serving runtime: engines, KV-cache slots, sampling, disaggregation,
+pluggable schedulers."""
 from .engine import (  # noqa: F401
     DecodeEngine,
     DisaggregatedServer,
@@ -10,3 +11,12 @@ from .engine import (  # noqa: F401
 )
 from .prefix_cache import PrefixIndex, chunk_hashes  # noqa: F401
 from .sampling import SamplingParams, sample  # noqa: F401
+from .scheduler import (  # noqa: F401
+    FCFSScheduler,
+    KVAwareScheduler,
+    PriorityScheduler,
+    Scheduler,
+    SwappedRequest,
+    WaitingEntry,
+    make_scheduler,
+)

@@ -29,7 +29,10 @@ The hot path mirrors the paper's hardware story in software:
 Engines are deliberately synchronous and single-host here (the distributed
 versions are built in ``repro/launch`` via jit+shardings over the production
 mesh); the scheduling logic — slots, admission, continuous batching,
-bucketed batched prefill — is the real thing.
+bucketed batched prefill — is the real thing.  Scheduling POLICY (queue
+ordering, admission ordering, preemption) is pluggable: see
+``serving.scheduler`` for the FCFS / KV-aware / priority policies and the
+page-level swap machinery behind preemption.
 """
 from __future__ import annotations
 
@@ -45,6 +48,7 @@ from ..models import model as M
 from . import kvcache
 from .prefix_cache import PrefixIndex, chunk_hashes
 from .sampling import SamplingParams, sample
+from .scheduler import FCFSScheduler, Scheduler, SwappedRequest, WaitingEntry
 
 DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
 
@@ -55,6 +59,9 @@ class GenRequest:
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    # scheduling: higher wins under PriorityScheduler (FIFO within a class);
+    # FCFS / KV-aware policies ignore it
+    priority: int = 0
     # outputs
     tokens: List[int] = field(default_factory=list)
     done: bool = False
@@ -664,6 +671,7 @@ class DecodeEngine:
         *,
         batch_index: int = 0,
         prefix: Optional[PrefixMatch] = None,
+        resume: bool = False,
     ) -> Optional[int]:
         """Insert a prefilled request into a free slot (the KV handoff).
 
@@ -679,9 +687,26 @@ class DecodeEngine:
         prefilled only the uncached tail; full-pack prefix writes are steered
         to the trash page.  After the admit the host registers the request's
         not-yet-cached full prompt chunks in the prefix index (+1 cache hold
-        each, applied inside the jitted admit via ``reg_mask``)."""
-        if true_len + req.max_new_tokens > self.max_len:
-            raise ValueError(f"request {req.rid} needs {true_len + req.max_new_tokens} > max_len")
+        each, applied inside the jitted admit via ``reg_mask``).
+
+        ``resume=True`` marks a swap-in re-admission: ``true_len`` already
+        includes the decoded tokens (so capacity math uses the REMAINING
+        budget, not the full ``max_new_tokens``), ``first_token`` is the last
+        emitted token (re-consumed by the next decode step, never re-appended
+        to the output), and ``prefix`` is the swap stash's kept-page match —
+        the admit-time re-match is skipped because the pack only scatters
+        logical pages from ``n_shared`` on.
+
+        The resume budget is ``resume_budget(req)`` (remaining + the
+        re-consumed last token, whose KV is not in the cache yet — exactly
+        like ``first_token`` at a fresh admit), so the resumed reservation
+        lands on the SAME total as the uninterrupted run —
+        ``_pages_needed(orig_len, max_new)`` — keeping the allocator's
+        pool-exhaustion-unreachable invariant intact through the overshoot
+        margin."""
+        max_new_eff = self.resume_budget(req) if resume else req.max_new_tokens
+        if true_len + max_new_eff > self.max_len:
+            raise ValueError(f"request {req.rid} needs {true_len + max_new_eff} > max_len")
         if self.paged:
             ps = self.page_size
             pps = self.pages_per_slot
@@ -695,7 +720,7 @@ class DecodeEngine:
                 # below can never free a page this very admit is mapping.
                 prefix = self.match_prefix(req.prompt, rid=req.rid)
             n_shared = prefix.n_shared if prefix is not None else 0
-            need_total = self._pages_needed(true_len, req.max_new_tokens)
+            need_total = self._pages_needed(true_len, max_new_eff)
             need = need_total - n_shared
             if need > self.n_pages:
                 self.release_prefix_pin(req.rid)  # caller drops the request
@@ -769,7 +794,8 @@ class DecodeEngine:
             )
         self.slots.lengths[slot] = true_len
         self.requests[req.rid] = req
-        req.tokens.append(first_token)
+        if not resume:
+            req.tokens.append(first_token)
         return slot
 
     def fork(
@@ -831,6 +857,123 @@ class DecodeEngine:
         self.stats["admits"] += 1
         self.stats["new_pages"] += growth
         self.stats["shared_pages"] += n_mapped
+        return slot
+
+    def swap_out(self, rid: int) -> SwappedRequest:
+        """Preempt a live request: page-level swap of its KV to host.
+
+        The PRIVATE pages — the uncached prompt tail plus everything decode
+        wrote — are gathered into a host pack (``kvcache.paged_swap_out``,
+        one sync, a rare lifecycle event).  Prefix-shared pages (registered
+        in the prefix index, so ``refs > 1``) are NOT copied: this slot's
+        mapping ref is dropped by the decrement-only release and the bytes
+        stay in the pool, kept alive by the index cache hold and a swap pin
+        that bridges the gap until ``swap_in`` remaps them.  The slot, its
+        page reservation, and its growth allowance are all freed.
+
+        ``swap_in`` resumes the stream bit-identically under greedy
+        sampling; sampled streams additionally require the engine-global
+        per-step PRNG schedule to be unchanged (the key splits once per
+        decode step regardless of slot occupancy)."""
+        if not self.paged:
+            raise ValueError("swap_out requires the paged KV cache")
+        if rid not in self.requests:
+            raise KeyError(f"request {rid} is not decoding here")
+        slot = self.slots.request_ids.index(rid)
+        req = self.requests[rid]
+        length = self.slots.lengths[slot]
+        n_keep, kept, hashes = 0, [], []
+        if self.prefix is not None:
+            m = self.match_prefix(req.prompt)  # same cap/hash rules as admit
+            hashes = m.hashes
+            # keep exactly the leading run where the index maps OUR physical
+            # pages (it always does for chunks this admit registered or
+            # mapped, but a prefix evicted and re-registered from another
+            # request's pages must fall back to a byte copy, not aliasing)
+            for a, b in zip(m.pages, self._slot_pages[slot]):
+                if a != b:
+                    break
+                n_keep += 1
+            kept = self._slot_pages[slot][:n_keep]
+            if kept:
+                self.prefix.swap_pin(rid, kept)
+        pack = kvcache.paged_swap_out(
+            self.state, slot, length, self.cfg, page_size=self.page_size,
+            start_page=n_keep,
+        )
+        # release the slot: decrement-only on device (shared pages keep their
+        # other holders' refs and bytes), mirrored on host
+        keep = np.ones((self.max_slots,), bool)
+        keep[slot] = False
+        self._growth[slot] = 0
+        self._slot_new[slot] = 0
+        for p in self._slot_pages[slot]:
+            self._href[p] -= 1
+        self._slot_pages[slot] = []
+        self.slots.free(slot)
+        del self.requests[rid]
+        self.admit_new_pages.pop(rid, None)
+        self.admit_shared_pages.pop(rid, None)
+        self.state = self._release(self.state, jnp.asarray(keep))
+        self.stats["swap_outs"] = self.stats.get("swap_outs", 0) + 1
+        return SwappedRequest(
+            req=req, engine=self, pack=pack, length=length,
+            last_token=req.tokens[-1], n_keep=n_keep, kept_pages=kept,
+            hashes=hashes,
+        )
+
+    @staticmethod
+    def resume_budget(req: GenRequest) -> int:
+        """Decode budget of a swapped-out request: the remaining new tokens
+        PLUS the re-consumed last token, whose KV is still unwritten — the
+        exact mirror of ``first_token`` being counted inside a fresh admit's
+        ``max_new_tokens``.  The single source of truth for swap-in capacity
+        checks and the resumed reservation (admit with ``resume=True``), so
+        the two can never disagree."""
+        return req.max_new_tokens - len(req.tokens) + 1
+
+    def swap_gain(self, rid: int) -> int:
+        """Pages that would become ALLOCATABLE if ``rid`` were swapped out
+        right now: its growth allowance plus every mapped page it holds
+        alone.  Pages with other holders — the prefix index's cache hold or
+        sharing slots — stay resident (and a swap PINS the index-matched
+        ones, so unlike a natural release they cannot even be evicted).  The
+        preemption policy uses this to skip preemptions that can never free
+        enough capacity — swapping a victim whose pages mostly survive would
+        deadlock the blocked request against its own victims' pins."""
+        if not self.paged or rid not in self.requests:
+            return 0
+        slot = self.slots.request_ids.index(rid)
+        return self._growth[slot] + sum(
+            1 for p in self._slot_pages[slot] if self._href[p] == 1
+        )
+
+    def swap_in(self, sw: SwappedRequest) -> Optional[int]:
+        """Re-admit a swapped-out request bit-identically: remap the kept
+        prefix pages (+1 ref each), scatter the host pack into fresh pages,
+        restore the resume token/position, and release the swap pins.
+        Returns the new slot, or None while capacity is still short (the
+        stash and its pins survive for a later retry)."""
+        if sw.engine is not self:
+            raise ValueError(
+                f"request {sw.req.rid} was swapped out of a different engine "
+                f"(its kept pages are physical ids in that engine's pool)"
+            )
+        req = sw.req
+        if not self.can_admit(sw.length, self.resume_budget(req),
+                              n_shared=sw.n_keep):
+            return None
+        m = PrefixMatch(
+            pages=list(sw.kept_pages), n_shared=sw.n_keep,
+            hashes=list(sw.hashes), tail=True,
+        )
+        slot = self.admit(
+            req, sw.pack, sw.last_token, sw.length, prefix=m, resume=True
+        )
+        if slot is not None:
+            self.stats["swap_ins"] = self.stats.get("swap_ins", 0) + 1
+            if self.prefix is not None:
+                self.prefix.swap_unpin(req.rid)
         return slot
 
     def _auto_block(self) -> int:
@@ -907,12 +1050,19 @@ class DecodeEngine:
 class DisaggregatedServer:
     """Prefill pool -> KV handoff -> decode pool, continuous batching.
 
-    Each scheduling round drains one same-bucket BATCH of queued prompts per
-    round (greedy: the oldest request picks the bucket, then every queued
-    request with a compatible group key — same tail bucket, same prefix
-    capacity, same routed decode engine — joins up to ``max_prefill_batch``),
-    admits waiting requests into decode slots, and runs one fused decode
-    block per decode engine.
+    Scheduling POLICY is pluggable (``serving.scheduler``): the server owns
+    only mechanism — bucketed batched prefill, the KV handoff, admission
+    plumbing, fused decode blocks — and defers ordering decisions to its
+    ``Scheduler``.  Each round it prefills one BATCH of queued prompts (the
+    policy-ordered queue head picks the bucket, then every queued request
+    with a compatible group key — same tail bucket, same prefix capacity,
+    same routed decode engine — joins up to ``max_prefill_batch``), re-admits
+    swapped-out requests, admits waiting requests in policy order (invoking
+    the policy's preemption hook when one is blocked), and runs one fused
+    decode block per decode engine.  The default ``FCFSScheduler`` is
+    bit-identical to the old hardcoded oldest-first behaviour; see
+    ``KVAwareScheduler`` (page-footprint ordering + aging) and
+    ``PriorityScheduler`` (priorities + page-level preemption/swap).
 
     With prefix-caching decode engines, scheduling is KV-cache aware
     (production-stack-style routing): each queued prompt is matched against
@@ -933,28 +1083,46 @@ class DisaggregatedServer:
         transfer=lambda kv: kv,
         seed: int = 0,
         max_prefill_batch: int = 8,
+        scheduler: Optional[Scheduler] = None,
     ):
         self.prefills = prefill_engines
         self.decodes = decode_engines
         self.transfer = transfer
         self.key = jax.random.PRNGKey(seed)
         self.max_prefill_batch = max(1, max_prefill_batch)
-        self.queue: List[GenRequest] = []
-        # (req, kv_batch, batch_index, first_token, true_len,
-        #  prefix_match | None, routed decode engine | None)
-        self.waiting: List[Tuple] = []
+        self.scheduler = scheduler if scheduler is not None else FCFSScheduler()
         self.all_requests: Dict[int, GenRequest] = {}
         self.peak_active = 0  # max concurrent decode requests seen (for benchmarks)
         self._rr = 0
         # (rid, page_size) -> chunk hashes: prompts are immutable, so the
-        # per-round routing scans never re-hash a queued prompt
+        # per-round routing scans never re-hash a queued prompt; entries are
+        # dropped when the request leaves the queue or finishes (_forget)
         self._hash_memo: Dict[Tuple[int, int], List[bytes]] = {}
 
+    # the queue / waiting containers live on the scheduler (policy state);
+    # these aliases keep the long-standing introspection surface working
+    @property
+    def queue(self) -> List[GenRequest]:
+        return self.scheduler.queue
+
+    @queue.setter
+    def queue(self, v) -> None:
+        self.scheduler.queue = v
+
+    @property
+    def waiting(self) -> List[WaitingEntry]:
+        return self.scheduler.waiting
+
+    @waiting.setter
+    def waiting(self, v) -> None:
+        self.scheduler.waiting = v
+
     def submit(self, req: GenRequest):
-        """Queue a request, rejecting up front what the cluster can never
-        serve: prompts past the largest prefill bucket (the old path minted an
-        unbounded jit key per oversized length) and prompt+max_new combinations
-        no decode engine has capacity for (the old path blew up only at admit)."""
+        """Validate and queue a request, rejecting up front what the cluster
+        can never serve: prompts past the largest prefill bucket (the old path
+        minted an unbounded jit key per oversized length) and prompt+max_new
+        combinations no decode engine has capacity for (the old path blew up
+        only at admit).  Queue ORDER is the scheduler's business."""
         n = len(req.prompt)
         limits = [e.buckets[-1] for e in self.prefills if e.bucketed]
         if limits and n > min(limits):
@@ -971,172 +1139,168 @@ class DisaggregatedServer:
                 f"{req.max_new_tokens} exceeds every decode engine's capacity "
                 f"(max_len {cap})"
             )
-        self.queue.append(req)
+        self.scheduler.add(req)
         self.all_requests[req.rid] = req
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
 
-    def _match_for(self, req: GenRequest):
-        """KV-cache-aware routing: the decode engine already holding the
-        longest prefix of this prompt (cf. production-stack's router).
-
-        A scan, not a take: chunk hashes are memoized per (request, page
-        size) — prompts are immutable — and index recency is NOT refreshed
-        (``touch=False``); the selected match touches at pin time."""
-        best, best_eng = None, None
-        for d in self.decodes:
-            if not getattr(d, "prefix_cache", False):
-                continue
-            if not d.can_ever_admit(len(req.prompt), req.max_new_tokens):
-                continue
-            hk = (req.rid, d.page_size)
-            if hk not in self._hash_memo:
-                self._hash_memo[hk] = chunk_hashes(
-                    req.prompt, d.page_size, d.pages_per_slot
-                )
-            m = d.match_prefix(req.prompt, hashes=self._hash_memo[hk], touch=False)
-            if m and m.n_shared > 0 and (best is None or m.n_shared > best.n_shared):
-                best, best_eng = m, d
-        return best, best_eng
-
-    def _group_key(self, req: GenRequest, match, eng_d, buckets):
-        """Prefill-batch compatibility key: same tail bucket, same prefix
-        capacity bucket, same routed decode engine."""
-        if match is None:
-            return (_bucket(len(req.prompt), buckets), None, None)
-        tail = len(req.prompt) - match.n_shared * eng_d.page_size
-        n_pg_b = 1 << max(match.n_shared - 1, 0).bit_length()  # pow2 >= n_shared
-        n_pg_b = min(max(n_pg_b, 1), eng_d.pages_per_slot)
-        return (_bucket(tail, buckets), n_pg_b, id(eng_d))
-
-    def _take_shared_group(self, buckets):
-        """Pop the oldest request's group-mates under prefix-aware keys and
-        pin the selected matches until admit.  Returns (group, matches) with
-        matches[i] = (PrefixMatch | None, routed DecodeEngine | None)."""
-        head = self.queue[0]
-        m0, d0 = self._match_for(head)
-        want = self._group_key(head, m0, d0, buckets)
-        group, matches, rest = [head], [(m0, d0)], []
-        for r in self.queue[1:]:
-            if len(group) < self.max_prefill_batch:
-                m, d = self._match_for(r)
-                if self._group_key(r, m, d, buckets) == want:
-                    group.append(r)
-                    matches.append((m, d))
-                    continue
-            rest.append(r)
-        self.queue = rest
-        for r, (m, d) in zip(group, matches):
-            if m is not None:
-                d.pin_prefix(r.rid, m)
-            # the request leaves the queue: its memoized hashes ride on in
-            # the PrefixMatch (admit registration), the memo entry can go
-            for d2 in self.decodes:
-                self._hash_memo.pop((r.rid, getattr(d2, "page_size", 0)), None)
-        return group, matches
-
-    def _pending(self) -> bool:
+    def pending(self) -> bool:
+        """Whether any request is still in flight anywhere: queued, waiting
+        for a slot, swapped out to host, or decoding."""
+        s = self.scheduler
         return bool(
-            self.queue or self.waiting or any(d.requests for d in self.decodes)
+            s.queue or s.waiting or s.swapped
+            or any(d.requests for d in self.decodes)
         )
 
+
+    def _forget(self, rid: int) -> None:
+        """Drop every piece of host bookkeeping for a request that exited —
+        finished, prefill-only, or abandoned — so long-running servers cannot
+        leak hash memos or prefix pins (the churn-loop regression)."""
+        self.scheduler.forget(rid)
+        for d in self.decodes:
+            self._hash_memo.pop((rid, getattr(d, "page_size", 0)), None)
+            if getattr(d, "prefix", None) is not None:
+                d.release_prefix_pin(rid)
+                d.prefix.swap_unpin(rid)
+
+    def _prefill_group(self, eng: PrefillEngine, group, matches) -> None:
+        """Prefill one compatible group and hand the KV off: prefix-matched
+        requests prefill only their uncached tails (attention-only engines),
+        finished prefill-only requests complete here, the rest join the
+        scheduler's waiting list."""
+        sched = self.scheduler
+        pad_to = self.max_prefill_batch if eng.bucketed else None
+        # prefix sharing: gather the matched pages from the routed decode
+        # engine's pool and prefill only the uncached tails (attention-
+        # only engines; hybrids recompute in full but still map the
+        # shared pages at admit)
+        prefix_arg = None
+        routed = next((d for (m, d) in matches if m is not None), None)
+        if routed is not None and routed._tail_ok:
+            n_pg_b = max(
+                sched.group_key(r, m, d, eng.buckets)[1] or 1
+                for r, (m, d) in zip(group, matches)
+            )
+            B_pad = max(pad_to or len(group), len(group))
+            tables = np.full((B_pad, n_pg_b), routed.n_pages, np.int32)
+            shared_lens = []
+            for i, (m, _) in enumerate(matches):
+                ns = 0 if m is None else m.n_shared
+                if ns:
+                    tables[i, :ns] = m.pages
+                shared_lens.append(ns * routed.page_size)
+            prefix_arg = (routed.gather_prefix(tables), shared_lens)
+            for m, _ in matches:
+                if m is not None:
+                    m.tail = True  # the pack below holds only the tails
+        toks, kvb, tls = eng.prefill_batch(
+            group, self._next_key(), pad_to=pad_to, prefix=prefix_arg
+        )
+        kvb = self.transfer(kvb)  # KV handoff (pod-to-pod in production)
+        for i, req in enumerate(group):
+            m, d = matches[i]
+            if req.max_new_tokens <= 1:
+                req.tokens.append(toks[i])
+                req.done = True
+                if m is not None:
+                    d.release_prefix_pin(req.rid)
+                sched.note_admitted(req.rid)
+                self._forget(req.rid)
+            else:
+                sched.waiting.append(
+                    WaitingEntry(req, kvb, i, toks[i], tls[i], m, d)
+                )
+
+    def _try_admit(self, e: WaitingEntry) -> bool:
+        """Admit one waiting entry into a decode engine with capacity (a free
+        slot and, for paged engines, enough unreserved KV pages) — most spare
+        capacity first.  Prefix-matched requests are ROUTED: their shared
+        pages (and, for tail-only packs, the only pool that can complete
+        them) live in the matching engine."""
+        req, m, d = e.req, e.match, e.engine
+        admitted = False
+        if m is not None and m.n_shared > 0:
+            if d.can_admit(e.true_len, req.max_new_tokens, n_shared=m.n_shared):
+                admitted = (
+                    d.admit(req, e.kv, e.first_token, e.true_len,
+                            batch_index=e.batch_index, prefix=m)
+                    is not None
+                )
+        else:
+            cands = [
+                dd for dd in self.decodes
+                if dd.can_admit(e.true_len, req.max_new_tokens)
+            ]
+            if cands:
+                dec = max(cands, key=lambda dd: dd.max_slots - dd.slots.n_active)
+                admitted = (
+                    dec.admit(req, e.kv, e.first_token, e.true_len,
+                              batch_index=e.batch_index)
+                    is not None
+                )
+        if admitted:
+            self.scheduler.note_admitted(req.rid)
+        return admitted
+
     def run_round(self):
-        """One scheduling round: batched prefill, admit, fused decode blocks."""
+        """One scheduling round: batched prefill, swap-ins, policy-ordered
+        admission (with the preemption hook), fused decode blocks."""
+        sched = self.scheduler
+        sched.begin_round(self)
         # 1) one same-bucket prefill batch per round (round-robin engines).
         # Gate on free decode capacity: each waiting entry pins its whole
         # padded batch pack on device, so prefilling ahead of slots the
         # decode pool can't absorb only accumulates dead KV buffers.
         free_slots = sum(d.max_slots - d.slots.n_active for d in self.decodes)
-        if self.queue and len(self.waiting) < max(free_slots, 1):
+        if sched.queue and len(sched.waiting) < max(free_slots, 1):
             eng = self.prefills[self._rr % len(self.prefills)]
             self._rr += 1
             if eng.bucketed:
-                group, matches = self._take_shared_group(eng.buckets)
+                group, matches = sched.take_group(self, eng.buckets)
             else:
-                group, matches = [self.queue.pop(0)], [(None, None)]
-            pad_to = self.max_prefill_batch if eng.bucketed else None
-            # prefix sharing: gather the matched pages from the routed decode
-            # engine's pool and prefill only the uncached tails (attention-
-            # only engines; hybrids recompute in full but still map the
-            # shared pages at admit)
-            prefix_arg = None
-            routed = next((d for (m, d) in matches if m is not None), None)
-            if routed is not None and routed._tail_ok:
-                n_pg_b = max(
-                    self._group_key(r, m, d, eng.buckets)[1] or 1
-                    for r, (m, d) in zip(group, matches)
-                )
-                B_pad = max(pad_to or len(group), len(group))
-                tables = np.full((B_pad, n_pg_b), routed.n_pages, np.int32)
-                shared_lens = []
-                for i, (m, _) in enumerate(matches):
-                    ns = 0 if m is None else m.n_shared
-                    if ns:
-                        tables[i, :ns] = m.pages
-                    shared_lens.append(ns * routed.page_size)
-                prefix_arg = (routed.gather_prefix(tables), shared_lens)
-                for m, _ in matches:
-                    if m is not None:
-                        m.tail = True  # the pack below holds only the tails
-            toks, kvb, tls = eng.prefill_batch(
-                group, self._next_key(), pad_to=pad_to, prefix=prefix_arg
-            )
-            kvb = self.transfer(kvb)  # KV handoff (pod-to-pod in production)
-            for i, req in enumerate(group):
-                m, d = matches[i]
-                if req.max_new_tokens <= 1:
-                    req.tokens.append(toks[i])
-                    req.done = True
-                    if m is not None:
-                        d.release_prefix_pin(req.rid)
-                else:
-                    self.waiting.append((req, kvb, i, toks[i], tls[i], m, d))
-        # 2) admit waiting requests into decode engines with capacity (a free
-        # slot and, for paged engines, enough unreserved KV pages) — most
-        # spare capacity first.  Prefix-matched requests are ROUTED: their
-        # shared pages (and, for tail-only packs, the only pool that can
-        # complete them) live in the matching engine.
-        still = []
-        for req, kvb, bi, tok, true_len, m, d in self.waiting:
-            admitted = False
-            if m is not None and m.n_shared > 0:
-                if d.can_admit(true_len, req.max_new_tokens, n_shared=m.n_shared):
-                    admitted = (
-                        d.admit(req, kvb, tok, true_len, batch_index=bi, prefix=m)
-                        is not None
-                    )
-            else:
-                cands = [
-                    dd for dd in self.decodes
-                    if dd.can_admit(true_len, req.max_new_tokens)
-                ]
-                if cands:
-                    dec = max(cands, key=lambda dd: dd.max_slots - dd.slots.n_active)
-                    admitted = (
-                        dec.admit(req, kvb, tok, true_len, batch_index=bi)
-                        is not None
-                    )
-            if not admitted:
-                still.append((req, kvb, bi, tok, true_len, m, d))
-        self.waiting = still
+                group, matches = [sched.queue.pop(0)], [(None, None)]
+            self._prefill_group(eng, group, matches)
+        # 2) swapped-out requests first (they already earned their slot once),
+        # then waiting entries in policy order; a blocked entry gives the
+        # policy one preemption attempt before it stays waiting
+        sched.try_swap_in(self)
+        admitted = set()
+        for e in sched.admit_order(self):
+            ok = self._try_admit(e)
+            if not ok and sched.on_blocked(self, e):
+                ok = self._try_admit(e)
+            if ok:
+                admitted.add(id(e))
+            elif sched.barrier(self, e):
+                break  # capacity drains to this aged entry; no backfilling
+        if admitted:
+            sched.waiting = [e for e in sched.waiting if id(e) not in admitted]
         self.peak_active = max(
             self.peak_active, sum(d.slots.n_active for d in self.decodes)
         )
-        # 3) one fused decode block everywhere
+        # 3) one fused decode block everywhere; finished requests drop their
+        # host bookkeeping on the way out (every exit path funnels here).
+        # .get(): an engine may carry requests the server never saw (fork()
+        # best-of-n branches admitted directly on the engine)
         for dec in self.decodes:
-            dec.step_block()
+            for rid in {r for r, _ in dec.step_block()}:
+                req = self.all_requests.get(rid)
+                if req is not None and req.done:
+                    self._forget(rid)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Drive to completion.  Raises ``SchedulerExhausted`` (carrying the
         finished and unfinished request ids) if ``max_steps`` rounds pass with
         requests still in flight, instead of silently dropping them."""
         steps = 0
-        while self._pending() and steps < max_steps:
+        while self.pending() and steps < max_steps:
             steps += 1
             self.run_round()
-        if self._pending():
+        if self.pending():
             done = {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
             unfinished = sorted(
                 rid for rid, r in self.all_requests.items() if not r.done

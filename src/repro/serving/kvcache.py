@@ -59,6 +59,16 @@ prefix bytes are carried into the copy by the whole-page writeback) and the
 shared page's count is decremented.  All of it runs inside the donated jitted
 block: no per-token host syncs.
 
+Refcounts also make **page-level preemption/swap** safe
+(``paged_swap_out`` / ``paged_swap_in``, built on the tested
+``paged_extract_request`` round trip): a preempted request's private pages
+are gathered to host once (a rare lifecycle sync, never per-step), its
+prefix-shared pages stay in the pool — the slot's mapping ref is dropped
+instead of copying the bytes, with the prefix index's cache hold and a swap
+pin bridging the gap — and re-admission goes through the ordinary donated
+``paged_admit`` with a tail pack, so the resumed stream is bit-identical to
+an uninterrupted run.
+
 Mamba/conv state is fixed-size per request and stays per-slot
 (``[R, max_slots, ...]``); only attention leaves page (and only attention
 prefixes are shareable — SSM state is a function of the whole prompt).
@@ -521,25 +531,79 @@ def paged_release(state: PagedDecodeState, keep) -> PagedDecodeState:
 
 
 def paged_extract_request(
-    state: PagedDecodeState, slot: int, length: int, cfg: ModelConfig, *, page_size: int
+    state: PagedDecodeState, slot: int, length: int, cfg: ModelConfig, *,
+    page_size: int, start_page: int = 0,
 ) -> Cache:
     """Gather one request's pages back into a contiguous B=1 pack
-    (decode->prefill chip-reallocation path).  Host-side, concrete indices."""
+    (decode->prefill chip-reallocation path).  Host-side, concrete indices.
+
+    ``start_page`` skips the leading logical pages.  That is the shared-page
+    fix for the preemption path: a request whose leading pages have other
+    holders (``refs > 1`` — prefix-index entries, fork siblings) must not be
+    extracted as if it solely owned them; the swap path drops this slot's
+    mapping ref (decrement-only release) and leaves the bytes in the pool,
+    extracting only the private tail from ``start_page`` on."""
     ps = page_size
     n_pg = -(-length // ps)
-    bt = state.block_tables[slot, :n_pg]
+    bt = state.block_tables[slot, start_page:n_pg]
     out = []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         c = state.caches[i]
         if mixer == "attn":
             def ex(pool):
-                rows = pool[:, bt]  # [R, n_pg, ps, ...]
-                flat = rows.reshape((rows.shape[0], n_pg * ps) + rows.shape[3:])
-                return flat[:, None, :length]
+                rows = pool[:, bt]  # [R, n_pg - start_page, ps, ...]
+                flat = rows.reshape(
+                    (rows.shape[0], (n_pg - start_page) * ps) + rows.shape[3:]
+                )
+                return flat[:, None, : length - start_page * ps]
             out.append(jax.tree.map(ex, c))
         else:
             out.append(jax.tree.map(lambda a: a[:, slot : slot + 1], c))
     return out
+
+
+def paged_swap_out(
+    state: PagedDecodeState, slot: int, length: int, cfg: ModelConfig, *,
+    page_size: int, start_page: int = 0,
+) -> Cache:
+    """Stash one request's PRIVATE pages on host for page-level preemption.
+
+    Built on the ``paged_extract_request`` round trip: gathers logical pages
+    ``[start_page, ceil(length / page_size))`` — the caller passes the number
+    of leading prefix-index-shared pages as ``start_page`` so shared bytes
+    are never copied (their mapping ref is dropped instead; the index cache
+    hold + a swap pin keep them resident) — and syncs them to host numpy.
+
+    The pack is page-padded (whole pages, garbage beyond the write head under
+    the usual overwrite-before-attend contract), so re-admission jit keys are
+    bounded by ``pages_per_slot`` instead of one per exact swap length.  The
+    caller releases the slot afterwards (decrement-only, inside the donated
+    state); this one host sync is a rare lifecycle event, never per-step."""
+    n_pg = -(-length // page_size)
+    pack = paged_extract_request(
+        state, slot, n_pg * page_size, cfg, page_size=page_size,
+        start_page=start_page,
+    )
+    return jax.device_get(pack)
+
+
+def paged_swap_in(
+    state: PagedDecodeState, pack: Cache, slot, token, length, cfg: ModelConfig,
+    *, page_size: int, shared_pages=None, n_shared=None, reg_mask=None,
+) -> PagedDecodeState:
+    """Device twin of ``paged_swap_out``: remap the kept prefix pages (+1 ref
+    each), scatter the host pack into freshly allocated pages starting at
+    logical page ``n_shared``, and reactivate the slot at position ``length``
+    — exactly ``paged_admit`` with a tail pack (``pack_page0 = n_shared``),
+    so a resumed request is bit-identical to one that never left.  The engine
+    routes swap-ins through its jitted, donated admit; this wrapper is the
+    un-jitted reference transition used by unit tests."""
+    pack = jax.tree.map(jnp.asarray, pack)
+    return paged_admit(
+        state, pack, slot, token, length, cfg, page_size=page_size,
+        shared_pages=shared_pages, n_shared=n_shared, reg_mask=reg_mask,
+        pack_page0=0 if n_shared is None else n_shared,
+    )
 
 
 def gather_prefix_pack(caches: Cache, tables, cfg: ModelConfig) -> Cache:

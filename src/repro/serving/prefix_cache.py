@@ -68,6 +68,7 @@ class PrefixIndex:
         self.page_size = page_size
         self._entries: "OrderedDict[bytes, int]" = OrderedDict()  # hash -> page
         self._pins: Dict[int, int] = {}  # page -> pin count
+        self._swap_pins: Dict[int, List[int]] = {}  # rid -> pages pinned across a swap gap
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -126,6 +127,25 @@ class PrefixIndex:
 
     def pinned(self, page: int) -> bool:
         return self._pins.get(page, 0) > 0
+
+    def swap_pin(self, rid: int, pages: List[int]) -> None:
+        """Pin ``pages`` for the whole swap-out -> swap-in gap of request
+        ``rid`` (idempotent per rid).  A preempted request's prefix-shared
+        pages are held only by the index while it sits on host — the swap
+        dropped its mapping ref instead of copying the bytes — so LRU
+        eviction must not reclaim them before ``swap_in`` remaps them."""
+        if rid in self._swap_pins:
+            return
+        self._swap_pins[rid] = list(pages)
+        self.pin(pages)
+
+    def swap_unpin(self, rid: int) -> None:
+        """Release request ``rid``'s swap-gap pin (no-op when it holds none):
+        called on swap-in and on every abandon/cleanup path so a preempted
+        request can never leak pins."""
+        pages = self._swap_pins.pop(rid, None)
+        if pages:
+            self.unpin(pages)
 
     def evictable(self, cache_only: Callable[[int], bool]) -> int:
         """How many entries could be evicted right now (unpinned and, per the

@@ -1,0 +1,441 @@
+"""Pluggable scheduling policies for the ``DisaggregatedServer``.
+
+The paper's Decode Chips win by keeping memory-bound decode hardware
+saturated at a lower TDP — which makes the *scheduler* (what gets admitted
+when, and what gets evicted under KV pressure) the lever that decides whether
+a smaller decode pool can absorb bursty traffic.  This module extracts all
+scheduling POLICY out of the server into a ``Scheduler`` interface; the
+server keeps only mechanism (prefill batching, the KV handoff, decode
+blocks) and asks the policy three questions per round:
+
+* in what order should the queue be prefilled (``order`` — the head of the
+  queue seeds the next same-bucket prefill batch),
+* in what order should prefilled requests be admitted into decode slots
+  (``admit_order``), and
+* what to do when a request cannot be admitted anywhere (``on_blocked`` —
+  the preemption hook).
+
+Three policies ship:
+
+``FCFSScheduler``
+    Oldest-first, exactly the pre-refactor hardcoded behaviour — the
+    regression anchor.  Token streams (greedy AND sampled) are bit-identical
+    to the old ``DisaggregatedServer``.
+
+``KVAwareScheduler``
+    Orders the queue and the waiting list by reserved-page footprint
+    (cf. Nexus's proactive scheduling): small requests stop head-of-line
+    blocking behind page-hungry ones, cutting queue-wait p50/p99 while
+    total throughput stays put (the same work is done, in a better order).
+    An aging bound (``age_rounds``) promotes any request that has waited too
+    long to strict FIFO, so page-hungry requests cannot starve.
+
+``PriorityScheduler``
+    Per-request ``GenRequest.priority`` (higher = more important; FIFO
+    within a class).  Under admission pressure it preempts the
+    lowest-priority running request via page-level swap
+    (``DecodeEngine.swap_out`` / ``swap_in`` on top of
+    ``kvcache.paged_swap_out`` / ``paged_swap_in``): the victim's private KV
+    pages + resume state are stashed on host, its prefix-shared pages stay
+    in the pool (mapping ref dropped, swap pin held), and it is re-admitted
+    later — bit-identically under greedy sampling — when capacity returns.
+
+Policy state lives entirely on host: the queue, the waiting list, the
+swapped stash, and the wait metrics.  Nothing here touches device state
+except through the engines' donated transitions.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
+
+from .prefix_cache import chunk_hashes
+
+if TYPE_CHECKING:  # engine.py imports this module; keep the cycle type-only
+    from .engine import DecodeEngine, DisaggregatedServer, GenRequest, PrefixMatch
+
+
+@dataclass(eq=False)
+class WaitingEntry:
+    """A prefilled request waiting for a decode slot.
+
+    ``kv`` is the (possibly batched) prefill pack pinned on device until the
+    admit slices row ``batch_index`` out; ``match``/``engine`` carry the
+    prefix-routing decision (a matched request can only be completed by the
+    engine holding its shared pages when the pack is tail-only)."""
+
+    req: "GenRequest"
+    kv: Any
+    batch_index: int
+    first_token: int
+    true_len: int
+    match: Optional["PrefixMatch"]
+    engine: Optional["DecodeEngine"]
+
+
+@dataclass(eq=False)
+class SwappedRequest:
+    """A preempted request's host-side stash (see ``DecodeEngine.swap_out``).
+
+    pack        host (numpy) KV pack of the PRIVATE pages — logical pages
+                [n_keep, ceil(length / page_size)), page-padded
+    length      KV positions written before the swap (prompt + decoded)
+    last_token  resume token: the next decode step consumes it at ``length``
+    n_keep      leading prefix pages left in the pool (mapping ref dropped,
+                bytes kept alive by the index cache hold + a swap pin)
+    kept_pages  their physical page ids (remapped verbatim at swap-in)
+    hashes      the prompt's chunk hashes (re-registration at swap-in)
+    """
+
+    req: "GenRequest"
+    engine: "DecodeEngine"
+    pack: Any
+    length: int
+    last_token: int
+    n_keep: int
+    kept_pages: List[int]
+    hashes: List[bytes]
+
+
+class Scheduler:
+    """Base policy: FCFS semantics, no preemption.
+
+    Subclasses override ``order`` / ``admit_order`` / ``on_blocked`` /
+    ``_may_resume``; the queue/waiting/swapped containers, wait metrics, and
+    the prefill-group mechanics live here so every policy shares them.
+    """
+
+    name = "fcfs"
+
+    def __init__(self):
+        self.queue: List["GenRequest"] = []
+        self.waiting: List[WaitingEntry] = []
+        self.swapped: List[SwappedRequest] = []
+        self.round = 0
+        # submit bookkeeping (dropped per request by ``forget``); the wait
+        # metrics below persist for benchmarks, bounded by requests served —
+        # the same lifetime as the server's ``all_requests``
+        self.submit_round: Dict[int, int] = {}
+        self._submit_seq: Dict[int, int] = {}
+        self._submit_s: Dict[int, float] = {}
+        self._seq = 0
+        self.queue_wait_rounds: Dict[int, int] = {}
+        self.queue_wait_s: Dict[int, float] = {}
+        self.stats = {"preemptions": 0, "swap_ins": 0}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def add(self, req: "GenRequest") -> None:
+        """Queue a validated request (called by ``server.submit``)."""
+        self.queue.append(req)
+        self.submit_round[req.rid] = self.round
+        self._submit_seq[req.rid] = self._seq
+        self._submit_s[req.rid] = time.perf_counter()
+        self._seq += 1
+
+    def note_admitted(self, rid: int) -> None:
+        """Record queue-wait at the FIRST admission (swap re-admits keep the
+        original wait — the request already left the queue once)."""
+        if rid in self.queue_wait_rounds or rid not in self.submit_round:
+            return
+        self.queue_wait_rounds[rid] = self.round - self.submit_round[rid]
+        self.queue_wait_s[rid] = time.perf_counter() - self._submit_s[rid]
+
+    def forget(self, rid: int) -> None:
+        """Drop per-request submit bookkeeping (every exit path funnels into
+        ``server._forget`` which calls this)."""
+        self.submit_round.pop(rid, None)
+        self._submit_seq.pop(rid, None)
+        self._submit_s.pop(rid, None)
+
+    def begin_round(self, server: "DisaggregatedServer") -> None:
+        self.round += 1
+        self.order(server)
+
+    # -- policy hooks -------------------------------------------------------
+
+    def order(self, server: "DisaggregatedServer") -> None:
+        """Reorder ``self.queue`` in place; the head seeds the next prefill
+        group.  FCFS: keep submission order."""
+
+    def admit_order(self, server: "DisaggregatedServer") -> List[WaitingEntry]:
+        """The order in which waiting entries should try admission.  FCFS:
+        prefill-completion (== submission) order."""
+        return list(self.waiting)
+
+    def on_blocked(self, server: "DisaggregatedServer", entry: WaitingEntry) -> bool:
+        """Called when ``entry`` could not be admitted anywhere this round.
+        Return True iff capacity may have been freed (the server retries the
+        admit immediately).  FCFS: never preempts."""
+        return False
+
+    def barrier(self, server: "DisaggregatedServer", entry: WaitingEntry) -> bool:
+        """Whether a still-blocked ``entry`` bars every admission ranked
+        after it this round (capacity drains to it instead of backfilling).
+        FCFS: never — the pre-refactor loop admits anything that fits behind
+        a blocked head, and that behaviour is the regression anchor."""
+        return False
+
+    def _may_resume(self, server: "DisaggregatedServer", sw: SwappedRequest) -> bool:
+        """Policy veto for re-admitting a swapped request this round."""
+        return True
+
+    def try_swap_in(self, server: "DisaggregatedServer") -> None:
+        """Re-admit swapped-out requests (oldest first) when their engine has
+        capacity again; runs before fresh admissions each round."""
+        if not self.swapped:
+            return
+        still = []
+        for sw in self.swapped:
+            if self._may_resume(server, sw) and sw.engine.swap_in(sw) is not None:
+                self.stats["swap_ins"] += 1
+            else:
+                still.append(sw)
+        self.swapped = still
+
+    # -- prefill-group mechanics (policy-independent; the policy only picks
+    # -- the queue ORDER, the group is always the head's bucket-mates) ------
+
+    def match_for(self, server: "DisaggregatedServer", req: "GenRequest"):
+        """KV-cache-aware routing: the decode engine already holding the
+        longest prefix of this prompt (cf. production-stack's router).
+
+        A scan, not a take: chunk hashes are memoized per (request, page
+        size) — prompts are immutable — and index recency is NOT refreshed
+        (``touch=False``); the selected match touches at pin time."""
+        best, best_eng = None, None
+        for d in server.decodes:
+            if not getattr(d, "prefix_cache", False):
+                continue
+            if not d.can_ever_admit(len(req.prompt), req.max_new_tokens):
+                continue
+            hk = (req.rid, d.page_size)
+            if hk not in server._hash_memo:
+                server._hash_memo[hk] = chunk_hashes(
+                    req.prompt, d.page_size, d.pages_per_slot
+                )
+            m = d.match_prefix(req.prompt, hashes=server._hash_memo[hk], touch=False)
+            if m and m.n_shared > 0 and (best is None or m.n_shared > best.n_shared):
+                best, best_eng = m, d
+        return best, best_eng
+
+    def group_key(self, req: "GenRequest", match, eng_d, buckets) -> Tuple:
+        """Prefill-batch compatibility key: same tail bucket, same prefix
+        capacity bucket, same routed decode engine."""
+        from .engine import _bucket  # runtime import: engine imports us first
+
+        if match is None:
+            return (_bucket(len(req.prompt), buckets), None, None)
+        tail = len(req.prompt) - match.n_shared * eng_d.page_size
+        n_pg_b = 1 << max(match.n_shared - 1, 0).bit_length()  # pow2 >= n_shared
+        n_pg_b = min(max(n_pg_b, 1), eng_d.pages_per_slot)
+        return (_bucket(tail, buckets), n_pg_b, id(eng_d))
+
+    def take_group(self, server: "DisaggregatedServer", buckets):
+        """Pop the queue head's group-mates under prefix-aware keys and pin
+        the selected matches until admit.  Returns (group, matches) with
+        matches[i] = (PrefixMatch | None, routed DecodeEngine | None)."""
+        head = self.queue[0]
+        m0, d0 = self.match_for(server, head)
+        want = self.group_key(head, m0, d0, buckets)
+        group, matches, rest = [head], [(m0, d0)], []
+        for r in self.queue[1:]:
+            if len(group) < server.max_prefill_batch:
+                m, d = self.match_for(server, r)
+                if self.group_key(r, m, d, buckets) == want:
+                    group.append(r)
+                    matches.append((m, d))
+                    continue
+            rest.append(r)
+        self.queue = rest
+        for r, (m, d) in zip(group, matches):
+            if m is not None:
+                d.pin_prefix(r.rid, m)
+            # the request leaves the queue: its memoized hashes ride on in
+            # the PrefixMatch (admit registration), the memo entry can go
+            for d2 in server.decodes:
+                server._hash_memo.pop((r.rid, getattr(d2, "page_size", 0)), None)
+        return group, matches
+
+
+class FCFSScheduler(Scheduler):
+    """Oldest-first admission — the pre-refactor behaviour, bit for bit."""
+
+    name = "fcfs"
+
+
+class KVAwareScheduler(Scheduler):
+    """Smallest-reserved-page-footprint first, with an aging bound.
+
+    The footprint is exactly what paged admission will reserve
+    (``DecodeEngine._pages_needed`` minus any shared-prefix pages), so the
+    order matches real KV pressure, not prompt length.  Any request that has
+    waited ``age_rounds`` scheduling rounds is promoted to strict FIFO ahead
+    of every un-aged one — the starvation bound for page-hungry requests.
+    """
+
+    name = "kv-aware"
+
+    def __init__(self, age_rounds: int = 32):
+        super().__init__()
+        self.age_rounds = age_rounds
+
+    def footprint(self, server: "DisaggregatedServer", req: "GenRequest") -> int:
+        """Pages a paged decode engine would reserve for this request (falls
+        back to prompt + max_new positions when no engine is paged)."""
+        d = next((d for d in server.decodes if d.paged), None)
+        if d is None:
+            return len(req.prompt) + req.max_new_tokens
+        return d._pages_needed(len(req.prompt), req.max_new_tokens)
+
+    def _key(self, server, req: "GenRequest", shared: int = 0):
+        waited = self.round - self.submit_round.get(req.rid, self.round)
+        seq = self._submit_seq.get(req.rid, 0)
+        if waited >= self.age_rounds:
+            return (0, seq, 0)  # aged: strict FIFO, ahead of everything
+        return (1, self.footprint(server, req) - shared, seq)
+
+    def order(self, server):
+        self.queue.sort(key=lambda r: self._key(server, r))
+
+    def admit_order(self, server):
+        return sorted(
+            self.waiting,
+            key=lambda e: self._key(
+                server, e.req, e.match.n_shared if e.match is not None else 0
+            ),
+        )
+
+    def barrier(self, server, entry: WaitingEntry) -> bool:
+        """The starvation bound's second half: once a request has AGED, it
+        not only ranks first — while it stays blocked, nothing ranked after
+        it may backfill the capacity it is waiting to accumulate.  Without
+        this, a page-hungry request under a continuous stream of small ones
+        would be first in line forever and admitted never."""
+        waited = self.round - self.submit_round.get(entry.req.rid, self.round)
+        return waited >= self.age_rounds
+
+
+class PriorityScheduler(Scheduler):
+    """Strict priorities (``GenRequest.priority``, higher first; FIFO within
+    a class) with optional page-level preemption.
+
+    ``swap=True``: when a waiting request cannot be admitted anywhere, the
+    lowest-priority STRICTLY-lower running request on a candidate engine is
+    swapped out (``DecodeEngine.swap_out`` — private pages to host, shared
+    pages stay pooled under a swap pin) until the blocked request fits.
+    Swapped requests are re-admitted bit-identically (greedy) once capacity
+    returns and no higher-priority work is pending.  ``max_preemptions_per_
+    round`` bounds swap thrash; ties among victims break latest-submitted
+    first (least sunk work lost, vLLM-style).  ``age_rounds`` bounds
+    starvation the same way KV-aware's bound does: a request blocked that
+    long bars lower-ranked backfilling until the capacity it is waiting on
+    drains to it.
+    """
+
+    name = "priority"
+
+    def __init__(self, swap: bool = True, max_preemptions_per_round: int = 2,
+                 age_rounds: int = 32):
+        super().__init__()
+        self.swap = swap
+        self.max_preemptions_per_round = max_preemptions_per_round
+        self.age_rounds = age_rounds
+        self._budget = max_preemptions_per_round
+
+    def begin_round(self, server):
+        self._budget = self.max_preemptions_per_round
+        super().begin_round(server)
+
+    def order(self, server):
+        self.queue.sort(key=lambda r: -r.priority)  # stable: FIFO per class
+
+    def admit_order(self, server):
+        return sorted(self.waiting, key=lambda e: -e.req.priority)
+
+    def _may_resume(self, server, sw: SwappedRequest) -> bool:
+        # capacity should go to pending higher-priority work first; without
+        # this veto a swap-in could be preempted right back out (thrash)
+        if any(e.req.priority > sw.req.priority for e in self.waiting):
+            return False
+        if any(r.priority > sw.req.priority for r in self.queue):
+            return False
+        return True
+
+    def on_blocked(self, server, entry: WaitingEntry) -> bool:
+        if not self.swap or self._budget <= 0:
+            return False
+        req = entry.req
+        m = entry.match
+        routed = m is not None and m.n_shared > 0
+        if routed:
+            cands = [entry.engine]  # a tail pack only completes on its engine
+        else:
+            cands = [
+                d for d in server.decodes
+                if d.paged and d.can_ever_admit(entry.true_len, req.max_new_tokens)
+            ]
+        for d in cands:
+            ns = m.n_shared if (routed and d is entry.engine) else 0
+            victims = sorted(
+                (r for r in d.requests.values() if r.priority < req.priority),
+                key=lambda r: (r.priority, -self._submit_seq.get(r.rid, r.rid)),
+            )
+            if not victims:
+                continue
+            # feasibility precheck, capped at this round's remaining budget:
+            # preempt ONLY if the victims we are still allowed to evict can
+            # actually produce enough pages.  A victim's prefix-shared pages
+            # survive the swap under an unevictable swap pin, so a partial
+            # or infeasible preemption would strand swapped victims and
+            # deadlock the blocked request against their pins (the victims,
+            # left running, instead finish and free everything naturally).
+            need = d._pages_needed(entry.true_len, req.max_new_tokens) - ns
+            potential = (d.free_pages + d._evictable_pages()
+                         + sum(d.swap_gain(r.rid)
+                               for r in victims[: self._budget]))
+            if potential < need:
+                continue
+            freed = False
+            while (
+                victims
+                and self._budget > 0
+                and not d.can_admit(entry.true_len, req.max_new_tokens, n_shared=ns)
+            ):
+                victim = victims.pop(0)
+                self.swapped.append(d.swap_out(victim.rid))
+                self.stats["preemptions"] += 1
+                self._budget -= 1
+                freed = True
+            if freed and d.can_admit(entry.true_len, req.max_new_tokens, n_shared=ns):
+                return True
+        return False
+
+    def barrier(self, server, entry: WaitingEntry) -> bool:
+        """Starvation bound (same shape as KV-aware's): a request blocked
+        for ``age_rounds`` — e.g. one whose preemption is infeasible and must
+        wait for a natural drain — stops lower-ranked entries from
+        backfilling the capacity it is waiting to accumulate."""
+        waited = self.round - self.submit_round.get(entry.req.rid, self.round)
+        return waited >= self.age_rounds
+
+
+SCHEDULERS = {
+    "fcfs": FCFSScheduler,
+    "kv-aware": KVAwareScheduler,
+    "priority": PriorityScheduler,
+}
+
+
+def make_scheduler(name: str, **kwargs) -> Scheduler:
+    """Build a scheduler by CLI name (``--scheduler {fcfs,kv-aware,priority}``).
+
+    kwargs are forwarded to the policy constructor; ``swap`` is accepted for
+    every policy but only meaningful for ``priority`` (others ignore it)."""
+    if name not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {name!r}; pick from {sorted(SCHEDULERS)}")
+    cls = SCHEDULERS[name]
+    if cls is not PriorityScheduler:
+        kwargs.pop("swap", None)
+    return cls(**kwargs)

@@ -36,8 +36,10 @@ def test_serving_bench_smoke(tmp_path):
     assert sm["shared_prefix"]["kv_new_bytes_per_request"]["saving_frac"] >= SAVING_FLOOR
 
 
-def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0):
-    return {
+def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
+             fcfs_p99=5.0, kv_p99=3.0, sched_mism=0, preemptions=1,
+             high_wait=1, preempt_mism=0, with_sched=True):
+    out = {
         "tokens_per_s": {"slab": 1000.0, "paged": 1000.0 * tps_ratio,
                          "ratio": tps_ratio},
         "decode_s_per_token": {"slab": 1e-4, "paged": 1e-4 * spt_ratio,
@@ -51,6 +53,16 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0):
             "shared_pages_total": 10,
         },
     }
+    if with_sched:
+        out["scheduler"] = {
+            "fcfs": {"queue_wait_rounds": {"p50": 4.0, "p99": fcfs_p99}},
+            "kv_aware": {"queue_wait_rounds": {"p50": 1.5, "p99": kv_p99}},
+            "stream_mismatches": sched_mism,
+            "priority": {"swap": {"preemptions": preemptions,
+                                  "high_wait_rounds": high_wait,
+                                  "preempted_stream_mismatches": preempt_mism}},
+        }
+    return out
 
 
 def test_regression_compare_passes_identical():
@@ -80,6 +92,42 @@ def test_regression_compare_fails_on_throughput_regression():
         (n, ok) for n, ok, _ in compare(_metrics(spt_ratio=1.1 * 1.3), _metrics())
     )
     assert not checks["decode_s_per_token_ratio"]
+
+
+def test_regression_compare_scheduler_gates():
+    # kv-aware must keep strictly beating fcfs on queue-wait p99
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(kv_p99=5.0), _metrics())
+    )
+    assert not checks["sched_kv_aware_p99_improves"]
+    # round math is deterministic: any drift from the committed reference fails
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(kv_p99=2.0), _metrics())
+    )
+    assert not checks["sched_wait_rounds_committed"]
+    assert checks["sched_kv_aware_p99_improves"]  # still an improvement
+    # preempted streams must stay bit-exact; preemption count must not drift
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(preempt_mism=1), _metrics())
+    )
+    assert not checks["sched_preempted_streams_bitexact"]
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(preemptions=0, high_wait=4),
+                                        _metrics())
+    )
+    assert not checks["sched_preemptions_committed"]
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(sched_mism=2), _metrics())
+    )
+    assert not checks["sched_stream_mismatches"]
+
+
+def test_regression_compare_skips_scheduler_for_old_baselines():
+    """A pre-scheduler committed reference must not fail the gate (the fresh
+    run may carry the section; only the reference decides)."""
+    checks = compare(_metrics(), _metrics(with_sched=False))
+    assert all(ok for _, ok, _ in checks)
+    assert not any(n.startswith("sched_") for n, _, _ in checks)
 
 
 def test_regression_compare_fails_on_kv_accounting_drift():

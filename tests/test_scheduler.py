@@ -1,0 +1,707 @@
+"""Pluggable scheduler subsystem: FCFS bit-equivalence with the pre-refactor
+server loop, KV-aware ordering + the aging starvation bound, priority
+preemption via page-level swap, and the swap-out -> swap-in bit-identity
+invariants (plain, prefix-shared, and fork-shared pages).
+
+The FCFS anchor works two ways: ``LegacyServer`` below is a frozen copy of
+the pre-refactor ``DisaggregatedServer.run_round`` scheduling loop (oldest-
+first grouping, FIFO opportunistic admission), so the refactored server with
+``FCFSScheduler`` must reproduce its token streams bit for bit — greedy AND
+sampled, slab AND paged; and the default (no ``scheduler`` argument) must be
+FCFS.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    FCFSScheduler,
+    GenRequest,
+    KVAwareScheduler,
+    PrefillEngine,
+    PriorityScheduler,
+    SamplingParams,
+    SchedulerExhausted,
+    make_scheduler,
+)
+from repro.serving import kvcache
+from repro.serving.engine import _bucket
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=6, lo=5, hi=40, base=0, priority=0):
+    rng = np.random.default_rng(seed)
+    return [
+        GenRequest(base + i,
+                   rng.integers(0, cfg.vocab_size, size=int(rng.integers(lo, hi))),
+                   max_new_tokens=max_new, priority=priority)
+        for i in range(n)
+    ]
+
+
+def _shared_requests(cfg, n, base=0, prefix_len=32, max_new=8, seed=0):
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, cfg.vocab_size, size=prefix_len)
+    tails = np.random.default_rng(seed + base + 1)
+    return [
+        GenRequest(base + i,
+                   np.concatenate([common, tails.integers(0, cfg.vocab_size,
+                                                          size=int(tails.integers(4, 16)))]),
+                   max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _server(params, cfg, *, scheduler=None, paged=True, max_slots=4, max_len=128,
+            n_pages=None, decode_block=4, temperature=0.0, prefix=False,
+            max_prefill_batch=4, seed=0):
+    sp = SamplingParams(temperature=temperature)
+    return DisaggregatedServer(
+        [PrefillEngine(params, cfg, sp)],
+        [DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
+                      sampling=sp, decode_block=decode_block, paged=paged,
+                      page_size=PAGE, n_pages=n_pages, prefix_cache=prefix,
+                      seed=seed)],
+        seed=seed, max_prefill_batch=max_prefill_batch, scheduler=scheduler,
+    )
+
+
+# ---------------------------------------------------------------------------
+# FCFS bit-equivalence vs the pre-refactor scheduling loop
+# ---------------------------------------------------------------------------
+
+
+class LegacyServer:
+    """Frozen pre-refactor scheduling loop (PR 1-3 ``run_round``, minus the
+    prefix-cache routing which no test here enables): oldest request seeds a
+    same-bucket prefill group, waiting requests admit FIFO-with-skip into the
+    engine with most free slots, one fused decode block per engine."""
+
+    def __init__(self, prefills, decodes, seed=0, max_prefill_batch=4):
+        self.prefills, self.decodes = prefills, decodes
+        self.key = jax.random.PRNGKey(seed)
+        self.max_prefill_batch = max_prefill_batch
+        self.queue, self.waiting = [], []
+        self.all_requests = {}
+        self._rr = 0
+
+    def submit(self, req):
+        self.queue.append(req)
+        self.all_requests[req.rid] = req
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def run(self, max_steps=10_000):
+        steps = 0
+        while (self.queue or self.waiting
+               or any(d.requests for d in self.decodes)) and steps < max_steps:
+            steps += 1
+            free_slots = sum(d.max_slots - d.slots.n_active for d in self.decodes)
+            if self.queue and len(self.waiting) < max(free_slots, 1):
+                eng = self.prefills[self._rr % len(self.prefills)]
+                self._rr += 1
+                want = _bucket(len(self.queue[0].prompt), eng.buckets)
+                group, rest = [], []
+                for r in self.queue:
+                    if (len(group) < self.max_prefill_batch
+                            and _bucket(len(r.prompt), eng.buckets) == want):
+                        group.append(r)
+                    else:
+                        rest.append(r)
+                self.queue = rest
+                toks, kvb, tls = eng.prefill_batch(
+                    group, self._next_key(), pad_to=self.max_prefill_batch
+                )
+                for i, req in enumerate(group):
+                    self.waiting.append((req, kvb, i, toks[i], tls[i]))
+            still = []
+            for req, kvb, bi, tok, tl in self.waiting:
+                cands = [d for d in self.decodes
+                         if d.can_admit(tl, req.max_new_tokens)]
+                if cands:
+                    dec = max(cands, key=lambda d: d.max_slots - d.slots.n_active)
+                    dec.admit(req, kvb, tok, tl, batch_index=bi)
+                else:
+                    still.append((req, kvb, bi, tok, tl))
+            self.waiting = still
+            for dec in self.decodes:
+                dec.step_block()
+        return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
+
+
+@pytest.mark.parametrize("paged,temperature", [
+    (False, 0.0), (False, 0.8), (True, 0.0), (True, 0.8),
+])
+def test_fcfs_matches_pre_refactor_loop(setup, paged, temperature):
+    """The tentpole anchor: FCFSScheduler streams are bit-identical to the
+    pre-refactor hardcoded loop — greedy + sampled, slab + paged."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=temperature)
+
+    def engines():
+        return ([PrefillEngine(params, cfg, sp)],
+                [DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                              decode_block=4, paged=paged, page_size=PAGE, seed=0)])
+
+    legacy = LegacyServer(*engines(), seed=0, max_prefill_batch=4)
+    for r in _requests(cfg, 8, seed=3):
+        legacy.submit(r)
+    want = legacy.run()
+
+    pre, dec = engines()
+    srv = DisaggregatedServer(pre, dec, seed=0, max_prefill_batch=4,
+                              scheduler=FCFSScheduler())
+    for r in _requests(cfg, 8, seed=3):
+        srv.submit(r)
+    got = srv.run()
+    assert got == want
+
+
+def test_default_scheduler_is_fcfs(setup):
+    cfg, params = setup
+    srv = _server(params, cfg)
+    assert isinstance(srv.scheduler, FCFSScheduler)
+    assert srv.scheduler.name == "fcfs"
+    # the queue/waiting introspection surface still works through the policy
+    srv.submit(_requests(cfg, 1, seed=1)[0])
+    assert len(srv.queue) == 1
+
+
+def test_make_scheduler():
+    assert isinstance(make_scheduler("fcfs"), FCFSScheduler)
+    assert isinstance(make_scheduler("kv-aware"), KVAwareScheduler)
+    p = make_scheduler("priority", swap=False)
+    assert isinstance(p, PriorityScheduler) and not p.swap
+    assert not hasattr(make_scheduler("kv-aware", swap=True), "swap")  # ignored
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("sjf")
+
+
+def test_greedy_streams_policy_invariant(setup):
+    """Greedy token VALUES depend only on each request's own prompt/KV, so
+    every policy must produce the same streams (only the order differs)."""
+    cfg, params = setup
+    outs = []
+    for name in ("fcfs", "kv-aware", "priority"):
+        srv = _server(params, cfg, scheduler=make_scheduler(name))
+        for r in _requests(cfg, 7, seed=4, max_new=5):
+            srv.submit(r)
+        outs.append(srv.run())
+    assert outs[0] == outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# KV-aware ordering: head-of-line blocking + the aging starvation bound
+# ---------------------------------------------------------------------------
+
+
+def _mixed_trace(cfg):
+    """2 page-hungry requests submitted FIRST (8 pages each on a 16-page
+    pool), then 14 short ones (2 pages each): under FCFS the shorts queue
+    behind the longs; KV-aware runs the shorts first."""
+    rng = np.random.default_rng(21)
+    longs = [GenRequest(i, rng.integers(0, cfg.vocab_size, size=90),
+                        max_new_tokens=24) for i in range(2)]
+    shorts = [GenRequest(2 + i,
+                         rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 13))),
+                         max_new_tokens=8) for i in range(14)]
+    return longs + shorts
+
+
+@pytest.mark.slow
+def test_kv_aware_cuts_queue_wait(setup):
+    """On the mixed-length trace the KV-aware policy strictly reduces
+    queue-wait p50 AND p99 vs FCFS while completing the same work in the
+    same number of scheduling rounds (throughput preserved)."""
+    cfg, params = setup
+    stats = {}
+    streams = {}
+    for name in ("fcfs", "kv-aware"):
+        sched = make_scheduler(name)
+        srv = _server(params, cfg, scheduler=sched, max_slots=8, n_pages=16,
+                      decode_block=8, max_prefill_batch=8)
+        reqs = _mixed_trace(cfg)
+        for r in reqs:
+            srv.submit(r)
+        streams[name] = srv.run()
+        waits = [sched.queue_wait_rounds[r.rid] for r in reqs]
+        stats[name] = (np.percentile(waits, 50), np.percentile(waits, 99),
+                       sched.round)
+    assert streams["fcfs"] == streams["kv-aware"]  # greedy: same tokens
+    assert stats["kv-aware"][0] < stats["fcfs"][0]  # p50
+    assert stats["kv-aware"][1] < stats["fcfs"][1]  # p99
+    # same work, same rounds: ordering must not cost throughput
+    assert stats["kv-aware"][2] <= stats["fcfs"][2] + 1
+
+
+def test_kv_aware_aging_bound(setup):
+    """A page-hungry request under a CONTINUOUS stream of small ones is
+    admitted within the aging bound: once aged it ranks first and bars
+    backfilling, so the pool drains to it instead of starving it."""
+    cfg, params = setup
+    age = 4
+    sched = KVAwareScheduler(age_rounds=age)
+    srv = _server(params, cfg, scheduler=sched, max_slots=4, n_pages=4,
+                  decode_block=4)
+    big = GenRequest(1000, np.random.default_rng(8).integers(
+        0, cfg.vocab_size, size=40), max_new_tokens=8)  # needs the whole pool
+    srv.submit(big)
+    rid = 0
+    for _ in range(3 * age):
+        for r in _requests(cfg, 2, seed=rid, max_new=4, lo=5, hi=8, base=rid):
+            srv.submit(r)  # 1-page requests, 2 fresh ones per round
+            rid += 2
+        srv.run_round()
+        if big.rid in sched.queue_wait_rounds:
+            break
+    assert big.rid in sched.queue_wait_rounds, "page-hungry request starved"
+    # admitted within the aging bound plus the drain time of the in-flight
+    # small requests (their decode blocks) and one prefill round
+    assert sched.queue_wait_rounds[big.rid] <= age + 4
+    srv.run()
+    assert big.done and len(big.tokens) == 8
+
+
+# ---------------------------------------------------------------------------
+# Page-level swap: out -> in round trips are bit-identical (greedy)
+# ---------------------------------------------------------------------------
+
+
+def _drive(eng):
+    while eng.requests:
+        eng.step_block()
+
+
+def test_swap_roundtrip_stream_bitident(setup):
+    """Swap a mid-flight request out, idle some blocks, swap it back in: the
+    completed stream equals an uninterrupted run of the same seed."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    key = jax.random.PRNGKey(0)
+    prompt = np.random.default_rng(7).integers(0, cfg.vocab_size, size=37)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                            decode_block=4, paged=True, page_size=PAGE)
+
+    r_ref = GenRequest(0, prompt, max_new_tokens=12)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r_ref, key)
+    eng.admit(r_ref, kv, tok, tl)
+    _drive(eng)
+
+    r = GenRequest(1, prompt, max_new_tokens=12)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r, key)
+    eng.admit(r, kv, tok, tl)
+    eng.step_block()
+    sw = eng.swap_out(1)
+    assert eng.slots.n_active == 0 and not eng.requests
+    # everything released: no host pack can leak device pages
+    assert bool(jnp.all(eng.state.page_refs == 0))
+    assert eng.free_pages == eng.n_pages
+    eng.step_block()  # idle blocks advance the engine PRNG; greedy ignores it
+    assert eng.swap_in(sw) is not None
+    _drive(eng)
+    assert r.tokens == r_ref.tokens
+    assert eng.stats["swap_outs"] == 1 and eng.stats["swap_ins"] == 1
+
+
+@pytest.mark.slow
+def test_swap_roundtrip_hybrid(setup):
+    """Hybrid mamba/attn swap: the per-slot SSM state (a whole-prompt
+    function, never paged) must ride the host pack out and back in."""
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    key = jax.random.PRNGKey(0)
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab_size, size=30)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                            decode_block=4, paged=True, page_size=PAGE)
+
+    r_ref = GenRequest(0, prompt, max_new_tokens=10)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r_ref, key)
+    eng.admit(r_ref, kv, tok, tl)
+    _drive(eng)
+
+    r = GenRequest(1, prompt, max_new_tokens=10)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r, key)
+    eng.admit(r, kv, tok, tl)
+    eng.step_block()
+    sw = eng.swap_out(1)
+    eng.step_block()
+    assert eng.swap_in(sw) is not None
+    _drive(eng)
+    assert r.tokens == r_ref.tokens
+
+
+def test_swap_in_reservation_matches_uninterrupted(setup):
+    """Off-by-one regression: the resumed reservation must equal the
+    uninterrupted run's total — the re-consumed last token's KV is still
+    unwritten (like first_token at a fresh admit), so dropping it from the
+    budget would under-reserve one position.  Worst case: prompt + max_new
+    + decode_block - 2 ≡ 1 (mod page_size), where one position is one page
+    and the overshoot write would allocate outside any reservation."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    # 10 + 21 + 4 - 2 = 33 = 2 * PAGE + 1 -> 3 pages, the boundary case
+    prompt = np.random.default_rng(2).integers(0, cfg.vocab_size, size=10)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                            decode_block=4, paged=True, page_size=PAGE)
+
+    r_ref = GenRequest(0, prompt, max_new_tokens=21)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r_ref, jax.random.PRNGKey(0))
+    slot = eng.admit(r_ref, kv, tok, tl)
+    full_need = eng._pages_needed(tl, 21)
+    assert full_need == 3
+    assert eng._reserved[slot] == full_need
+    _drive(eng)
+
+    r = GenRequest(1, prompt, max_new_tokens=21)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r, jax.random.PRNGKey(0))
+    eng.admit(r, kv, tok, tl)
+    eng.step_block()
+    sw = eng.swap_out(1)
+    slot = eng.swap_in(sw)
+    assert slot is not None
+    # reserved (new pages + growth) + kept prefix pages == the original total
+    assert eng._reserved[slot] + sw.n_keep == full_need
+    _drive(eng)
+    assert r.tokens == r_ref.tokens
+
+
+def test_swap_out_requires_paged_and_live(setup):
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    slab = DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp)
+    with pytest.raises(ValueError, match="paged"):
+        slab.swap_out(0)
+    paged = DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                         paged=True, page_size=PAGE)
+    with pytest.raises(KeyError, match="not decoding"):
+        paged.swap_out(42)
+
+
+def test_swap_prefix_shared_drops_ref_not_bytes(setup):
+    """Swapping a request whose prefix pages are index-shared must NOT copy
+    those pages: the mapping ref is dropped (decrement-only), the bytes stay
+    pooled under a swap pin, and swap-in remaps them — streams of both the
+    swapped request and its co-holder stay bit-identical."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    key = jax.random.PRNGKey(0)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                            decode_block=4, paged=True, page_size=PAGE,
+                            prefix_cache=True)
+
+    def pair():
+        return _shared_requests(cfg, 2, prefix_len=32, max_new=10, seed=11)
+
+    ra, rb = pair()
+    eng = fresh()
+    for r in (ra, rb):
+        tok, kv, tl = pre.prefill(r, key)
+        eng.admit(r, kv, tok, tl)
+    _drive(eng)
+    ref_a, ref_b = list(ra.tokens), list(rb.tokens)
+
+    ra2, rb2 = pair()
+    eng = fresh()
+    for r in (ra2, rb2):
+        tok, kv, tl = pre.prefill(r, key)
+        eng.admit(r, kv, tok, tl)
+    eng.step_block()
+    sw = eng.swap_out(rb2.rid)
+    # the 32-token shared prefix = 2 pages: kept in the pool, not copied
+    assert sw.n_keep == 2 and len(sw.kept_pages) == 2
+    refs = np.asarray(eng.state.page_refs)
+    for p in sw.kept_pages:
+        assert refs[p] == 2  # co-holder slot + index cache hold; rb's ref dropped
+        assert eng.prefix.pinned(p)  # swap pin bridges the gap
+    # the host pack holds ONLY the private tail pages (page-padded)
+    n_total = -(-sw.length // PAGE)
+    for leaf in jax.tree.leaves(sw.pack):
+        if leaf.ndim >= 3 and leaf.shape[1] == 1:  # attn leaves [R, 1, L, ...]
+            assert leaf.shape[2] == (n_total - sw.n_keep) * PAGE
+    # LRU eviction under pressure must skip the pinned swap pages
+    assert eng.prefix.evict_one(lambda p: p in sw.kept_pages) is None
+    eng.step_block()
+    assert eng.swap_in(sw) is not None
+    for p in sw.kept_pages:
+        assert not eng.prefix.pinned(p)  # unpinned after remap
+    refs = np.asarray(eng.state.page_refs)
+    for p in sw.kept_pages:
+        assert refs[p] == 3  # both slots + cache hold again
+    _drive(eng)
+    assert ra2.tokens == ref_a
+    assert rb2.tokens == ref_b
+
+
+def test_swap_shared_fork_pages_regression(setup):
+    """The satellite bugfix, fork flavour: extracting/preempting a request
+    whose pages have refs > 1 through a fork must decrement the mapping ref,
+    not free the pages — the fork keeps decoding bit-identically and the
+    preempted branch resumes bit-identically."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    key = jax.random.PRNGKey(0)
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab_size, size=37)
+
+    def fresh():
+        return DecodeEngine(params, cfg, max_slots=3, max_len=128, sampling=sp,
+                            decode_block=4, paged=True, page_size=PAGE)
+
+    # reference: original runs alone to completion
+    r_ref = GenRequest(0, prompt, max_new_tokens=12)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r_ref, key)
+    eng.admit(r_ref, kv, tok, tl)
+    _drive(eng)
+
+    r1 = GenRequest(1, prompt, max_new_tokens=12)
+    eng = fresh()
+    tok, kv, tl = pre.prefill(r1, key)
+    eng.admit(r1, kv, tok, tl)
+    eng.step_block()
+    alt = int((r_ref.tokens[4] + 1) % cfg.vocab_size)
+    r2 = GenRequest(2, prompt, max_new_tokens=12)
+    assert eng.fork(r2, src_rid=1, token=alt) is not None
+    # preempt the ORIGINAL while its pages are shared with the fork
+    sw = eng.swap_out(1)
+    refs = np.asarray(eng.state.page_refs)
+    fork_slot = eng.slots.request_ids.index(2)
+    fork_pages = [int(p) for p in np.asarray(eng.state.block_tables[fork_slot])
+                  if p < eng.n_pages]
+    assert fork_pages and all(refs[p] >= 1 for p in fork_pages)  # bytes survive
+    _drive(eng)  # fork finishes alone
+    assert r2.tokens[:4] == r_ref.tokens[:4] and r2.tokens[4] == alt
+    assert eng.swap_in(sw) is not None
+    _drive(eng)
+    assert r1.tokens == r_ref.tokens
+    assert bool(jnp.all(eng.state.page_refs == 0))  # no leaked refs either way
+
+
+def test_paged_extract_start_page_matches_tail(setup):
+    """The extract fix: ``start_page`` returns exactly the tail slice of the
+    full extraction (shared leading pages skipped, bytes identical)."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE)
+    r = _requests(cfg, 1, seed=9, max_new=8, lo=36, hi=37)[0]
+    tok, kv, tl = pre.prefill(r, jax.random.PRNGKey(0))
+    slot = eng.admit(r, kv, tok, tl)
+    eng.step_block()
+    length = eng.slots.lengths[slot]
+    full = kvcache.paged_extract_request(eng.state, slot, length, cfg,
+                                         page_size=PAGE)
+    tail = kvcache.paged_extract_request(eng.state, slot, length, cfg,
+                                         page_size=PAGE, start_page=1)
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        for f, t in zip(jax.tree.leaves(full[i]), jax.tree.leaves(tail[i])):
+            if mixer == "attn":
+                np.testing.assert_array_equal(np.asarray(f[:, :, PAGE:]),
+                                              np.asarray(t))
+            else:
+                np.testing.assert_array_equal(np.asarray(f), np.asarray(t))
+
+
+def test_paged_swap_in_reference_transition(setup):
+    """The un-jitted kvcache.paged_swap_in reference reproduces the engine's
+    jitted swap-in admit: same block-table mapping, same pack bytes."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.0)
+    pre = PrefillEngine(params, cfg, sp)
+    eng = DecodeEngine(params, cfg, max_slots=2, max_len=128, sampling=sp,
+                       decode_block=4, paged=True, page_size=PAGE)
+    r = _requests(cfg, 1, seed=10, max_new=8, lo=20, hi=21)[0]
+    tok, kv, tl = pre.prefill(r, jax.random.PRNGKey(0))
+    eng.admit(r, kv, tok, tl)
+    eng.step_block()
+    sw = eng.swap_out(r.rid)
+    st = kvcache.paged_swap_in(
+        eng.state, sw.pack, 0, sw.last_token, sw.length, cfg, page_size=PAGE
+    )
+    assert bool(st.active[0]) and int(st.positions[0]) == sw.length
+    back = kvcache.paged_extract_request(st, 0, sw.length, cfg, page_size=PAGE)
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer != "attn":
+            continue
+        for a, b in zip(jax.tree.leaves(back[i]), jax.tree.leaves(sw.pack[i])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b[:, :, :sw.length]))
+
+
+# ---------------------------------------------------------------------------
+# Priority scheduling: preemption end-to-end through the server
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_priority_preemption_end_to_end(setup):
+    """Low-priority requests fill the pool; a late high-priority request
+    preempts one via swap, runs promptly, and the preempted request resumes
+    and completes BIT-identically to an uninterrupted run."""
+    cfg, params = setup
+
+    def lows():
+        return _requests(cfg, 5, seed=5, max_new=24, lo=10, hi=11)
+
+    ref_srv = _server(params, cfg, max_slots=8, n_pages=16, decode_block=8,
+                      max_prefill_batch=8)
+    ref = lows()
+    for r in ref:
+        ref_srv.submit(r)
+    ref_srv.run()
+
+    def run_with(swap):
+        sched = PriorityScheduler(swap=swap)
+        srv = _server(params, cfg, scheduler=sched, max_slots=8, n_pages=16,
+                      decode_block=8, max_prefill_batch=8)
+        ls = lows()
+        for r in ls:
+            srv.submit(r)
+        srv.run_round()
+        srv.run_round()  # lows are now decoding, pool is nearly full
+        high = GenRequest(100, np.random.default_rng(6).integers(
+            0, cfg.vocab_size, size=40), max_new_tokens=16, priority=1)
+        srv.submit(high)
+        out = srv.run()
+        return sched, ls, high, out
+
+    sched, ls, high, out = run_with(swap=True)
+    assert len(out) == 6
+    assert sched.stats["preemptions"] >= 1
+    assert sched.stats["swap_ins"] == sched.stats["preemptions"]
+    assert not sched.swapped  # everything resumed
+    wait_swap = sched.queue_wait_rounds[100]
+    # preempted lows finish bit-identically to the uninterrupted run
+    for got, want in zip(ls, ref):
+        assert got.tokens == want.tokens
+    assert len(high.tokens) == 16
+
+    # without swap there is no preemption and the high request waits longer
+    sched_ns, ls_ns, high_ns, out_ns = run_with(swap=False)
+    assert len(out_ns) == 6
+    assert sched_ns.stats["preemptions"] == 0
+    assert sched_ns.queue_wait_rounds[100] > wait_swap
+    for got, want in zip(ls_ns, ref):
+        assert got.tokens == want.tokens
+
+
+def test_priority_infeasible_preemption_skipped(setup):
+    """Deadlock regression: preempting victims whose prefix pages survive
+    under unevictable swap pins can NEVER free enough capacity for a big
+    high-priority request — the policy must skip the preemption entirely
+    (the victims then finish naturally, their cache-held pages become
+    evictable, and the big request admits) instead of livelocking the
+    request against its own victims' pins."""
+    cfg, params = setup
+    sched = PriorityScheduler(swap=True)
+    # 17-page pool, 256-position slots: A+B (shared 2-page prefix) hold 4
+    # pages + 2 growth; H needs 16 pages.  Swapping A and B would free only
+    # their sole-held pages (their 2 shared pages stay swap-pinned), leaving
+    # 15 < 16 forever — infeasible, so no preemption may happen.
+    srv = _server(params, cfg, scheduler=sched, prefix=True, max_slots=4,
+                  max_len=256, n_pages=17, decode_block=4)
+    a, b = _shared_requests(cfg, 2, prefix_len=32, max_new=16, seed=11)
+    for r in (a, b):
+        r.prompt = r.prompt[:40]  # 40 tokens: 2 shared pages + 1 private
+        srv.submit(r)
+    srv.run_round()
+    srv.run_round()  # A and B are decoding
+    high = GenRequest(100, np.random.default_rng(4).integers(
+        0, cfg.vocab_size, size=220), max_new_tokens=24, priority=1)
+    srv.submit(high)
+    out = srv.run()  # must complete, not SchedulerExhausted
+    assert len(out) == 3
+    assert sched.stats["preemptions"] == 0  # infeasible preemption skipped
+    assert high.done and len(high.tokens) == 24
+    assert a.done and b.done
+
+
+def test_priority_orders_queue(setup):
+    """Higher priority admits first even when submitted last (no preemption
+    needed — just ordering)."""
+    cfg, params = setup
+    sched = PriorityScheduler(swap=False)
+    srv = _server(params, cfg, scheduler=sched, max_slots=2, n_pages=8)
+    reqs = _requests(cfg, 4, seed=12, max_new=4, lo=20, hi=30)
+    reqs[-1].priority = 5
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    waits = {r.rid: sched.queue_wait_rounds[r.rid] for r in reqs}
+    assert waits[reqs[-1].rid] <= min(waits[r.rid] for r in reqs[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Host-side bookkeeping hygiene: the churn loop (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_churn_no_host_leaks(setup):
+    """Waves of shared-prefix + preempting requests, interrupted by
+    SchedulerExhausted resumes: after the final drain every host-side
+    bookkeeping structure is empty — no leaked hash memos, prefix pins, swap
+    pins, or stashes — and device refcounts equal the index holds."""
+    cfg, params = setup
+    sched = PriorityScheduler(swap=True)
+    srv = _server(params, cfg, scheduler=sched, prefix=True, max_slots=4,
+                  n_pages=20, decode_block=4)
+    eng = srv.decodes[0]
+    for wave in range(4):
+        for r in _shared_requests(cfg, 3, base=wave * 100, max_new=8,
+                                  seed=3 + wave % 2):
+            srv.submit(r)
+        if wave % 2:
+            hp = GenRequest(wave * 100 + 50, np.random.default_rng(wave).integers(
+                0, cfg.vocab_size, size=40), max_new_tokens=6, priority=1)
+            srv.submit(hp)
+        try:
+            srv.run(max_steps=2)  # interrupt mid-flight...
+        except SchedulerExhausted:
+            pass
+        srv.run()  # ...and resume to drain
+    assert srv._hash_memo == {}
+    assert eng._pins == {}
+    assert eng.prefix._pins == {}
+    assert eng.prefix._swap_pins == {}
+    assert not sched.swapped and not sched.waiting and not sched.queue
+    assert sched.submit_round == {}
+    # device truth: only index cache holds remain
+    refs = np.asarray(eng.state.page_refs)
+    assert int((refs > 0).sum()) == len(eng.prefix)
+    assert all(refs[p] == 1 for p in eng.prefix.pages())
+    assert eng._reserved == [0] * eng.max_slots
