@@ -140,6 +140,42 @@ def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple
             f"high_wait={f_pr.get('high_wait_rounds')} vs committed "
             f"{r_pr.get('preemptions')}/{r_pr.get('high_wait_rounds')}",
         )
+
+    # chunked prefill (when the committed reference carries the section):
+    # stream equivalence and the TTFT win are re-proven fresh; the call/round
+    # shape of the schedule is deterministic and compared exactly
+    r_ck = reference.get("chunked_prefill")
+    if r_ck is not None:
+        f_ck = fresh.get("chunked_prefill", {})
+        cmm = f_ck.get("stream_mismatches", -1)
+        add("chunked_stream_mismatches", cmm == 0, f"{cmm} (acceptance: 0)")
+        f_ratio = f_ck.get("short_ttft_ratio", 1e9)
+        r_ratio = r_ck.get("short_ttft_ratio", 1.0)
+        add(
+            "chunked_short_ttft_improves",
+            f_ratio < 1.0,
+            f"chunked/monolithic short TTFT {f_ratio:.3f} fresh, "
+            f"{r_ratio:.3f} committed (acceptance: < 1.0 — shorts wait for "
+            f"one chunk, not the whole long prefill; the wall ratio itself "
+            f"is too machine-noisy for a committed band, so the hard gate "
+            f"is the improvement plus the exact schedule shape below)",
+        )
+
+        def shape(d: dict, mode: str) -> tuple:
+            m = d.get(mode, {})
+            return (m.get("max_prefill_call_tokens"), m.get("chunk_calls"),
+                    m.get("long_ttft_rounds"), m.get("short_ttft_rounds"),
+                    m.get("rounds"))
+
+        add(
+            "chunked_schedule_committed",
+            shape(f_ck, "monolithic") == shape(r_ck, "monolithic")
+            and shape(f_ck, "chunked") == shape(r_ck, "chunked"),
+            f"fresh mono {shape(f_ck, 'monolithic')} / chunked "
+            f"{shape(f_ck, 'chunked')} vs committed "
+            f"{shape(r_ck, 'monolithic')} / {shape(r_ck, 'chunked')} — "
+            f"call sizes and round counts are deterministic",
+        )
     return checks
 
 

@@ -68,6 +68,9 @@ MAX_NEW = 8 if FAST else 24
 N_REQUESTS = 8 if FAST else 16
 SCHED_SLOTS = 8   # scheduler-policy trace: slots are plentiful,
 SCHED_POOL = 16   # pages are the binding limit (2 page-hungry reqs fill it)
+CHUNK_TOKENS = 64   # chunked-prefill section: one "8k-prompt-shaped" long
+CHUNK_LONG = 256    # request (4 chunks) ahead of a burst of shorts
+CHUNK_MAX_LEN = 512
 
 
 def _requests(cfg, n, max_new=None, seed=0):
@@ -417,6 +420,78 @@ def _sched_metrics(params, cfg, waves=1):
     }
 
 
+def _chunked_trace(cfg, base=0):
+    """One long prompt submitted FIRST, then a burst of shorts: the
+    head-of-line shape chunked prefill exists for.  (The reduced-CPU stand-in
+    for 'short requests queued behind one 8k prompt': 256 tokens vs ~10.)"""
+    rng = np.random.default_rng(31)
+    longr = GenRequest(base, rng.integers(0, cfg.vocab_size, size=CHUNK_LONG),
+                       max_new_tokens=8)
+    shorts = [
+        GenRequest(base + 1 + i,
+                   rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 13))),
+                   max_new_tokens=8)
+        for i in range(6)
+    ]
+    return [longr] + shorts
+
+
+def _chunked_run(params, cfg, chunk):
+    """Run the head-of-line trace under one prefill mode (compile-warmed);
+    returns TTFT per request in wall seconds AND deterministic scheduling
+    rounds, plus the prefill-call observability the gate pins (the largest
+    single prefill dispatch = the head-of-line compute quantum)."""
+    pre = PrefillEngine(params, cfg, bucketed=True, chunk_tokens=chunk)
+    dec = DecodeEngine(params, cfg, max_slots=8, max_len=CHUNK_MAX_LEN,
+                       decode_block=DECODE_BLOCK, paged=True, page_size=PAGE_SIZE)
+    srv = DisaggregatedServer([pre], [dec], max_prefill_batch=8)
+    for r in _chunked_trace(cfg, base=10_000):  # warm every compile shape
+        srv.submit(r)
+    srv.run()
+    pre.stats.update(calls=0, max_call_tokens=0, chunk_calls=0)
+    reqs = _chunked_trace(cfg)
+    ttft_wall, ttft_round, rounds = {}, {}, 0
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.submit(r)
+    while srv.pending():
+        rounds += 1
+        srv.run_round()
+        now = time.perf_counter() - t0
+        for r in reqs:
+            if r.tokens and r.rid not in ttft_wall:
+                ttft_wall[r.rid] = now
+                ttft_round[r.rid] = rounds
+    short_ids = [r.rid for r in reqs[1:]]
+    return {
+        "short_ttft_wall_s": float(np.mean([ttft_wall[i] for i in short_ids])),
+        "short_ttft_rounds": float(np.mean([ttft_round[i] for i in short_ids])),
+        "long_ttft_rounds": int(ttft_round[reqs[0].rid]),
+        "max_prefill_call_tokens": int(pre.stats["max_call_tokens"]),
+        "chunk_calls": int(pre.stats["chunk_calls"]),
+        "rounds": int(rounds),
+    }, {r.rid: list(r.tokens) for r in reqs}
+
+
+def _chunked_metrics(params, cfg):
+    """Chunked vs monolithic prefill on the head-of-line trace: short-request
+    TTFT (wall) must IMPROVE — shorts wait for one 64-token chunk instead of
+    the whole 256-token prefill + its decode block — while every greedy
+    stream stays bit-identical.  Round/call metrics are deterministic and
+    compared exactly by check_regression."""
+    mono, mono_streams = _chunked_run(params, cfg, None)
+    ch, ch_streams = _chunked_run(params, cfg, CHUNK_TOKENS)
+    mism = int(sum(mono_streams[r] != ch_streams[r] for r in mono_streams))
+    return {
+        "trace": {"long_prompt_tokens": CHUNK_LONG, "chunk_tokens": CHUNK_TOKENS,
+                  "shorts": 6},
+        "monolithic": mono,
+        "chunked": ch,
+        "short_ttft_ratio": ch["short_ttft_wall_s"] / mono["short_ttft_wall_s"],
+        "stream_mismatches": mism,
+    }
+
+
 def _smoke_metrics(params, cfg):
     """The seconds-scale equivalence slice (also embedded in the full run as
     the committed ``smoke_reference`` for benchmarks/check_regression.py)."""
@@ -447,6 +522,7 @@ def _smoke_metrics(params, cfg):
             "shared_pages_total": int(shared_total),
         },
         "scheduler": _sched_metrics(params, cfg),
+        "chunked_prefill": _chunked_metrics(params, cfg),
     }
 
 
@@ -490,6 +566,15 @@ def main(argv=None) -> None:
         b.row("smoke_preempted_stream_mismatches",
               sc["priority"]["swap"]["preempted_stream_mismatches"],
               "acceptance: 0")
+        ck = sm["chunked_prefill"]
+        b.row("smoke_chunked_stream_mismatches", ck["stream_mismatches"],
+              "acceptance: 0 (chunked == monolithic, bit for bit)")
+        b.row("smoke_chunked_short_ttft_ratio", ck["short_ttft_ratio"],
+              "acceptance: < 1.0 (shorts wait for one chunk, not the "
+              "whole long prefill)")
+        b.row("smoke_chunked_max_prefill_call",
+              ck["chunked"]["max_prefill_call_tokens"],
+              f"vs {ck['monolithic']['max_prefill_call_tokens']} monolithic")
         b.dump()
         if args.json:
             with open(args.json, "w") as f:
@@ -505,6 +590,10 @@ def main(argv=None) -> None:
         assert sc["priority"]["swap"]["preemptions"] >= 1, "no preemption happened"
         assert sc["priority"]["swap"]["preempted_stream_mismatches"] == 0, \
             "preempted streams diverged after swap-in"
+        assert ck["stream_mismatches"] == 0, \
+            "chunked streams diverged from monolithic"
+        assert ck["short_ttft_ratio"] < 1.0, \
+            "chunked prefill failed to cut short-request TTFT behind the long prompt"
         print("SMOKE OK")
         return
 
@@ -609,7 +698,26 @@ def main(argv=None) -> None:
     b.row("sched_preempted_stream_mismatches",
           pr["swap"]["preempted_stream_mismatches"],
           "acceptance: 0 (swap round trip is bit-exact)")
+
+    # -- chunked prefill: streaming page-level KV handoff -------------------
+    ck = _chunked_metrics(params, cfg)
+    b.row("chunked_stream_mismatches", ck["stream_mismatches"],
+          "acceptance: 0 (chunked == monolithic, bit for bit)")
+    b.row("chunked_short_ttft_s", ck["chunked"]["short_ttft_wall_s"],
+          f"{CHUNK_LONG}-token prompt ahead, {CHUNK_TOKENS}-token chunks")
+    b.row("chunked_short_ttft_s_monolithic", ck["monolithic"]["short_ttft_wall_s"],
+          "shorts wait out the whole long prefill + a decode block")
+    b.row("chunked_short_ttft_ratio", ck["short_ttft_ratio"],
+          "acceptance: < 1.0")
+    b.row("chunked_max_prefill_call_tokens", ck["chunked"]["max_prefill_call_tokens"],
+          f"head-of-line compute quantum; {ck['monolithic']['max_prefill_call_tokens']} monolithic")
+    b.row("chunked_long_ttft_rounds", ck["chunked"]["long_ttft_rounds"],
+          f"the cost side: first token after every chunk "
+          f"({ck['monolithic']['long_ttft_rounds']} monolithic)")
     b.dump()
+    assert ck["stream_mismatches"] == 0
+    assert ck["short_ttft_ratio"] < 1.0, \
+        f"chunked short TTFT ratio {ck['short_ttft_ratio']:.3f} (acceptance < 1.0)"
     assert kv["queue_wait_rounds"]["p99"] < fc["queue_wait_rounds"]["p99"]
     assert abs(tps_ratio - 1.0) <= 0.10, \
         f"KV-aware tokens/s drifted {tps_ratio:.3f}x vs FCFS (acceptance +-10%)"
@@ -663,6 +771,7 @@ def main(argv=None) -> None:
             "prefix_len": PREFIX_LEN,
         },
         "scheduler": dict(sched, tokens_per_s_ratio=tps_ratio),
+        "chunked_prefill": ck,
         "smoke_reference": smoke_reference,
         "config": {"decode_block": DECODE_BLOCK, "max_slots": MAX_SLOTS,
                    "max_len": MAX_LEN, "max_new": MAX_NEW, "n_requests": N_REQUESTS},

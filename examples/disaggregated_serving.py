@@ -41,16 +41,25 @@ def main():
                     help="priority policy: preempt low-priority requests via "
                          "page-level swap (switches decode to the paged KV "
                          "cache)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill: prompts longer than this split "
+                         "into page-aligned chunks whose KV streams into the "
+                         "decode pool between other requests' prefills "
+                         "(switches decode to the paged KV cache); must be a "
+                         "multiple of 16, the page size")
     args = ap.parse_args()
     if args.swap and args.scheduler != "priority":
         ap.error("--swap requires --scheduler priority (only the priority "
                  "policy preempts)")
+    if args.chunk_tokens is not None and args.chunk_tokens % 16:
+        ap.error("--chunk-tokens must be a multiple of 16 (the page size)")
 
     cfg = reduced(ARCHS[args.arch])
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    paged = args.swap or args.scheduler == "kv-aware"
+    paged = args.swap or args.scheduler == "kv-aware" or args.chunk_tokens is not None
     server = DisaggregatedServer(
-        [PrefillEngine(params, cfg) for _ in range(2)],
+        [PrefillEngine(params, cfg, chunk_tokens=args.chunk_tokens)
+         for _ in range(2)],
         [DecodeEngine(params, cfg, max_slots=4, max_len=256,
                       decode_block=args.decode_block, seed=i,
                       paged=paged, page_size=16) for i in range(2)],

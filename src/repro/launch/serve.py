@@ -55,6 +55,14 @@ def main():
                     help="KV positions per page (paged mode)")
     ap.add_argument("--pages", type=int, default=None,
                     help="pool size in pages (default: slab-equivalent HBM)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill (requires --paged): prompts longer "
+                         "than this prefill in page-aligned chunks, each "
+                         "chunk's KV streamed into the decode pool "
+                         "immediately, so short requests interleave between "
+                         "a long prompt's chunks instead of queueing behind "
+                         "one monolithic compile; must be a multiple of "
+                         "--page-size")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted prefix sharing + copy-on-write (paged "
                          "mode): requests whose prompts share a page-aligned "
@@ -76,6 +84,13 @@ def main():
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
+    if args.chunk_tokens is not None:
+        if not args.paged:
+            ap.error("--chunk-tokens requires --paged (chunks stream into the "
+                     "paged pool)")
+        if args.chunk_tokens % args.page_size:
+            ap.error("--chunk-tokens must be a multiple of --page-size "
+                     "(chunk boundaries are page-aligned)")
     if args.swap and args.scheduler != "priority":
         ap.error("--swap requires --scheduler priority")
     if args.swap and not args.paged:
@@ -86,7 +101,8 @@ def main():
         cfg = reduce_cfg(cfg)
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     sp = SamplingParams(temperature=args.temperature)
-    prefills = [PrefillEngine(params, cfg, sp) for _ in range(args.prefill_engines)]
+    prefills = [PrefillEngine(params, cfg, sp, chunk_tokens=args.chunk_tokens)
+                for _ in range(args.prefill_engines)]
     decodes = [
         DecodeEngine(params, cfg, max_slots=args.max_slots, max_len=args.max_len, sampling=sp,
                      decode_block=args.decode_block, donate=not args.no_donate,

@@ -281,17 +281,19 @@ def _block_apply(
                     prefix_kv=prefix_kv, prefix_len=prefix_len,
                 )
     elif mixer == "mamba":
-        if prefix_kv is not None:
+        if prefix_kv is not None and "conv" not in prefix_kv:
             raise ValueError(
                 "prefix-offset prefill is attention-only: SSM state is a "
-                "whole-prompt function (hybrid engines use the full-recompute "
-                "pages-only sharing path)"
+                "whole-prompt function — a mamba mixer accepts only a carried "
+                "{conv, ssm} state (chunked prefill), never a K/V prefix "
+                "(hybrid prefix SHARING uses the full-recompute pages-only path)"
             )
         if mode == "decode":
             a_out, new_cache = ssm_mod.mamba_decode(bp["mixer"], h, cfg, cache, pos)
         else:
             a_out, new_cache = ssm_mod.mamba_prefill(
-                bp["mixer"], h, cfg, want_cache=mode == "prefill", true_len=true_len
+                bp["mixer"], h, cfg, want_cache=mode == "prefill", true_len=true_len,
+                initial_state=prefix_kv,
             )
     else:
         raise ValueError(mixer)
@@ -408,14 +410,17 @@ def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
     row instead of the last padded position.  Rows with true_len == 0 are
     dummy (batch padding); their logits/caches are garbage by contract.
 
-    ``prefix_kv`` (list per pattern position of cached attn K/V,
-    [R, B, Lp, ...] leaves) + ``prefix_len`` [B] int32 switch to
-    prefix-offset (tail-only) prefill: ``batch`` holds only each prompt's
-    uncached tail, queries run at absolute positions prefix_len[b] + j over
-    [cached prefix ‖ tail], and the returned caches cover the tail only.
-    ``true_len`` then counts tail tokens (logits at tail position
-    true_len - 1, i.e. absolute prefix_len + true_len - 1).  Attention-only
-    models; SSM mixers raise (their state needs the whole prompt).
+    ``prefix_kv`` (list per pattern position) + ``prefix_len`` [B] int32
+    switch to prefix-offset (tail/chunk) prefill: ``batch`` holds only each
+    prompt's uncomputed slice, queries run at absolute positions
+    prefix_len[b] + j, attention entries ([R, B, Lp, ...] cached K/V leaves)
+    are attended as [cached prefix ‖ slice], and the returned attention
+    caches cover the slice only.  ``true_len`` then counts slice tokens
+    (logits at slice position true_len - 1, i.e. absolute
+    prefix_len + true_len - 1).  Mamba pattern positions take a carried
+    {conv, ssm} state (chunked prefill resumes the recurrence mid-prompt;
+    the returned entry is the carry for the next chunk) — a K/V-style
+    prefix raises, since SSM state is a whole-prompt function.
     """
     x = _embed_in(params, batch, cfg,
                   pos0=None if prefix_len is None else jnp.asarray(prefix_len))

@@ -73,7 +73,8 @@ def _gated_norm(y, z, scale, eps):
     return (n * scale.astype(jnp.float32)).astype(y.dtype)
 
 
-def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
+def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None,
+                  initial_state=None):
     """x [B,L,D] -> (out [B,L,D], cache {conv:[B,dc-1,ch], ssm:[B,nh,hd,N]}).
 
     ``true_len`` [B]: for right-padded batches, padding tokens are neutralized
@@ -81,7 +82,15 @@ def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
     dt*x*B=0 — an exact identity step), so the final SSM state equals the
     unpadded one; the conv cache gathers the last ``d_conv-1`` *real*
     positions per row.  Outputs at padded positions are garbage and must be
-    discarded by the caller (prefill gathers logits at true_len-1)."""
+    discarded by the caller (prefill gathers logits at true_len-1).
+
+    ``initial_state`` {conv:[B,dc-1,ch], ssm:[B,nh,hd,N]} resumes the
+    recurrence mid-prompt (chunked prefill): the conv window replaces the
+    implicit left zero-padding and the SSD scan seeds from the carried
+    state, so running a prompt in ``chunk_tokens``-sized slices — boundaries
+    aligned to ``ssm.chunk_size`` — is bit-identical to one monolithic pass
+    (same chunk-body ops in the same order, padded steps are exact
+    identities).  The returned cache is the carry for the next chunk."""
     from ..kernels import ops as kops
 
     s, d, di, nh, gdn, conv_ch = _dims(cfg)
@@ -89,8 +98,12 @@ def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
     zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"])
     z, xBC, dt = _split(zxbcdt, cfg)
 
-    # causal depthwise conv (left pad d_conv-1)
-    pad = jnp.zeros((B, s.d_conv - 1, conv_ch), xBC.dtype)
+    # causal depthwise conv (left pad d_conv-1: zeros at the prompt start,
+    # the previous chunk's last real positions when resuming mid-prompt)
+    if initial_state is None:
+        pad = jnp.zeros((B, s.d_conv - 1, conv_ch), xBC.dtype)
+    else:
+        pad = initial_state["conv"].astype(xBC.dtype)
     xp = jnp.concatenate([pad, xBC], axis=1)
     conv = sum(
         xp[:, i : i + L] * p["conv_w"][i][None, None] for i in range(s.d_conv)
@@ -106,7 +119,10 @@ def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
         dt = dt * valid[..., None]
     A = -jnp.exp(p["A_log"])
 
-    y, final_state = kops.ssd(xh, dt, A, Bm, Cm, chunk=s.chunk_size)
+    y, final_state = kops.ssd(
+        xh, dt, A, Bm, Cm, chunk=s.chunk_size,
+        initial_state=None if initial_state is None else initial_state["ssm"],
+    )
     y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
     y = _gated_norm(y.reshape(B, L, di), z, p["norm"], cfg.norm_eps)
     out = jnp.einsum("blk,kd->bld", y, p["out_proj"])
@@ -117,11 +133,20 @@ def mamba_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None):
             conv_cache = xBC[:, L - (s.d_conv - 1) :, :]
         else:
             # last d_conv-1 REAL positions per row; indices before the start
-            # of the prompt read the implicit left zero-padding.
+            # of this slice read the left context — the implicit zero padding
+            # at the prompt start, the carried conv window mid-prompt (a
+            # resumed chunk may be shorter than the window).
             tl = jnp.asarray(true_len)
             idx = tl[:, None] - (s.d_conv - 1) + jnp.arange(s.d_conv - 1)[None]  # [B, dc-1]
             got = jnp.take_along_axis(xBC, jnp.clip(idx, 0, L - 1)[..., None], axis=1)
-            conv_cache = jnp.where((idx >= 0)[..., None], got, 0)
+            if initial_state is None:
+                left = jnp.zeros_like(got)
+            else:
+                carry = initial_state["conv"].astype(xBC.dtype)  # [B, dc-1, ch]
+                left = jnp.take_along_axis(
+                    carry, jnp.clip(idx + (s.d_conv - 1), 0, s.d_conv - 2)[..., None], axis=1
+                )
+            conv_cache = jnp.where((idx >= 0)[..., None], got, left)
         cache = {
             "conv": conv_cache.astype(pdt(cfg)),
             "ssm": final_state.astype(jnp.float32),

@@ -1,6 +1,37 @@
-"""Serving runtime: engines, KV-cache slots, sampling, disaggregation,
-pluggable schedulers."""
+"""Serving runtime: the executable half of the paper's disaggregated design.
+
+Public surface (the names re-exported here are the supported API; the
+normative behavioural contracts live in ROADMAP.md and are enforced by the
+tier-1 tests — docs/serving.md is the narrative guide):
+
+* ``PrefillEngine`` — bucketed, batched prompt prefill; with
+  ``chunk_tokens`` set, long prompts prefill in page-aligned chunks whose
+  K/V streams into a paged decode pool between other requests' turns.
+* ``DecodeEngine`` — continuous-batching decode over device-resident state
+  (donated jitted transitions, fused ``decode_block``-step scans, at most
+  one host sync per block).  ``paged=True`` adds the refcounted page-pool
+  KV cache; ``prefix_cache=True`` adds prefix sharing + copy-on-write;
+  ``fork``/``swap_out``/``swap_in`` are the best-of-n and preemption
+  entry points.
+* ``DisaggregatedServer`` — prefill pool -> KV handoff -> decode pool; owns
+  mechanism only, defers ordering to its ``Scheduler``.
+* ``MonolithicEngine`` — the co-located baseline.
+* ``GenRequest`` / ``SamplingParams`` / ``sample`` — request and sampling
+  primitives.
+* ``Scheduler`` and its policies (``FCFSScheduler`` — the bit-exact
+  regression anchor, ``KVAwareScheduler``, ``PriorityScheduler``,
+  ``make_scheduler``), plus the queue entry types ``WaitingEntry`` /
+  ``SwappedRequest``.
+* ``PrefixIndex`` / ``chunk_hashes`` — the host half of prefix sharing
+  (chained page-chunk hashes -> physical pages; holds a +1 device refcount
+  per cached page).
+* ``PrefixMatch`` / ``ChunkPrefillState`` — introspection types for routed
+  prefix hits and in-progress chunked prefills.
+* ``SchedulerExhausted`` — raised by ``run(max_steps=...)`` with the work
+  left intact (resumable), never silently dropping requests.
+"""
 from .engine import (  # noqa: F401
+    ChunkPrefillState,
     DecodeEngine,
     DisaggregatedServer,
     GenRequest,

@@ -55,6 +55,13 @@ DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
 
 @dataclass
 class GenRequest:
+    """One generation request, mutated in place as it moves through the
+    server: ``tokens`` accumulates the emitted stream (the prefill's first
+    token included) and ``done`` flips when EOS or ``max_new_tokens`` is
+    reached.  ``prompt`` is treated as immutable after ``submit()`` — the
+    prefix-cache chunk hashes and the chunked-prefill cursor both memoize
+    against it."""
+
     rid: int
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int
@@ -87,6 +94,46 @@ class PrefixMatch:
     n_shared: int
     hashes: List[bytes]
     tail: bool = False
+
+
+@dataclass
+class ChunkPrefillState:
+    """Host-side cursor of one in-progress chunked prefill.
+
+    The request stays IN THE SCHEDULER QUEUE between chunks (a resumable
+    partial-prefill entry — policies see it in ``order`` and can interleave
+    other work between its chunks); this object carries everything the next
+    chunk needs:
+
+    req           the request being prefilled chunk by chunk
+    engine        the routed paged decode engine — fixed at chunk 0, since
+                  the streamed pages are physical ids in ITS pool
+    chunk_tokens  chunk quantum (page-aligned; from the prefill engine)
+    pos           prompt tokens already computed (matched + appended pages,
+                  always a page multiple until the final chunk)
+    matched       physical pages taken from the prefix index at chunk 0
+                  (prefix-cache skip: cached chunks are never recomputed);
+                  pinned, not chunk-held — the index keeps them alive
+    pages         pages appended so far, each holding one +1 "chunk hold"
+                  ref (dropped after the final admit maps them)
+    carry         hybrid models: the previous chunk's {conv, ssm} state per
+                  mamba pattern position (device, B=1); None for attn-only
+    hashes        full-prompt chunk hashes (admit-time registration of the
+                  streamed pages; empty without a prefix cache)
+    """
+
+    req: GenRequest
+    engine: "DecodeEngine"
+    chunk_tokens: int
+    pos: int = 0
+    matched: List[int] = field(default_factory=list)
+    pages: List[int] = field(default_factory=list)
+    carry: Any = None
+    hashes: List[bytes] = field(default_factory=list)
+
+    @property
+    def all_pages(self) -> List[int]:
+        return self.matched + self.pages
 
 
 def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
@@ -132,6 +179,19 @@ class PrefillEngine:
     how many distinct prompt lengths the workload serves.  ``bucketed=False``
     restores the seed behaviour (one compile per exact prompt length) for
     benchmarking the difference.
+
+    ``chunk_tokens`` enables **chunked prefill** (Sarathi-style): the server
+    splits prompts longer than this threshold into successive
+    ``prefill_chunk`` calls — each attending [all previously appended KV ‖
+    current chunk] at absolute positions through the prefix-offset path, so
+    chunk *i* is bit-identical to the same slice of a monolithic prefill —
+    and streams each chunk's K/V into a paged decode engine's pool
+    (``DecodeEngine.append_chunk``) instead of holding the whole prompt's
+    cache until admit.  Must be a multiple of the target engine's page size
+    (chunk boundaries are page-aligned) and, for hybrid models, of the SSM
+    chunk size (so the carried conv/SSD state resumes on an internal scan
+    boundary and stays bit-exact).  ``None`` (default) keeps prefill
+    monolithic.
     """
 
     def __init__(
@@ -142,12 +202,30 @@ class PrefillEngine:
         *,
         bucketed: bool = True,
         buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+        chunk_tokens: Optional[int] = None,
     ):
         self.params = params
         self.cfg = cfg
         self.sampling = sampling
         self.bucketed = bucketed
         self.buckets = buckets
+        if chunk_tokens is not None:
+            if chunk_tokens <= 0:
+                raise ValueError(f"chunk_tokens must be positive, got {chunk_tokens}")
+            if cfg.ssm is not None and any(
+                m == "mamba" for m, _ in cfg.block_pattern
+            ) and chunk_tokens % cfg.ssm.chunk_size:
+                raise ValueError(
+                    f"chunk_tokens {chunk_tokens} must be a multiple of the SSM "
+                    f"chunk size {cfg.ssm.chunk_size}: the carried SSD state is "
+                    f"bit-exact only when chunk boundaries land on internal "
+                    f"scan-chunk boundaries"
+                )
+        self.chunk_tokens = chunk_tokens
+        # observability for benchmarks: the largest single prefill dispatch
+        # (padded tokens) bounds how long anything can be stuck behind one
+        # prefill call — the head-of-line quantum chunking exists to shrink
+        self.stats = {"calls": 0, "max_call_tokens": 0, "chunk_calls": 0}
         self._fns: Dict[Tuple[int, int], Any] = {}  # (S_padded, B_padded) -> jitted
 
     @property
@@ -204,15 +282,15 @@ class PrefillEngine:
             toks[i, : tails[i]] = np.asarray(r.prompt[shared_lens[i] :], np.int32)
         tl = np.zeros((B,), np.int32)
         tl[: len(reqs)] = tails
+        self.stats["calls"] += 1
+        self.stats["max_call_tokens"] = max(self.stats["max_call_tokens"], S)
         if prefix is None:
             first, caches = self._fn(S, B)(
                 self.params, jnp.asarray(toks), jnp.asarray(tl), key
             )
         else:
             pack = prefix[0]
-            Lp = max(
-                (a.shape[2] for a in jax.tree.leaves(pack) if a.ndim >= 3), default=0
-            )
+            Lp = self._pack_len(pack)
             plen = np.zeros((B,), np.int32)
             plen[: len(reqs)] = shared_lens
             first, caches = self._prefix_fn(S, B, Lp)(
@@ -221,6 +299,19 @@ class PrefillEngine:
             )
         first = np.asarray(first)
         return [int(first[i]) for i in range(len(reqs))], caches, full_lens
+
+    def _pack_len(self, pack) -> int:
+        """Prefix length (positions) of a prefix-KV pack: the seq axis of the
+        ATTENTION entries only.  Mamba entries — present when a chunked
+        hybrid carries {conv, ssm} state — have fixed-size leaves whose dim 2
+        is unrelated to sequence length and must not key the jit cache."""
+        Lp = 0
+        for i, (mixer, _) in enumerate(self.cfg.block_pattern):
+            if mixer == "attn" and pack[i] is not None:
+                Lp = max(
+                    Lp, max(a.shape[2] for a in jax.tree.leaves(pack[i]))
+                )
+        return Lp
 
     def _prefix_fn(self, S: int, B: int, Lp: int):
         key = (S, B, Lp)
@@ -235,6 +326,42 @@ class PrefillEngine:
 
             self._fns[key] = jax.jit(f)
         return self._fns[key]
+
+    def prefill_chunk(
+        self, req: GenRequest, key, *, pos: int, n_tokens: int, prefix=None,
+        pad_to: Optional[int] = None,
+    ) -> Tuple[int, Any]:
+        """Prefill tokens [pos, pos + n_tokens) of ``req``'s prompt.
+
+        ``prefix`` = (prefix_pack, mamba carry aside) is the same
+        (pack, shared_lens) pair ``prefill_batch`` takes: the pack holds the
+        K/V of everything already appended (gathered from the target decode
+        engine's pool, trash-padded past ``pos``) plus, for hybrid models,
+        the carried conv/SSD state from the previous chunk.  Runs through the
+        prefix-offset path at absolute positions, so the chunk's outputs —
+        including the final chunk's first-token logits — are bit-identical to
+        the same slice of a monolithic prefill.  Returns
+        (sampled_token, kv_pack); the token is meaningful only for the FINAL
+        chunk (intermediate callers pass a dummy key and discard it), the
+        kv_pack covers this chunk only (mamba entries: the carry after it).
+
+        ``pad_to`` batch-pads the call.  The server passes its
+        ``max_prefill_batch`` for the FINAL chunk only: sampled tokens depend
+        on the batch shape (one categorical draw covers the padded batch), so
+        the first token is bit-identical to a monolithic prefill exactly when
+        both run at the same row and padding — intermediate chunks discard
+        their token and stay at B=1.
+        """
+        sub = GenRequest(
+            req.rid, np.asarray(req.prompt[: pos + n_tokens], np.int32),
+            req.max_new_tokens,
+        )
+        self.stats["chunk_calls"] += 1
+        toks, kvb, _ = self.prefill_batch(
+            [sub], key, pad_to=pad_to,
+            prefix=None if prefix is None else (prefix, [pos]),
+        )
+        return toks[0], kvb
 
     def prefill(self, req: GenRequest, key) -> Tuple[int, Any, int]:
         """Single-request prefill.  Returns (first_token, kv_pack, true_len).
@@ -351,11 +478,13 @@ class DecodeEngine:
             self._slot_new = [0] * max_slots  # non-shared pages mapped at admit
             self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
             self._tail_ok = all(m == "attn" for m, _ in cfg.block_pattern)
+            self._is_hybrid = any(m == "mamba" for m, _ in cfg.block_pattern)
             self.prefix: Optional[PrefixIndex] = (
                 PrefixIndex(page_size) if self.prefix_cache else None
             )
             self._pins: Dict[int, List[int]] = {}  # rid -> pinned prefix pages
             self._gather_fns: Dict[Tuple[int, int], Any] = {}
+            self._append_fns: Dict[Tuple[int, int, int], Any] = {}  # (L1, B, n_alloc)
             self._fork_fn = None
             # admission stats: per-request entries live only while the
             # request does (pruned at release — a long-running server must
@@ -661,6 +790,94 @@ class DecodeEngine:
                 lambda caches, t: kvcache.gather_prefix_pack(caches, t, cfg)
             )
         return self._gather_fns[key](self.state.caches, jnp.asarray(tables))
+
+    def append_chunk(
+        self, kv_pack, n_tokens: int, *, batch_index: int = 0
+    ) -> Optional[List[int]]:
+        """Stream one prefill chunk's K/V into the page pool (chunked prefill).
+
+        Allocates exactly ``n_tokens // page_size`` pages (chunk boundaries
+        are page-aligned) at refcount 1 — the "chunk hold", mirrored in
+        ``_href`` so the pages count against ``free_pages`` like any other
+        reservation — and scatters the pack's pages into them inside a
+        donated jitted transition (``kvcache.paged_append_chunk``).  No slot
+        is involved: the final chunk's ``admit`` later maps these pages into
+        a block table as shared pages (+1 ref each) and the server drops the
+        chunk holds (``release_chunk_holds``).
+
+        Returns the physical page ids (one small host sync per chunk — the
+        same lifecycle cadence as the admit-time bookkeeping readback), or
+        None when the pool cannot cover the chunk right now (the caller
+        leaves the request queued and retries after decode frees pages)."""
+        if not self.paged:
+            raise ValueError("append_chunk requires the paged KV cache")
+        ps = self.page_size
+        if n_tokens % ps:
+            raise ValueError(f"chunk of {n_tokens} tokens is not page-aligned (ps={ps})")
+        n_alloc = n_tokens // ps
+        if n_alloc > self.free_pages and not self._evict_for(n_alloc):
+            return None
+        B = jax.tree.leaves(kv_pack)[0].shape[1]
+        L1 = max(
+            (a.shape[2] for i, (m, _) in enumerate(self.cfg.block_pattern)
+             if m == "attn" for a in jax.tree.leaves(kv_pack[i])),
+            default=0,
+        )
+        key = (L1, B, n_alloc)
+        if key not in self._append_fns:
+            cfg, psz = self.cfg, ps
+
+            def app(state, kv, b):
+                single = kvcache.slice_request(kv, b)
+                return kvcache.paged_append_chunk(
+                    state, single, cfg, page_size=psz, n_alloc=n_alloc
+                )
+
+            self._append_fns[key] = self._jit(app)
+        self.state, pages = self._append_fns[key](
+            self.state, kv_pack, jnp.int32(batch_index)
+        )
+        page_list = [int(p) for p in np.asarray(pages)]
+        for p in page_list:
+            self._href[p] += 1
+        self.stats["chunk_pages"] = self.stats.get("chunk_pages", 0) + n_alloc
+        return page_list
+
+    def release_chunk_holds(self, pages: List[int]) -> None:
+        """Drop the in-flight chunk holds on ``pages`` (decrement-only, one
+        tiny dispatch — a per-chunked-request lifecycle event).  Called after
+        the final admit mapped the pages into a block table (their bytes
+        survive under the slot ref) or when a prefill-only chunked request
+        finishes without a slot (refs hit 0 and the pages recycle)."""
+        if not pages:
+            return
+        self.state = self.state._replace(
+            page_refs=self.state.page_refs.at[jnp.asarray(pages, jnp.int32)].add(-1)
+        )
+        for p in pages:
+            self._href[p] -= 1
+
+    def register_chunk_pages(
+        self, hashes: List[bytes], pages: List[int], start: int
+    ) -> None:
+        """Register a chunked prompt's streamed pages in the prefix index
+        (pages [start, len(pages)) hold full prompt chunks ``hashes[j]``).
+        Each new registration takes the usual +1 device cache hold; hashes
+        already present (registered by a concurrent request, possibly on a
+        different page) are left alone — duplicate content is never
+        re-registered."""
+        if self.prefix is None:
+            return
+        add = [
+            p for j, p in enumerate(pages)
+            if j >= start and j < len(hashes) and self.prefix.insert(hashes[j], p)
+        ]
+        if add:
+            self.state = self.state._replace(
+                page_refs=self.state.page_refs.at[jnp.asarray(add, jnp.int32)].add(1)
+            )
+            for p in add:
+                self._href[p] += 1
 
     def admit(
         self,
@@ -1071,8 +1288,24 @@ class DisaggregatedServer:
     (attention-only models), and admit maps the cached pages instead of
     rewriting them.
 
+    With a chunk-enabled prefill engine (``PrefillEngine(chunk_tokens=...)``)
+    and a paged decode pool, prompts longer than the threshold prefill in
+    page-aligned chunks (``ChunkPrefillState``): each round the queue head's
+    NEXT chunk runs — attending everything already streamed at absolute
+    positions — and its K/V pages land in the decode pool immediately
+    (``DecodeEngine.append_chunk``), so the KV handoff is a stream of pages
+    rather than one admit-time slab, pages are reserved chunk by chunk, and
+    the request goes back in the queue between chunks where the policy can
+    interleave shorter work.  The final chunk emits the first token and
+    admits through the ordinary tail-pack path (its streamed pages mapped
+    like a prefix match), which keeps chunked streams bit-identical to
+    monolithic prefill.
+
     ``transfer`` is the KV handoff hook: identity on single host; on a real
     cluster it is the pod-to-pod device transfer (see launch/serve.py).
+    In the chunked path it runs per chunk — the incremental
+    prefill-chip -> decode-chip page stream the paper's disaggregation
+    needs at pod scale.
     """
 
     def __init__(
@@ -1094,6 +1327,14 @@ class DisaggregatedServer:
         self.all_requests: Dict[int, GenRequest] = {}
         self.peak_active = 0  # max concurrent decode requests seen (for benchmarks)
         self._rr = 0
+        # in-progress chunked prefills (rid -> cursor); the requests
+        # themselves stay in the scheduler queue between chunks
+        self.chunks: Dict[int, ChunkPrefillState] = {}
+        # intermediate chunks discard their sampled token, so they burn a
+        # fixed dummy key instead of advancing the server's PRNG chain —
+        # the final chunk's first-token sample then consumes the SAME split
+        # a monolithic prefill of that prompt would have consumed
+        self._chunk_key = jax.random.PRNGKey(0)
         # (rid, page_size) -> chunk hashes: prompts are immutable, so the
         # per-round routing scans never re-hash a queued prompt; entries are
         # dropped when the request leaves the queue or finishes (_forget)
@@ -1159,13 +1400,220 @@ class DisaggregatedServer:
     def _forget(self, rid: int) -> None:
         """Drop every piece of host bookkeeping for a request that exited —
         finished, prefill-only, or abandoned — so long-running servers cannot
-        leak hash memos or prefix pins (the churn-loop regression)."""
+        leak hash memos, prefix pins, or chunk holds (the churn-loop
+        regression)."""
+        self._finish_chunked(rid, admitted=False)
         self.scheduler.forget(rid)
         for d in self.decodes:
             self._hash_memo.pop((rid, getattr(d, "page_size", 0)), None)
             if getattr(d, "prefix", None) is not None:
                 d.release_prefix_pin(rid)
                 d.prefix.swap_unpin(rid)
+
+    # -- chunked prefill (the streaming page-level KV handoff) --------------
+
+    def chunk_pending(self, req: GenRequest) -> bool:
+        """Whether this request prefills through the chunked path: already in
+        progress, or long enough to start chunking once it reaches the queue
+        head (some prefill engine has ``chunk_tokens`` set and a paged decode
+        engine can eventually host the whole request).  Used by the policies
+        to keep such requests out of monolithic prefill groups and to rank
+        them by their next-chunk page quantum."""
+        if req.rid in self.chunks:
+            return True
+        ce = next((e for e in self.prefills if e.chunk_tokens), None)
+        return (
+            ce is not None
+            and len(req.prompt) > ce.chunk_tokens
+            and any(
+                d.paged and d.can_ever_admit(len(req.prompt), req.max_new_tokens)
+                for d in self.decodes
+            )
+        )
+
+    def next_chunk_pages(self, req: GenRequest) -> Optional[int]:
+        """Pages the request's NEXT chunked-prefill step will take from the
+        pool, or None for requests on the monolithic path.  This is the
+        reservation quantum chunk-granular scheduling works in: a 32k prompt
+        mid-stream competes for ``chunk_tokens / page_size`` pages per round,
+        not its whole footprint (``KVAwareScheduler`` ranks by it)."""
+        st = self.chunks.get(req.rid)
+        if st is not None:
+            d = st.engine
+            remaining = len(st.req.prompt) - st.pos
+            if remaining > st.chunk_tokens:
+                return st.chunk_tokens // d.page_size
+            # final chunk: what admission must still reserve beyond the
+            # already-streamed pages (tail + growth)
+            return max(
+                d._pages_needed(len(st.req.prompt), req.max_new_tokens)
+                - len(st.all_pages),
+                0,
+            )
+        if not self.chunk_pending(req):
+            return None
+        # not started yet: estimate against the engine _start_chunk's
+        # fallback would route to (most free pages among those that can
+        # ever host the request) — prefix-match routing may still pick a
+        # different pool, but the filter matches the start path's
+        ce = next(e for e in self.prefills if e.chunk_tokens)
+        d = max(
+            (dd for dd in self.decodes
+             if dd.paged and dd.can_ever_admit(len(req.prompt), req.max_new_tokens)),
+            key=lambda dd: dd.free_pages,
+        )
+        return -(-ce.chunk_tokens // d.page_size)
+
+    def _chunk_engine(self, eng: PrefillEngine, req: GenRequest) -> Optional[PrefillEngine]:
+        """The prefill engine to run this round's chunk on (the round's own
+        engine when chunk-enabled, else any chunk-enabled one), or None when
+        the head takes the monolithic path."""
+        if not self.chunk_pending(req):
+            return None
+        if eng.chunk_tokens:
+            return eng
+        return next((e for e in self.prefills if e.chunk_tokens), None)
+
+    def _start_chunk(self, eng: PrefillEngine, req: GenRequest) -> ChunkPrefillState:
+        """Route a fresh chunked prefill: prefer the prefix-cache engine
+        already holding the longest prefix of this prompt (its cached chunks
+        are skipped outright — the cursor starts past them), else the paged
+        engine with the most free pages.  The routing is fixed for the whole
+        chunked prefill: streamed pages are physical ids in that pool."""
+        m, d = self.scheduler.match_for(self, req)
+        if not (m is not None and d is not None and d._tail_ok and m.n_shared > 0):
+            m = None
+            cands = [
+                dd for dd in self.decodes
+                if dd.paged and dd.can_ever_admit(len(req.prompt), req.max_new_tokens)
+            ]
+            d = max(cands, key=lambda dd: dd.free_pages)
+        if eng.chunk_tokens % d.page_size:
+            raise ValueError(
+                f"chunk_tokens {eng.chunk_tokens} must be a multiple of the "
+                f"decode engine's page_size {d.page_size} (chunk boundaries "
+                f"are page-aligned)"
+            )
+        hashes: List[bytes] = []
+        if d.prefix is not None:
+            hk = (req.rid, d.page_size)
+            hashes = self._hash_memo.get(hk) or chunk_hashes(
+                req.prompt, d.page_size, d.pages_per_slot
+            )
+        st = ChunkPrefillState(
+            req=req, engine=d, chunk_tokens=eng.chunk_tokens, hashes=hashes
+        )
+        if m is not None:
+            d.pin_prefix(req.rid, m)
+            st.matched = list(m.pages)
+            st.pos = m.n_shared * d.page_size
+        self.chunks[req.rid] = st
+        return st
+
+    def _chunk_prefix_arg(self, st: ChunkPrefillState, B: int):
+        """The prefix pack for the next chunk: every already-computed page,
+        gathered from the routed pool into a pow2-page-bucketed pack (so
+        prefix-length jit keys stay log-bounded), plus — hybrid models — the
+        carried conv/SSD state per mamba pattern position.  ``B`` right-pads
+        the batch axis (trash-mapped table rows / zero carry rows) to match a
+        padded final-chunk call; the padding rows are dummy by contract."""
+        d = st.engine
+        if st.pos == 0:
+            return None
+        n_pg = st.pos // d.page_size
+        n_pg_b = 1 << max(n_pg - 1, 0).bit_length()  # pow2 >= n_pg
+        n_pg_b = min(max(n_pg_b, 1), d.pages_per_slot)
+        tables = np.full((B, n_pg_b), d.n_pages, np.int32)
+        tables[0, :n_pg] = st.all_pages
+        pack = d.gather_prefix(tables)
+        if st.carry is not None:
+            def pad_b(a):
+                if a.shape[1] == B:
+                    return a
+                return jnp.pad(
+                    a, [(0, 0), (0, B - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
+                )
+            pack = [
+                jax.tree.map(pad_b, st.carry[i]) if st.carry[i] is not None
+                else pack[i]
+                for i in range(len(pack))
+            ]
+        return pack
+
+    def _prefill_chunk_round(self, eng: PrefillEngine, head: GenRequest) -> None:
+        """Run ONE chunk of the queue head's chunked prefill: gather the
+        streamed prefix, prefill [pos, pos + chunk) on the prefill engine,
+        and either append the chunk's pages to the routed decode pool
+        (non-final; the request requeues so other work interleaves) or
+        finish — the final chunk's logits yield the first token and the
+        request joins the waiting list as an ordinary tail-pack admission."""
+        sched = self.scheduler
+        st = self.chunks.get(head.rid) or self._start_chunk(eng, head)
+        d = st.engine
+        remaining = len(head.prompt) - st.pos
+        final = remaining <= st.chunk_tokens
+        sched.queue.pop(0)
+        if not final and (
+            st.chunk_tokens // d.page_size > d.free_pages + d._evictable_pages()
+        ):
+            # the pool cannot take this chunk yet; hold the head position and
+            # let decode drain pages into it (no prefill happens this round)
+            sched.queue.insert(0, head)
+            return
+        n = remaining if final else st.chunk_tokens
+        key = self._next_key() if final else self._chunk_key
+        # the final chunk pads its batch like any prefill group so the
+        # sampled first token is bit-identical to the monolithic path
+        pad = (self.max_prefill_batch if eng.bucketed else None) if final else None
+        tok, kvb = eng.prefill_chunk(
+            head, key, pos=st.pos, n_tokens=n,
+            prefix=self._chunk_prefix_arg(st, pad or 1), pad_to=pad,
+        )
+        kvb = self.transfer(kvb)  # per-chunk KV handoff (page stream)
+        if final:
+            m = PrefixMatch(
+                pages=st.all_pages, n_shared=len(st.all_pages),
+                hashes=list(st.hashes), tail=True,
+            )
+            if head.max_new_tokens <= 1:
+                head.tokens.append(tok)
+                head.done = True
+                sched.note_admitted(head.rid)
+                self._forget(head.rid)  # releases the chunk holds and pins
+            else:
+                sched.waiting.append(
+                    WaitingEntry(head, kvb, 0, tok, len(head.prompt), m, d)
+                )
+        else:
+            pages = d.append_chunk(kvb, n)
+            if pages is None:  # capacity raced away; recompute next round
+                sched.queue.insert(0, head)
+                return
+            st.pages.extend(pages)
+            st.pos += n
+            if d._is_hybrid:
+                st.carry = [
+                    kvb[i] if mixer == "mamba" else None
+                    for i, (mixer, _) in enumerate(d.cfg.block_pattern)
+                ]
+            sched.requeue_partial(head)
+
+    def _finish_chunked(self, rid: int, *, admitted: bool) -> None:
+        """Retire a chunked prefill's host state.  ``admitted=True`` (the
+        final admit mapped the streamed pages into a block table): register
+        the full-chunk pages in the prefix index, then drop the chunk holds —
+        the slot (and any cache holds) keep the pages alive.
+        ``admitted=False`` (prefill-only finish / abandon): just drop the
+        holds and pins; unregistered pages recycle at refcount 0."""
+        st = self.chunks.pop(rid, None)
+        if st is None:
+            return
+        d = st.engine
+        if admitted:
+            d.register_chunk_pages(st.hashes, st.all_pages, start=len(st.matched))
+        d.release_chunk_holds(st.pages)
+        if not admitted:
+            d.release_prefix_pin(rid)
 
     def _prefill_group(self, eng: PrefillEngine, group, matches) -> None:
         """Prefill one compatible group and hand the KV off: prefix-matched
@@ -1244,11 +1692,14 @@ class DisaggregatedServer:
                 )
         if admitted:
             self.scheduler.note_admitted(req.rid)
+            if req.rid in self.chunks:
+                self._finish_chunked(req.rid, admitted=True)
         return admitted
 
     def run_round(self):
-        """One scheduling round: batched prefill, swap-ins, policy-ordered
-        admission (with the preemption hook), fused decode blocks."""
+        """One scheduling round: batched prefill (or one CHUNK of a long
+        prompt's streaming prefill), swap-ins, policy-ordered admission
+        (with the preemption hook), fused decode blocks."""
         sched = self.scheduler
         sched.begin_round(self)
         # 1) one same-bucket prefill batch per round (round-robin engines).
@@ -1259,11 +1710,15 @@ class DisaggregatedServer:
         if sched.queue and len(sched.waiting) < max(free_slots, 1):
             eng = self.prefills[self._rr % len(self.prefills)]
             self._rr += 1
-            if eng.bucketed:
-                group, matches = sched.take_group(self, eng.buckets)
+            ceng = self._chunk_engine(eng, sched.queue[0])
+            if ceng is not None:
+                self._prefill_chunk_round(ceng, sched.queue[0])
             else:
-                group, matches = [sched.queue.pop(0)], [(None, None)]
-            self._prefill_group(eng, group, matches)
+                if eng.bucketed:
+                    group, matches = sched.take_group(self, eng.buckets)
+                else:
+                    group, matches = [sched.queue.pop(0)], [(None, None)]
+                self._prefill_group(eng, group, matches)
         # 2) swapped-out requests first (they already earned their slot once),
         # then waiting entries in policy order; a blocked entry gives the
         # policy one preemption attempt before it stays waiting

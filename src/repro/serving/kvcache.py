@@ -80,7 +80,7 @@ decode overwrites position ``pos`` before any step attends it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, NamedTuple, Optional
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -397,6 +397,58 @@ def paged_admit(
         active=state.active.at[slot].set(True),
         key=state.key,
     )
+
+
+def paged_append_chunk(
+    state: PagedDecodeState, single: Cache, cfg: ModelConfig, *,
+    page_size: int, n_alloc: int,
+) -> Tuple[PagedDecodeState, jnp.ndarray]:
+    """Stream one prefill chunk's K/V into the page pools (chunked prefill).
+
+    Allocates ``n_alloc`` free pages (refs 0 -> 1: the in-flight "chunk
+    hold") and scatters the B=1 chunk pack ``single`` into them, WHOLE pages
+    at a time — the same page-granular scatter shape as ``paged_admit``, but
+    with NO slot: the pages belong to a prompt that is still prefilling, so
+    they live only in the returned page-id list (mirrored by the engine's
+    host bookkeeping) until the final chunk's admit maps them into a block
+    table as shared pages.  Pack pages past ``n_alloc`` — bucket padding of
+    the ragged last pack page — are steered to the trash page, so the
+    scatter stays unconditional.
+
+    ``n_alloc`` is static (chunks are fixed-size, page-aligned), so the jit
+    key is bounded by the chunk configuration, not the prompt length.
+    Returns (new state, page_ids [n_alloc] int32).  Mamba leaves pass
+    through untouched: SSM state is carried across chunks by the prefill
+    engine (it is a whole-prompt function, not a paged quantity) and lands
+    per-slot only at the final admit.
+    """
+    n_pages = state.page_refs.shape[0]
+    (free_idx,) = jnp.nonzero(state.page_refs == 0, size=n_alloc, fill_value=n_pages)
+    refs = state.page_refs.at[free_idx].set(1, mode="drop")
+    ps = page_size
+    caches = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        if mixer == "attn":
+            def ins(dst, src):
+                # dst [R, P+1, ps, ...], src [R, 1, L1, ...]: pack page m maps
+                # to free_idx[m] for m < n_alloc, trash beyond (bucket pad)
+                L1 = src.shape[2]
+                n_src = -(-L1 // ps)
+                pad = n_src * ps - L1
+                row = src[:, 0]
+                if pad > 0:
+                    row = jnp.pad(row, [(0, 0), (0, pad)] + [(0, 0)] * (row.ndim - 2))
+                pages = row.reshape((row.shape[0], n_src, ps) + row.shape[2:])
+                m = jnp.arange(n_src)
+                tgt = jnp.where(
+                    m < n_alloc, free_idx[jnp.clip(m, 0, n_alloc - 1)], n_pages
+                )
+                return dst.at[:, tgt].set(pages.astype(dst.dtype))
+
+            caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+        else:
+            caches.append(state.caches[i])
+    return state._replace(caches=caches, page_refs=refs), free_idx.astype(jnp.int32)
 
 
 def paged_fork(

@@ -1,4 +1,15 @@
-"""Token sampling: greedy / temperature / top-k / top-p, batched + jittable."""
+"""Token sampling: greedy / temperature / top-k / top-p, batched + jittable.
+
+Determinism contract (what the bit-identical stream tests lean on): greedy
+sampling (``temperature == 0``) is a pure argmax — key- and batch-shape-
+independent.  Stochastic sampling draws ONE categorical over the whole
+``[B, V]`` batch per call, so a row's token depends on (key, its row index,
+B): two schedules produce identical sampled streams only when each request
+sees the same keys at the same row of the same-shaped batch.  The engines
+arrange exactly that where bit-identity is promised — decode splits the
+engine key once per step regardless of slot occupancy, and chunked prefill
+pads its final chunk to the monolithic batch shape.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -9,13 +20,23 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class SamplingParams:
+    """Per-engine sampling configuration (frozen: safe as a jit closure).
+
+    temperature  0 selects greedy argmax (the default; every committed
+                 bench baseline is greedy); > 0 scales logits before the
+                 categorical draw
+    top_k        keep only the k highest logits (0 disables)
+    top_p        nucleus: keep the smallest logit set with cumulative
+                 probability >= top_p (1 disables)
+    """
+
     temperature: float = 0.0  # 0 => greedy
     top_k: int = 0  # 0 => disabled
     top_p: float = 1.0  # 1 => disabled
 
 
 def sample(logits, key, params: SamplingParams):
-    """logits [B, V] -> tokens [B] int32."""
+    """logits [B, V] -> tokens [B] int32 (see the module contract above)."""
     if params.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lf = logits.astype(jnp.float32) / params.temperature

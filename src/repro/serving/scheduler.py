@@ -177,6 +177,17 @@ class Scheduler:
         a blocked head, and that behaviour is the regression anchor."""
         return False
 
+    def requeue_partial(self, req: "GenRequest") -> None:
+        """Where a partially-prefilled (chunked) request goes after each
+        non-final chunk: the queue TAIL, so every other queued request gets a
+        prefill turn between one long prompt's chunks (round-robin
+        interleaving — the Sarathi-style fairness chunking exists for).
+        Policies that re-sort the queue every round (KV-aware, priority) see
+        the request again in ``order`` regardless of where it lands here.
+        With chunking disabled this hook never runs, so FCFS stays
+        bit-identical to the pre-refactor anchor."""
+        self.queue.append(req)
+
     def _may_resume(self, server: "DisaggregatedServer", sw: SwappedRequest) -> bool:
         """Policy veto for re-admitting a swapped request this round."""
         return True
@@ -241,7 +252,9 @@ class Scheduler:
         want = self.group_key(head, m0, d0, buckets)
         group, matches, rest = [head], [(m0, d0)], []
         for r in self.queue[1:]:
-            if len(group) < server.max_prefill_batch:
+            # chunked-path requests never join a monolithic group: their
+            # prefill is the per-round chunk state machine (engine.py)
+            if len(group) < server.max_prefill_batch and not server.chunk_pending(r):
                 m, d = self.match_for(server, r)
                 if self.group_key(r, m, d, buckets) == want:
                     group.append(r)
@@ -283,7 +296,16 @@ class KVAwareScheduler(Scheduler):
 
     def footprint(self, server: "DisaggregatedServer", req: "GenRequest") -> int:
         """Pages a paged decode engine would reserve for this request (falls
-        back to prompt + max_new positions when no engine is paged)."""
+        back to prompt + max_new positions when no engine is paged).
+
+        Chunked-prefill requests are ranked by what their NEXT step actually
+        takes from the pool — one chunk's pages mid-stream, the tail + growth
+        reservation at the final admit — not their whole-prompt footprint:
+        chunking turns a 32k prompt into a sequence of small reservations,
+        and the ordering should see exactly that."""
+        cp = server.next_chunk_pages(req)
+        if cp is not None:
+            return cp
         d = next((d for d in server.decodes if d.paged), None)
         if d is None:
             return len(req.prompt) + req.max_new_tokens
@@ -300,10 +322,15 @@ class KVAwareScheduler(Scheduler):
         self.queue.sort(key=lambda r: self._key(server, r))
 
     def admit_order(self, server):
+        # chunked entries pass shared=0: their footprint() already nets out
+        # the streamed pages (subtracting the tail match again would double-
+        # count every page the chunk stream put in the pool)
         return sorted(
             self.waiting,
             key=lambda e: self._key(
-                server, e.req, e.match.n_shared if e.match is not None else 0
+                server, e.req,
+                0 if e.req.rid in server.chunks
+                else (e.match.n_shared if e.match is not None else 0),
             ),
         )
 

@@ -1,0 +1,289 @@
+"""Chunked prefill with streaming page-level KV handoff.
+
+The acceptance invariant: a server whose prefill engine has ``chunk_tokens``
+set emits token streams BIT-IDENTICAL to monolithic prefill for the same
+requests — greedy AND sampled, across attention / MLA / hybrid-mamba models,
+for chunk sizes that do and do not divide the prompt — while prefill happens
+in page-aligned slices whose K/V streams into the paged decode pool between
+other requests' turns (``kvcache.paged_append_chunk`` + the server's
+``ChunkPrefillState`` machine).  Plus the lifecycle invariants that make it
+safe: chunk holds are released on every exit path, cached chunks are skipped
+under a prefix cache (and streamed chunks registered), and a short request
+admits between a long prompt's chunks without perturbing either stream.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    PrefillEngine,
+    SamplingParams,
+    make_scheduler,
+)
+from repro.serving.prefix_cache import chunk_hashes
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg = reduced(ARCHS["minicpm3-4b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    """jamba: the conv window and SSD state must carry across chunks."""
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _server(params, cfg, *, chunk, temperature=0.0, prefix=False, n_pages=None,
+            max_slots=8, scheduler=None, seed=0):
+    sp = SamplingParams(temperature=temperature)
+    return DisaggregatedServer(
+        [PrefillEngine(params, cfg, sp, chunk_tokens=chunk)],
+        [DecodeEngine(params, cfg, max_slots=max_slots, max_len=256,
+                      sampling=sp, decode_block=8, paged=True, page_size=PAGE,
+                      n_pages=n_pages, prefix_cache=prefix, seed=seed)],
+        seed=seed, scheduler=scheduler,
+    )
+
+
+def _one(params, cfg, prompt, *, chunk, temperature=0.0, max_new=8):
+    srv = _server(params, cfg, chunk=chunk, temperature=temperature)
+    srv.submit(GenRequest(0, prompt, max_new_tokens=max_new))
+    out = srv.run()
+    return out[0], srv
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: chunked streams == monolithic streams, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 20.0])
+@pytest.mark.parametrize("prompt_len,chunk", [
+    (96, 32),   # chunk divides the prompt: the final chunk is a full chunk
+    (100, 32),  # ragged 4-token final chunk
+    (100, 48),  # chunk larger than a page multiple of the tail
+])
+def test_chunked_matches_monolithic(setup, temperature, prompt_len, chunk):
+    """Greedy AND sampled streams are bit-identical: every chunk runs the
+    prefix-offset path at absolute positions over [streamed KV ‖ chunk], and
+    the final (batch-padded) chunk samples the same first token a monolithic
+    prefill would."""
+    cfg, params = setup
+    prompt = np.random.default_rng(1).integers(0, cfg.vocab_size, size=prompt_len)
+    mono, _ = _one(params, cfg, prompt, chunk=None, temperature=temperature)
+    chunked, srv = _one(params, cfg, prompt, chunk=chunk, temperature=temperature)
+    assert chunked == mono
+    st = srv.prefills[0].stats
+    assert st["chunk_calls"] == -(-prompt_len // chunk)
+    assert st["max_call_tokens"] < 96  # no call ever saw the whole prompt
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature", [0.0, 20.0])
+def test_chunked_matches_monolithic_mla(mla_setup, temperature):
+    """MLA: the compressed prefix ckv is expanded through wkv_b chunk by
+    chunk, exactly as the monolithic prefill expands it."""
+    cfg, params = mla_setup
+    prompt = np.random.default_rng(2).integers(0, cfg.vocab_size, size=100)
+    mono, _ = _one(params, cfg, prompt, chunk=None, temperature=temperature)
+    chunked, _ = _one(params, cfg, prompt, chunk=32, temperature=temperature)
+    assert chunked == mono
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature", [0.0, 20.0])
+def test_chunked_matches_monolithic_hybrid(hybrid_setup, temperature):
+    """Hybrid-mamba: the conv window and SSD state carry across chunks
+    (boundaries land on SSD scan-chunk boundaries, so the recurrence replays
+    the monolithic computation bit for bit)."""
+    cfg, params = hybrid_setup
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab_size, size=100)
+    mono, _ = _one(params, cfg, prompt, chunk=None, temperature=temperature)
+    chunked, _ = _one(params, cfg, prompt, chunk=32, temperature=temperature)
+    assert chunked == mono
+
+
+def test_chunked_ragged_final_chunk_single_token(setup):
+    """A prompt of k * chunk + 1 leaves a 1-token final chunk — the logits
+    position — which must still reproduce the monolithic first token."""
+    cfg, params = setup
+    prompt = np.random.default_rng(4).integers(0, cfg.vocab_size, size=65)
+    mono, _ = _one(params, cfg, prompt, chunk=None)
+    chunked, _ = _one(params, cfg, prompt, chunk=32)
+    assert chunked == mono
+
+
+# ---------------------------------------------------------------------------
+# Scheduling: chunk-granular interleaving
+# ---------------------------------------------------------------------------
+
+
+def test_short_admits_between_chunks(setup):
+    """A short request queued behind a long prompt admits while the long is
+    still prefilling (chunk rounds rotate the long to the queue tail), and
+    NEITHER stream is perturbed vs an isolated run."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    long_p = rng.integers(0, cfg.vocab_size, size=100)
+    shorts = [rng.integers(0, cfg.vocab_size, size=10) for _ in range(3)]
+
+    srv = _server(params, cfg, chunk=32)
+    srv.submit(GenRequest(0, long_p, max_new_tokens=8))
+    for i, s in enumerate(shorts):
+        srv.submit(GenRequest(1 + i, s, max_new_tokens=8))
+    first_round = {}
+    r = 0
+    while srv.pending():
+        r += 1
+        srv.run_round()
+        for rid, req in srv.all_requests.items():
+            if req.tokens and rid not in first_round:
+                first_round[rid] = r
+        assert r < 100
+    assert first_round[1] < first_round[0], (
+        f"short got its first token in round {first_round[1]}, not before the "
+        f"long's final chunk (round {first_round[0]})"
+    )
+    for rid, req in srv.all_requests.items():
+        prompt = long_p if rid == 0 else shorts[rid - 1]
+        iso, _ = _one(params, cfg, prompt, chunk=None)
+        assert req.tokens == iso, f"stream {rid} perturbed by interleaving"
+
+
+@pytest.mark.slow
+def test_chunked_streams_under_kv_aware(setup):
+    """KVAwareScheduler ranks a mid-stream long prompt by its next-chunk
+    quantum; greedy streams stay bit-identical to isolated runs."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    long_p = rng.integers(0, cfg.vocab_size, size=100)
+    shorts = [rng.integers(0, cfg.vocab_size, size=10) for _ in range(3)]
+    srv = _server(params, cfg, chunk=32, scheduler=make_scheduler("kv-aware"))
+    srv.submit(GenRequest(0, long_p, max_new_tokens=8))
+    for i, s in enumerate(shorts):
+        srv.submit(GenRequest(1 + i, s, max_new_tokens=8))
+    out = srv.run()
+    assert len(out) == 4
+    for rid in out:
+        prompt = long_p if rid == 0 else shorts[rid - 1]
+        iso, _ = _one(params, cfg, prompt, chunk=None)
+        assert out[rid] == iso
+
+
+def test_chunked_tiny_pool_completes(setup):
+    """Pages are reserved chunk by chunk: a pool far smaller than
+    (every request's full footprint at once) still drains the workload —
+    blocked chunks wait at the queue head while decode frees pages."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    srv = _server(params, cfg, chunk=32, n_pages=12)
+    srv.submit(GenRequest(0, rng.integers(0, cfg.vocab_size, size=100),
+                          max_new_tokens=8))
+    for i in range(3):
+        srv.submit(GenRequest(1 + i, rng.integers(0, cfg.vocab_size, size=10),
+                              max_new_tokens=8))
+    out = srv.run()
+    assert len(out) == 4
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache interaction: cached chunks skipped, streamed chunks registered
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefix_cache_skips_and_registers(setup):
+    """Wave 1 streams a long prompt chunk by chunk and registers its
+    full-prompt chunks in the prefix index at admit; wave 2 (same prompt)
+    starts its cursor past the cached pages and recomputes only the tail —
+    with a bit-identical stream."""
+    cfg, params = setup
+    prompt = np.random.default_rng(8).integers(0, cfg.vocab_size, size=100)
+    srv = _server(params, cfg, chunk=32, prefix=True)
+    eng = srv.decodes[0]
+
+    srv.submit(GenRequest(0, prompt, max_new_tokens=8))
+    out1 = srv.run()
+    calls1 = srv.prefills[0].stats["chunk_calls"]
+    # the streamed full-prompt chunks are in the index (cap: >= 1 prompt
+    # token is always recomputed, so at most (len-1)//PAGE chunks register)
+    hashes = chunk_hashes(prompt, PAGE, eng.pages_per_slot)
+    n_cacheable = (len(prompt) - 1) // PAGE
+    registered = sum(h in eng.prefix for h in hashes[:n_cacheable])
+    assert registered == n_cacheable, f"{registered}/{n_cacheable} chunks registered"
+
+    srv.submit(GenRequest(10, prompt.copy(), max_new_tokens=8))
+    out2 = srv.run()
+    calls2 = srv.prefills[0].stats["chunk_calls"] - calls1
+    assert out2[10] == out1[0], "prefix-skipped chunked stream diverged"
+    assert calls2 < calls1, "cached chunks were not skipped"
+    assert eng.stats["shared_pages"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: holds, pins, and host state cannot leak
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_holds_released_on_every_exit(setup):
+    """After the workload drains, no chunk state, no host holds, no pins —
+    and (without a prefix cache) every device refcount is back to zero."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    srv = _server(params, cfg, chunk=32)
+    for i in range(2):
+        srv.submit(GenRequest(i, rng.integers(0, cfg.vocab_size, size=100),
+                              max_new_tokens=6))
+    srv.submit(GenRequest(5, rng.integers(0, cfg.vocab_size, size=100),
+                          max_new_tokens=1))  # prefill-only long request
+    out = srv.run()
+    assert len(out) == 3 and len(out[5]) == 1
+    eng = srv.decodes[0]
+    assert not srv.chunks
+    assert int((eng._href > 0).sum()) == 0
+    assert not eng._pins
+    assert int(np.asarray(eng.state.page_refs).sum()) == 0
+
+
+def test_prefill_only_chunked_matches_monolithic(setup):
+    """max_new_tokens=1 long request: the first token still comes from the
+    final chunk's logits, and the streamed pages are all freed."""
+    cfg, params = setup
+    prompt = np.random.default_rng(10).integers(0, cfg.vocab_size, size=100)
+    mono, _ = _one(params, cfg, prompt, chunk=None, max_new=1)
+    chunked, srv = _one(params, cfg, prompt, chunk=32, max_new=1)
+    assert chunked == mono
+    assert int(np.asarray(srv.decodes[0].state.page_refs).sum()) == 0
+
+
+def test_chunk_tokens_validation(setup, hybrid_setup):
+    """chunk_tokens must be page-aligned (engine-side check at routing) and,
+    for hybrids, a multiple of the SSD scan chunk."""
+    cfg, params = setup
+    with pytest.raises(ValueError, match="positive"):
+        PrefillEngine(params, cfg, chunk_tokens=0)
+    hcfg, hparams = hybrid_setup
+    with pytest.raises(ValueError, match="SSM"):
+        PrefillEngine(hparams, hcfg, chunk_tokens=24)  # not a multiple of 16
+    srv = _server(params, cfg, chunk=24)  # page size 16: not page-aligned
+    srv.submit(GenRequest(0, np.arange(100) % cfg.vocab_size, max_new_tokens=4))
+    with pytest.raises(ValueError, match="page_size"):
+        srv.run()

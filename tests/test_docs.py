@@ -1,0 +1,59 @@
+"""Docs cannot rot: the README / docs/serving.md checker is under test.
+
+The fast tier compiles every fenced python snippet and validates links and
+repo hygiene (cheap — no model runs); the ``slow`` case executes the
+snippets for real, exactly like the dedicated CI step does."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist_with_snippets():
+    for doc in check_docs.DOCS:
+        assert doc.exists(), f"{doc} missing"
+    # both documents carry at least one executable example
+    assert all(len(check_docs.python_blocks(d)) >= 1 for d in check_docs.DOCS)
+
+
+def test_snippets_compile_and_links_resolve():
+    errors = []
+    for doc in check_docs.DOCS:
+        errors += check_docs.check_snippets(doc, compile_only=True)
+        errors += check_docs.check_links(doc)
+    assert not errors, "\n".join(errors)
+
+
+def test_no_tracked_bytecode():
+    assert not check_docs.check_no_tracked_bytecode()
+
+
+def test_link_checker_catches_breakage(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [here](does/not/exist.md) and [ok](#anchor)\n")
+    errs = check_docs.check_links(bad)
+    assert len(errs) == 1 and "does/not/exist.md" in errs[0]
+
+
+def test_snippet_checker_catches_breakage(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("```python\ndef broken(:\n```\n")
+    errs = check_docs.check_snippets(bad, compile_only=True)
+    assert len(errs) == 1 and "SyntaxError" in errs[0]
+
+
+@pytest.mark.slow
+def test_snippets_execute():
+    """The real thing, in a subprocess so snippet state cannot leak into the
+    test session (CI runs the same command as a dedicated step)."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py")],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

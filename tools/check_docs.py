@@ -1,0 +1,113 @@
+"""Docs rot check: the fenced snippets in README.md and docs/serving.md must
+actually run, and the links between the markdown files must resolve.
+
+Docs that cannot break are docs nobody trusts, so CI executes them:
+
+* every fenced ```python block is executed in a fresh namespace with
+  ``src/`` on ``sys.path`` (``--compile-only`` downgrades to a syntax/
+  compile check for fast local runs — the tier-1 test uses it; CI runs the
+  real thing);
+* every relative markdown link ``[text](path)`` must point at a file that
+  exists (http(s) and pure-anchor links are skipped);
+* ``git ls-files`` must not contain compiled bytecode (``.pyc`` /
+  ``__pycache__``) — the tracked-bytecode regression this repo has already
+  shipped once.
+
+Run from anywhere: ``python tools/check_docs.py [--compile-only]``.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import subprocess
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = [REPO / "README.md", REPO / "docs" / "serving.md"]
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+# [text](target) — but not images ![..](..) and not inline code
+LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def python_blocks(path: Path) -> List[Tuple[int, str]]:
+    """(starting line, source) for every fenced ```python block."""
+    text = path.read_text()
+    out = []
+    for m in FENCE.finditer(text):
+        line = text[: m.start()].count("\n") + 2  # first line inside the fence
+        out.append((line, m.group(1)))
+    return out
+
+
+def _rel(path: Path) -> Path:
+    return path.relative_to(REPO) if path.is_relative_to(REPO) else path
+
+
+def check_snippets(path: Path, *, compile_only: bool) -> List[str]:
+    errors = []
+    for line, src in python_blocks(path):
+        name = f"{_rel(path)}:{line}"
+        try:
+            code = compile(src, name, "exec")
+            if not compile_only:
+                exec(code, {"__name__": f"doc_snippet_{line}"})  # noqa: S102
+        except Exception as e:  # noqa: BLE001 — any failure is doc rot
+            errors.append(f"{name}: snippet failed: {type(e).__name__}: {e}")
+    return errors
+
+
+def check_links(path: Path) -> List[str]:
+    errors = []
+    for m in LINK.finditer(path.read_text()):
+        target = m.group(1).split("#")[0]
+        if not target or target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (path.parent / target).exists():
+            errors.append(
+                f"{_rel(path)}: broken relative link -> {m.group(1)}"
+            )
+    return errors
+
+
+def check_no_tracked_bytecode() -> List[str]:
+    files = subprocess.run(
+        ["git", "ls-files"], cwd=REPO, capture_output=True, text=True, check=True
+    ).stdout.splitlines()
+    bad = [f for f in files if f.endswith(".pyc") or "__pycache__" in f]
+    return [f"tracked bytecode: {f} (add to .gitignore and git rm --cached)" for f in bad]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compile-only", action="store_true",
+                    help="compile snippets without executing them (fast local "
+                         "check; CI executes for real)")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(REPO / "src"))
+    errors: List[str] = []
+    for doc in DOCS:
+        if not doc.exists():
+            errors.append(f"missing doc: {_rel(doc)}")
+            continue
+        n = len(python_blocks(doc))
+        print(f"{_rel(doc)}: {n} python snippet(s), "
+              f"{'compiling' if args.compile_only else 'executing'}")
+        errors += check_snippets(doc, compile_only=args.compile_only)
+        errors += check_links(doc)
+    errors += check_no_tracked_bytecode()
+
+    for e in errors:
+        print(f"FAIL  {e}")
+    if errors:
+        print(f"{len(errors)} docs check(s) failed")
+        return 1
+    print("docs check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
