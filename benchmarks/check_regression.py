@@ -27,7 +27,12 @@ Failure conditions (``--tolerance`` defaults to 0.25):
   queue-wait p50/p99 in scheduling ROUNDS are pure queueing math — compared
   exactly — the KV-aware policy must keep beating FCFS on p99 (the
   head-of-line-blocking gate), the priority policy must still preempt, and
-  every cross-policy / preempted-resume stream mismatch count must be 0.
+  every cross-policy / preempted-resume stream mismatch count must be 0,
+* robustness (when the committed reference carries the section): the chaos
+  run's surviving streams must be bit-identical to the fault-free run and
+  the post-drain KV audit clean (always), and the fault counts / crash
+  recovery rounds / shed counts must match the committed reference exactly
+  when the fresh run used the committed fault seed.
 
 ``compare()`` is pure and imported by tier-1 tests, so the gate's logic is
 itself under test without paying for a bench run.  With
@@ -176,6 +181,53 @@ def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple
             f"{shape(r_ck, 'monolithic')} / {shape(r_ck, 'chunked')} — "
             f"call sizes and round counts are deterministic",
         )
+
+    # robustness (when the committed reference carries the section): chaos
+    # stream equivalence and a clean KV audit are unconditional; the fault /
+    # recovery / shed numbers are pure functions of the fault seed, so they
+    # compare exactly — but only when the fresh run used the committed seed
+    # (local --seed experimentation must not false-fail the gate)
+    r_rob = reference.get("robustness")
+    if r_rob is not None:
+        f_rob = fresh.get("robustness", {})
+        rmm = f_rob.get("stream_mismatches", -1)
+        add(
+            "robust_stream_mismatches",
+            rmm == 0,
+            f"{rmm} (acceptance: 0 — every surviving stream bit-identical "
+            f"to the fault-free run)",
+        )
+        raud = f_rob.get("audit_discrepancies", -1)
+        add(
+            "robust_audit_clean",
+            raud == 0,
+            f"{raud} (acceptance: 0 — KV refcounts conserved after the "
+            f"chaos drain)",
+        )
+        if f_rob.get("seed") == r_rob.get("seed"):
+            def rob_shape(d: dict) -> tuple:
+                cr = d.get("crash", {})
+                sh = d.get("shed", {})
+                return (d.get("faults_injected"), cr.get("round"),
+                        tuple(cr.get("affected", ())),
+                        cr.get("recovery_rounds"),
+                        sh.get("shed"), sh.get("served"))
+
+            add(
+                "robust_schedule_committed",
+                rob_shape(f_rob) == rob_shape(r_rob),
+                f"fresh {rob_shape(f_rob)} vs committed "
+                f"{rob_shape(r_rob)} — the fault schedule, crash recovery "
+                f"rounds, and shed counts are pure functions of the seed",
+            )
+        else:
+            add(
+                "robust_schedule_committed",
+                True,
+                f"skipped: fresh seed {f_rob.get('seed')} != committed "
+                f"{r_rob.get('seed')} (exact compare only on the committed "
+                f"seed)",
+            )
     return checks
 
 

@@ -27,6 +27,7 @@ import numpy as np
 from ..configs import ARCHS, reduced as reduce_cfg
 from ..models import model as M
 from ..serving import DecodeEngine, DisaggregatedServer, GenRequest, PrefillEngine, SamplingParams
+from ..serving.faults import FAULT_SITES, FaultPlan
 from ..serving.scheduler import SCHEDULERS, make_scheduler
 
 
@@ -81,6 +82,38 @@ def main():
                          "(private KV pages to host, prefix-shared pages "
                          "stay pooled) when a higher-priority request is "
                          "blocked; requires --paged")
+    ap.add_argument("--deadline-rounds", type=int, default=None,
+                    help="cancel (status DEADLINE) any request still "
+                         "unfinished this many scheduling rounds after "
+                         "submit")
+    ap.add_argument("--ttft-deadline", type=int, default=None,
+                    help="cancel (status DEADLINE) any request without a "
+                         "FIRST token this many rounds after submit")
+    ap.add_argument("--shed-after-rounds", type=int, default=None,
+                    help="load shedding: cancel (status SHED) queued "
+                         "requests that have waited this many rounds "
+                         "without starting prefill")
+    ap.add_argument("--audit-every", type=int, default=None,
+                    help="run the KV invariant auditor (refcount "
+                         "conservation, block-table validity, trash-page "
+                         "isolation) every N rounds; any discrepancy "
+                         "raises")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="chaos mode: inject this failure probability at "
+                         "every lifecycle seam (chunk append, admit, "
+                         "swap in/out), deterministically from "
+                         "--fault-seed; greedy streams stay bit-identical")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault-injection schedule (printed; "
+                         "replay any chaos run with the same seed)")
+    ap.add_argument("--crash-round", type=int, default=None,
+                    help="simulate a decode-engine crash at this round; "
+                         "in-flight requests are recovered (replay, or "
+                         "host-stash resubmission with --preserve-kv)")
+    ap.add_argument("--preserve-kv", action="store_true",
+                    help="crash recovery mode: the dead engine's HBM is "
+                         "still readable, so in-flight KV is extracted to "
+                         "host stashes instead of replaying from prompts")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
@@ -95,6 +128,10 @@ def main():
         ap.error("--swap requires --scheduler priority")
     if args.swap and not args.paged:
         ap.error("--swap requires --paged (page-level preemption)")
+    if args.preserve_kv and args.crash_round is None:
+        ap.error("--preserve-kv only makes sense with --crash-round")
+    if args.preserve_kv and not args.paged:
+        ap.error("--preserve-kv requires --paged (page-granular extraction)")
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -110,26 +147,46 @@ def main():
                      n_pages=args.pages, prefix_cache=args.prefix_cache)
         for i in range(args.decode_engines)
     ]
-    sched = make_scheduler(args.scheduler, swap=args.swap)
+    sched = make_scheduler(args.scheduler, swap=args.swap,
+                           shed_after_rounds=args.shed_after_rounds)
+    faults = None
+    if args.fault_rate is not None or args.crash_round is not None:
+        rates = (
+            {s: args.fault_rate for s in FAULT_SITES}
+            if args.fault_rate else {}
+        )
+        faults = FaultPlan(seed=args.fault_seed, rates=rates,
+                           crash_round=args.crash_round,
+                           preserve_kv=args.preserve_kv)
+        print(f"# chaos: fault seed {args.fault_seed} "
+              f"(replay with --fault-seed {args.fault_seed})")
     srv = DisaggregatedServer(prefills, decodes, seed=args.seed,
                               max_prefill_batch=args.prefill_batch,
-                              scheduler=sched)
+                              scheduler=sched, faults=faults,
+                              audit_every=args.audit_every)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 64)))
         prio = 1 if (args.scheduler == "priority" and i % 4 == 0) else 0
         srv.submit(GenRequest(i, prompt, max_new_tokens=args.max_new,
-                              priority=prio))
+                              priority=prio,
+                              deadline_rounds=args.deadline_rounds,
+                              ttft_deadline=args.ttft_deadline))
     t0 = time.time()
     results = srv.run()
     dt = time.time() - t0
+    outcomes = srv.outcomes()
+    statuses: dict = {}
+    for o in outcomes.values():
+        statuses[o.status] = statuses.get(o.status, 0) + 1
     n_tok = sum(len(v) for v in results.values())
     waits = sorted(sched.queue_wait_rounds.values())
-    print(json.dumps({
+    report = {
         "arch": cfg.name,
         "scheduler": sched.name,
         "requests": len(results),
+        "statuses": statuses,
         "total_new_tokens": n_tok,
         "wall_s": round(dt, 2),
         "tokens_per_s": round(n_tok / dt, 1),
@@ -139,7 +196,17 @@ def main():
         },
         "preemptions": sched.stats["preemptions"],
         "swap_ins": sched.stats["swap_ins"],
-    }))
+        "shed": sched.stats["shed"],
+    }
+    if faults is not None:
+        report["faults"] = {
+            "seed": args.fault_seed,
+            "injected": srv.faults.stats["injected"],
+            "crash_events": srv.crash_events,
+        }
+    if args.audit_every:
+        report["audit"] = "clean"  # audit(strict=True) would have raised
+    print(json.dumps(report))
     assert len(results) == args.requests, "not all requests completed"
 
 

@@ -28,9 +28,28 @@ tier-1 tests — docs/serving.md is the narrative guide):
 * ``PrefixMatch`` / ``ChunkPrefillState`` — introspection types for routed
   prefix hits and in-progress chunked prefills.
 * ``SchedulerExhausted`` — raised by ``run(max_steps=...)`` with the work
-  left intact (resumable), never silently dropping requests.
+  left intact (resumable) and a structured per-request status snapshot
+  (``statuses``: rid -> ``RequestOutcome``), never silently dropping
+  requests.
+* Request-lifecycle robustness: terminal statuses (``STATUS_FINISHED`` /
+  ``STATUS_CANCELLED`` / ``STATUS_DEADLINE`` / ``STATUS_FAILED`` /
+  ``STATUS_SHED``, collected in ``TERMINAL_STATUSES``) recorded on every
+  request; ``server.cancel`` aborts cleanly at any lifecycle stage;
+  ``GenRequest.deadline_rounds`` / ``ttft_deadline`` expire requests;
+  ``FaultPlan`` / ``FaultInjector`` (``serving.faults``) inject seeded,
+  deterministic failures at the lifecycle seams (``TransientFault`` is the
+  swap-out flavour); ``server.audit`` / ``DecodeEngine.audit`` run the KV
+  invariant auditor; ``server.crash_engine`` recovers a dead engine's
+  in-flight work.  See docs/serving.md §6.
 """
 from .engine import (  # noqa: F401
+    STATUS_CANCELLED,
+    STATUS_DEADLINE,
+    STATUS_FAILED,
+    STATUS_FINISHED,
+    STATUS_PENDING,
+    STATUS_SHED,
+    TERMINAL_STATUSES,
     ChunkPrefillState,
     DecodeEngine,
     DisaggregatedServer,
@@ -38,8 +57,10 @@ from .engine import (  # noqa: F401
     MonolithicEngine,
     PrefillEngine,
     PrefixMatch,
+    RequestOutcome,
     SchedulerExhausted,
 )
+from .faults import FAULT_SITES, FaultInjector, FaultPlan, TransientFault  # noqa: F401
 from .prefix_cache import PrefixIndex, chunk_hashes  # noqa: F401
 from .sampling import SamplingParams, sample  # noqa: F401
 from .scheduler import (  # noqa: F401

@@ -46,11 +46,26 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as M
 from . import kvcache
+from .faults import FaultInjector, FaultPlan, TransientFault
 from .prefix_cache import PrefixIndex, chunk_hashes
 from .sampling import SamplingParams, sample
 from .scheduler import FCFSScheduler, Scheduler, SwappedRequest, WaitingEntry
 
 DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
+
+# terminal request statuses (GenRequest.status): every request submitted to a
+# server ends in exactly one of these — results carry the status instead of
+# an exception, so one failing request cannot take down a batch
+STATUS_PENDING = "PENDING"      # not terminal: still moving through the system
+STATUS_FINISHED = "FINISHED"    # completed normally (EOS / max_new_tokens)
+STATUS_CANCELLED = "CANCELLED"  # caller cancelled (server.cancel)
+STATUS_DEADLINE = "DEADLINE"    # missed its deadline_rounds / ttft_deadline
+STATUS_FAILED = "FAILED"        # a faulted lifecycle seam burned its retries
+STATUS_SHED = "SHED"            # load-shedding policy dropped it under overload
+TERMINAL_STATUSES = frozenset(
+    {STATUS_FINISHED, STATUS_CANCELLED, STATUS_DEADLINE, STATUS_FAILED,
+     STATUS_SHED}
+)
 
 
 @dataclass
@@ -69,9 +84,18 @@ class GenRequest:
     # scheduling: higher wins under PriorityScheduler (FIFO within a class);
     # FCFS / KV-aware policies ignore it
     priority: int = 0
+    # deadlines, in scheduling ROUNDS from submit (None = none): the server
+    # cancels the request with terminal status DEADLINE once it has waited
+    # `deadline_rounds` rounds without finishing, or `ttft_deadline` rounds
+    # without emitting its first token
+    deadline_rounds: Optional[int] = None
+    ttft_deadline: Optional[int] = None
     # outputs
     tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # terminal status (see STATUS_*): PENDING while in flight; set exactly
+    # once when `done` flips
+    status: str = STATUS_PENDING
 
 
 @dataclass
@@ -152,18 +176,39 @@ def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
     )
 
 
+@dataclass
+class RequestOutcome:
+    """Structured per-request result snapshot (``server.outcomes()``).
+
+    status   terminal STATUS_* (or PENDING for a request still in flight)
+    stage    where in the lifecycle the request sits right now: one of
+             ``queued`` / ``chunking`` / ``waiting`` / ``decoding`` /
+             ``swapped`` / ``done`` (terminal)
+    tokens   the emitted stream so far (complete iff stage == "done")
+    """
+
+    rid: int
+    status: str
+    stage: str
+    tokens: List[int]
+
+
 class SchedulerExhausted(RuntimeError):
     """``run(max_steps=...)`` ran out of scheduling rounds with work left.
 
-    Carries what finished (``done``: rid -> tokens) and what did not
-    (``unfinished``: rids still queued / waiting / decoding) instead of
-    silently dropping in-flight requests.  Server state is left intact, so
-    calling ``run()`` again resumes where it stopped."""
+    Carries structured per-request outcomes instead of silently dropping
+    in-flight requests: ``statuses`` maps every submitted rid to a
+    ``RequestOutcome`` (status + lifecycle stage + tokens so far);
+    ``done`` / ``unfinished`` are the legacy quick views (rid -> tokens for
+    finished work, sorted unfinished rids).  Server state is left intact,
+    so calling ``run()`` again resumes where it stopped."""
 
-    def __init__(self, msg: str, done: Dict[int, List[int]], unfinished: List[int]):
+    def __init__(self, msg: str, done: Dict[int, List[int]], unfinished: List[int],
+                 statuses: Optional[Dict[int, RequestOutcome]] = None):
         super().__init__(msg)
         self.done = done
         self.unfinished = unfinished
+        self.statuses: Dict[int, RequestOutcome] = statuses or {}
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +503,9 @@ class DecodeEngine:
         self.donate = donate
         self.paged = paged
         self.prefix_cache = bool(paged and prefix_cache)
+        # fault injection (tests/chaos benches): the owning server shares its
+        # FaultInjector here; None = every lifecycle seam succeeds normally
+        self.faults: Optional[FaultInjector] = None
         self.slots = kvcache.SlotState(max_slots, max_len)
         # fold_in a tag so the decode sampling stream is never the same
         # threefry stream as a server/prefill PRNGKey(seed) chain
@@ -483,6 +531,9 @@ class DecodeEngine:
                 PrefixIndex(page_size) if self.prefix_cache else None
             )
             self._pins: Dict[int, List[int]] = {}  # rid -> pinned prefix pages
+            # page -> in-flight chunk-hold count (audit's third refcount
+            # term; _href already mirrors these for capacity math)
+            self._chunk_holds: Dict[int, int] = {}
             self._gather_fns: Dict[Tuple[int, int], Any] = {}
             self._append_fns: Dict[Tuple[int, int, int], Any] = {}  # (L1, B, n_alloc)
             self._fork_fn = None
@@ -792,7 +843,8 @@ class DecodeEngine:
         return self._gather_fns[key](self.state.caches, jnp.asarray(tables))
 
     def append_chunk(
-        self, kv_pack, n_tokens: int, *, batch_index: int = 0
+        self, kv_pack, n_tokens: int, *, batch_index: int = 0,
+        rid: Optional[int] = None,
     ) -> Optional[List[int]]:
         """Stream one prefill chunk's K/V into the page pool (chunked prefill).
 
@@ -808,9 +860,14 @@ class DecodeEngine:
         Returns the physical page ids (one small host sync per chunk — the
         same lifecycle cadence as the admit-time bookkeeping readback), or
         None when the pool cannot cover the chunk right now (the caller
-        leaves the request queued and retries after decode frees pages)."""
+        leaves the request queued and retries after decode frees pages).
+        ``rid`` only keys fault injection (the None-return contract doubles
+        as the injected-failure path — a faulted append is indistinguishable
+        from a capacity race the caller must survive anyway)."""
         if not self.paged:
             raise ValueError("append_chunk requires the paged KV cache")
+        if self.faults is not None and self.faults.should_fail("chunk_append", rid):
+            return None
         ps = self.page_size
         if n_tokens % ps:
             raise ValueError(f"chunk of {n_tokens} tokens is not page-aligned (ps={ps})")
@@ -840,6 +897,7 @@ class DecodeEngine:
         page_list = [int(p) for p in np.asarray(pages)]
         for p in page_list:
             self._href[p] += 1
+            self._chunk_holds[p] = self._chunk_holds.get(p, 0) + 1
         self.stats["chunk_pages"] = self.stats.get("chunk_pages", 0) + n_alloc
         return page_list
 
@@ -856,6 +914,11 @@ class DecodeEngine:
         )
         for p in pages:
             self._href[p] -= 1
+            n = self._chunk_holds.get(p, 0) - 1
+            if n <= 0:
+                self._chunk_holds.pop(p, None)
+            else:
+                self._chunk_holds[p] = n
 
     def register_chunk_pages(
         self, hashes: List[bytes], pages: List[int], start: int
@@ -921,6 +984,9 @@ class DecodeEngine:
         ``_pages_needed(orig_len, max_new)`` — keeping the allocator's
         pool-exhaustion-unreachable invariant intact through the overshoot
         margin."""
+        if (not resume and self.faults is not None
+                and self.faults.should_fail("admit", req.rid)):
+            return None  # injected KV-handoff failure: same contract as full
         max_new_eff = self.resume_budget(req) if resume else req.max_new_tokens
         if true_len + max_new_eff > self.max_len:
             raise ValueError(f"request {req.rid} needs {true_len + max_new_eff} > max_len")
@@ -1096,6 +1162,10 @@ class DecodeEngine:
             raise ValueError("swap_out requires the paged KV cache")
         if rid not in self.requests:
             raise KeyError(f"request {rid} is not decoding here")
+        if self.faults is not None and self.faults.should_fail("swap_out", rid):
+            raise TransientFault(
+                f"injected swap_out failure for request {rid} (nothing mutated)"
+            )
         slot = self.slots.request_ids.index(rid)
         req = self.requests[rid]
         length = self.slots.lengths[slot]
@@ -1176,6 +1246,8 @@ class DecodeEngine:
                 f"request {sw.req.rid} was swapped out of a different engine "
                 f"(its kept pages are physical ids in that engine's pool)"
             )
+        if self.faults is not None and self.faults.should_fail("swap_in", sw.req.rid):
+            return None  # injected scatter failure: stash + pins survive
         req = sw.req
         if not self.can_admit(sw.length, self.resume_budget(req),
                               n_shared=sw.n_keep):
@@ -1230,6 +1302,7 @@ class DecodeEngine:
                     req.eos_id is not None and tok == req.eos_id
                 ):
                     req.done = True
+                    req.status = STATUS_FINISHED
                     self.slots.free(slot)
                     freed.append(slot)
                     del self.requests[rid]
@@ -1257,6 +1330,116 @@ class DecodeEngine:
     def step(self) -> List[Tuple[int, int]]:
         """One decode iteration (seed-compatible granularity)."""
         return self.step_block(1)
+
+    # -- robustness: abort / crash / invariant audit ------------------------
+
+    def abort(self, rid: int) -> bool:
+        """Release a DECODING request's slot mid-stream (cancellation).
+
+        Exactly the engine half of the normal finish path in ``step_block``
+        minus the decode block: growth allowance zeroed, the slot's page
+        mappings dropped (decrement-only device release — pages shared with
+        other slots or the prefix index keep their bytes), per-request stats
+        pruned.  Returns False when ``rid`` is not decoding here (the caller
+        tries every engine).  Does NOT touch ``req.done``/``status`` — the
+        server owns request state; this is pure engine mechanism."""
+        if rid not in self.requests:
+            return False
+        slot = self.slots.request_ids.index(rid)
+        if self.paged:
+            self._growth[slot] = 0
+            self._slot_new[slot] = 0
+            for p in self._slot_pages[slot]:
+                self._href[p] -= 1
+            self._slot_pages[slot] = []
+            self.admit_new_pages.pop(rid, None)
+            self.admit_shared_pages.pop(rid, None)
+        self.slots.free(slot)
+        del self.requests[rid]
+        keep = np.ones((self.max_slots,), bool)
+        keep[slot] = False
+        self.state = self._release(self.state, jnp.asarray(keep))
+        return True
+
+    def crash(
+        self, *, preserve_kv: bool = False
+    ) -> Tuple[List[SwappedRequest], List[GenRequest]]:
+        """Simulate this engine dying: reinitialise ALL device state and
+        host mirrors, returning what can be recovered.
+
+        ``preserve_kv=True`` models "the engine wedged but its HBM is still
+        readable": every in-flight request's FULL KV is extracted to a
+        host-side stash (``kvcache.paged_swap_out`` from logical page 0 — a
+        ``SwappedRequest`` with ``n_keep == 0``, entirely host-resident) for
+        ordinary swap-in resubmission on the reinitialised engine, streams
+        bit-identical.  ``preserve_kv=False`` is the hard crash: the KV is
+        gone; in-flight requests are returned for replay from their prompts
+        (greedy streams re-derive identically).
+
+        The sampling PRNG key survives the reset (it is decode-global state,
+        not per-request — preserving it keeps the engine's step schedule,
+        and greedy streams never consult it anyway).  The prefix index is
+        rebuilt empty: its pages died with the pool, and losing the index
+        costs recompute, never correctness."""
+        stashes: List[SwappedRequest] = []
+        lost: List[GenRequest] = []
+        if preserve_kv and self.paged:
+            for slot, rid in enumerate(self.slots.request_ids):
+                if rid is None:
+                    continue
+                req = self.requests[rid]
+                length = self.slots.lengths[slot]
+                pack = kvcache.paged_swap_out(
+                    self.state, slot, length, self.cfg,
+                    page_size=self.page_size, start_page=0,
+                )
+                stashes.append(SwappedRequest(
+                    req=req, engine=self, pack=pack, length=length,
+                    last_token=req.tokens[-1], n_keep=0, kept_pages=[],
+                    hashes=[],
+                ))
+        else:
+            lost.extend(self.requests.values())
+        key = self.state.key
+        if self.paged:
+            self.state = kvcache.init_paged_decode_state(
+                self.cfg, self.max_slots, self.max_len, self.page_size,
+                self.n_pages, key,
+            )
+            self._href = np.zeros(self.n_pages, np.int64)
+            self._growth = [0] * self.max_slots
+            self._slot_new = [0] * self.max_slots
+            self._slot_pages = [[] for _ in range(self.max_slots)]
+            self._chunk_holds = {}
+            self._pins = {}
+            if self.prefix is not None:
+                self.prefix = PrefixIndex(self.page_size)
+            self.admit_new_pages = {}
+            self.admit_shared_pages = {}
+            self.stats["crashes"] = self.stats.get("crashes", 0) + 1
+        else:
+            self.state = kvcache.init_decode_state(
+                self.cfg, self.max_slots, self.max_len, key
+            )
+        self.slots = kvcache.SlotState(self.max_slots, self.max_len)
+        self.requests = {}
+        return stashes, lost
+
+    def audit(self) -> kvcache.AuditReport:
+        """Run the on-device KV invariant auditor against this engine's
+        state + host mirrors (``kvcache.audit``): refcount conservation,
+        block-table validity, trash-page isolation.  Slab engines have no
+        refcounted allocator to audit and report trivially clean."""
+        if not self.paged:
+            return kvcache.AuditReport(ok=True, n_pages=0, discrepancies=[])
+        index_pages = self.prefix.pages() if self.prefix is not None else ()
+        chunk_holds = [
+            p for p, n in self._chunk_holds.items() for _ in range(n)
+        ]
+        return kvcache.audit(
+            self.state, page_size=self.page_size, index_pages=index_pages,
+            chunk_holds=chunk_holds, href=self._href,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -1317,6 +1500,8 @@ class DisaggregatedServer:
         seed: int = 0,
         max_prefill_batch: int = 8,
         scheduler: Optional[Scheduler] = None,
+        faults: Optional[object] = None,
+        audit_every: Optional[int] = None,
     ):
         self.prefills = prefill_engines
         self.decodes = decode_engines
@@ -1324,6 +1509,20 @@ class DisaggregatedServer:
         self.key = jax.random.PRNGKey(seed)
         self.max_prefill_batch = max(1, max_prefill_batch)
         self.scheduler = scheduler if scheduler is not None else FCFSScheduler()
+        # fault injection (serving.faults): the server owns ONE injector and
+        # shares it with every decode engine so the whole fault schedule is
+        # drawn from a single seeded stream in scheduler order
+        if faults is not None and isinstance(faults, FaultPlan):
+            faults = FaultInjector(faults)
+        self.faults: Optional[FaultInjector] = faults
+        if self.faults is not None:
+            for d in self.decodes:
+                d.faults = self.faults
+        # run the KV invariant auditor (strict) every N scheduling rounds
+        self.audit_every = audit_every
+        # one dict per simulated engine crash: round, replayed/stashed rids
+        self.crash_events: List[dict] = []
+        self._has_deadlines = False  # skip the deadline sweep until one exists
         self.all_requests: Dict[int, GenRequest] = {}
         self.peak_active = 0  # max concurrent decode requests seen (for benchmarks)
         self._rr = 0
@@ -1380,6 +1579,8 @@ class DisaggregatedServer:
                 f"{req.max_new_tokens} exceeds every decode engine's capacity "
                 f"(max_len {cap})"
             )
+        if req.deadline_rounds is not None or req.ttft_deadline is not None:
+            self._has_deadlines = True
         self.scheduler.add(req)
         self.all_requests[req.rid] = req
 
@@ -1404,11 +1605,189 @@ class DisaggregatedServer:
         regression)."""
         self._finish_chunked(rid, admitted=False)
         self.scheduler.forget(rid)
+        if self.faults is not None:
+            self.faults.forget(rid)
         for d in self.decodes:
             self._hash_memo.pop((rid, getattr(d, "page_size", 0)), None)
             if getattr(d, "prefix", None) is not None:
                 d.release_prefix_pin(rid)
                 d.prefix.swap_unpin(rid)
+
+    # -- robustness: cancellation, deadlines, crash recovery, auditing ------
+
+    def _stage_of(self, rid: int) -> str:
+        """Which lifecycle stage a request currently occupies (see
+        docs/serving.md state diagram): queued -> chunking -> waiting ->
+        decoding -> swapped -> done."""
+        req = self.all_requests.get(rid)
+        if req is not None and req.done:
+            return "done"
+        if rid in self.chunks:
+            return "chunking"
+        s = self.scheduler
+        if any(r.rid == rid for r in s.queue):
+            return "queued"
+        if any(e.req.rid == rid for e in s.waiting):
+            return "waiting"
+        if any(sw.req.rid == rid for sw in s.swapped):
+            return "swapped"
+        if any(rid in d.requests for d in self.decodes):
+            return "decoding"
+        return "unknown"
+
+    def cancel(self, rid: int, *, status: str = STATUS_CANCELLED) -> bool:
+        """Cleanly abort a request at WHATEVER lifecycle stage it occupies —
+        queued, mid-chunk-prefill, prefilled-waiting, decoding, or
+        swapped-out — returning every resource it holds (chunk holds, prefix
+        pins, swap pins, device page refs) to zero.  Returns False when the
+        request is unknown or already terminal (cancellation raced a
+        finish: the finish wins and keeps its tokens).
+
+        ``status`` is recorded on the request (``CANCELLED`` by default;
+        the deadline sweep passes ``DEADLINE``, load shedding ``SHED``, and
+        fault exhaustion ``FAILED``).  Tokens already streamed stay on
+        ``req.tokens`` — a cancelled stream is truncated, not erased."""
+        req = self.all_requests.get(rid)
+        if req is None or req.done:
+            return False
+        s = self.scheduler
+        # queued (incl. mid-chunk: the request sits at the queue head between
+        # chunks; _forget below tears down the chunk cursor and its holds)
+        s.queue = [r for r in s.queue if r.rid != rid]
+        # prefilled-waiting: drop the entry; _forget releases the match pin
+        s.waiting = [e for e in s.waiting if e.req.rid != rid]
+        # swapped-out: drop the host stash; _forget releases the swap pins
+        s.swapped = [sw for sw in s.swapped if sw.req.rid != rid]
+        # decoding: free the device slot on whichever engine holds it
+        for d in self.decodes:
+            if d.abort(rid):
+                break
+        req.done = True
+        req.status = status
+        self._forget(rid)
+        return True
+
+    def _enforce_deadlines(self) -> None:
+        """Cancel (status DEADLINE) every live request past its deadline:
+        ``deadline_rounds`` bounds total scheduling rounds since submit,
+        ``ttft_deadline`` bounds rounds to the FIRST token.  Runs at the top
+        of each round, before any work is spent on expired requests."""
+        s = self.scheduler
+        for rid, req in list(self.all_requests.items()):
+            if req.done:
+                continue
+            waited = s.round - s.submit_round.get(rid, s.round)
+            if req.deadline_rounds is not None and waited >= req.deadline_rounds:
+                self.cancel(rid, status=STATUS_DEADLINE)
+            elif (
+                req.ttft_deadline is not None
+                and not req.tokens
+                and waited >= req.ttft_deadline
+            ):
+                self.cancel(rid, status=STATUS_DEADLINE)
+
+    def crash_engine(self, engine: DecodeEngine, *, preserve_kv: bool = False):
+        """Simulate ``engine`` dying mid-trace and recover every request that
+        touched it (the fault plan's ``crash_round`` routes here).
+
+        Requests merely ROUTED to the dead engine (prefilled-waiting with a
+        prefix match there, mid-chunk streams, swap stashes keeping device
+        pages there) lose KV that lived in its pool and REPLAY: tokens are
+        reset and the bare request requeues, rerouted from scratch —
+        prefix-cache hits on surviving engines make the replay cheap, and
+        greedy streams re-derive bit-identically.  In-flight DECODING
+        requests either replay too (hard crash) or — ``preserve_kv`` — are
+        extracted to host stashes and resubmitted through the ordinary
+        swap-in path on the reinitialised engine (see ``DecodeEngine.crash``).
+        Returns the set of affected rids; details land on
+        ``self.crash_events``."""
+        s = self.scheduler
+        replay: List[GenRequest] = []
+        # waiting entries whose prefix match pinned pages on the dead engine
+        # (their uncached-tail KV pack references those pages at admit time);
+        # matchless entries admit self-contained packs and survive anywhere
+        kept_waiting = []
+        for e in s.waiting:
+            if e.engine is engine and e.match is not None and e.match.n_shared > 0:
+                replay.append(e.req)
+            else:
+                kept_waiting.append(e)
+        s.waiting = kept_waiting
+        # mid-chunk streams: their pages died with the pool.  Pop the cursor
+        # WITHOUT _finish_chunked — releasing holds against the about-to-be
+        # reinitialised state would corrupt the fresh refcounts.  The request
+        # itself is still in the queue; reset it to restart chunking.
+        for rid, st in list(self.chunks.items()):
+            if st.engine is engine:
+                del self.chunks[rid]
+                replay.append(st.req)
+        # swap stashes keeping device pages on the dead engine (n_keep > 0);
+        # fully host-side packs (n_keep == 0) survive a dead pool untouched
+        kept_swapped = []
+        for sw in s.swapped:
+            if sw.engine is engine and sw.n_keep > 0:
+                replay.append(sw.req)
+            else:
+                kept_swapped.append(sw)
+        s.swapped = kept_swapped
+        stashes, lost = engine.crash(preserve_kv=preserve_kv)
+        s.swapped.extend(stashes)
+        replay.extend(lost)
+        affected = {r.rid for r in replay} | {sw.req.rid for sw in stashes}
+        seen = set()
+        for req in replay:
+            if req.rid in seen:
+                continue
+            seen.add(req.rid)
+            req.tokens = []
+            req.done = False
+            req.status = STATUS_PENDING
+            s.queue = [r for r in s.queue if r.rid != req.rid]
+            s.forget(req.rid)
+            for d in self.decodes:
+                self._hash_memo.pop((req.rid, getattr(d, "page_size", 0)), None)
+                if d is not engine and getattr(d, "prefix", None) is not None:
+                    d.release_prefix_pin(req.rid)
+                    d.prefix.swap_unpin(req.rid)
+            s.add(req)  # fresh submit bookkeeping; rerouted from scratch
+        self.crash_events.append({
+            "round": s.round,
+            "replayed": sorted(seen),
+            "stashed": sorted(sw.req.rid for sw in stashes),
+        })
+        return affected
+
+    def outcomes(self) -> Dict[int, "RequestOutcome"]:
+        """Structured per-request status snapshot: terminal status (or
+        PENDING), current lifecycle stage, and the tokens streamed so far.
+        This is what ``SchedulerExhausted.statuses`` carries."""
+        out: Dict[int, RequestOutcome] = {}
+        for rid, req in self.all_requests.items():
+            status = req.status
+            if req.done and status == STATUS_PENDING:
+                status = STATUS_FINISHED  # finished through a direct-engine path
+            out[rid] = RequestOutcome(
+                rid=rid, status=status, stage=self._stage_of(rid),
+                tokens=list(req.tokens),
+            )
+        return out
+
+    def audit(self, strict: bool = False) -> List[kvcache.AuditReport]:
+        """Run the KV invariant auditor on every decode engine.  With
+        ``strict`` raise AssertionError on any discrepancy (how
+        ``audit_every`` and the chaos tests consume it)."""
+        reports = [d.audit() for d in self.decodes]
+        if strict:
+            bad = [
+                f"engine {i}: {line}"
+                for i, rep in enumerate(reports) if not rep.ok
+                for line in rep.discrepancies
+            ]
+            if bad:
+                raise AssertionError(
+                    "KV invariant audit failed:\n  " + "\n  ".join(bad)
+                )
+        return reports
 
     # -- chunked prefill (the streaming page-level KV handoff) --------------
 
@@ -1578,6 +1957,7 @@ class DisaggregatedServer:
             if head.max_new_tokens <= 1:
                 head.tokens.append(tok)
                 head.done = True
+                head.status = STATUS_FINISHED
                 sched.note_admitted(head.rid)
                 self._forget(head.rid)  # releases the chunk holds and pins
             else:
@@ -1585,8 +1965,15 @@ class DisaggregatedServer:
                     WaitingEntry(head, kvb, 0, tok, len(head.prompt), m, d)
                 )
         else:
-            pages = d.append_chunk(kvb, n)
-            if pages is None:  # capacity raced away; recompute next round
+            pages = d.append_chunk(kvb, n, rid=head.rid)
+            if pages is None:  # capacity raced away (or an injected page-
+                # stream fault); recompute next round — unless the fault plan
+                # says this request's stream is permanently broken
+                if self.faults is not None and self.faults.exhausted(
+                    "chunk_append", head.rid
+                ):
+                    self.cancel(head.rid, status=STATUS_FAILED)
+                    return
                 sched.queue.insert(0, head)
                 return
             st.pages.extend(pages)
@@ -1654,6 +2041,7 @@ class DisaggregatedServer:
             if req.max_new_tokens <= 1:
                 req.tokens.append(toks[i])
                 req.done = True
+                req.status = STATUS_FINISHED
                 if m is not None:
                     d.release_prefix_pin(req.rid)
                 sched.note_admitted(req.rid)
@@ -1702,6 +2090,25 @@ class DisaggregatedServer:
         (with the preemption hook), fused decode blocks."""
         sched = self.scheduler
         sched.begin_round(self)
+        # 0) failure machinery first: the fault clock ticks (in lockstep with
+        # the scheduler round), a planned engine crash fires, expired
+        # deadlines cancel, and the shedding policy drops hopeless queue
+        # entries — all BEFORE any work is spent on them
+        if self.faults is not None:
+            self.faults.begin_round()
+            if self.faults.crash_due():
+                victim = self.decodes[
+                    self.faults.plan.crash_engine % len(self.decodes)
+                ]
+                self.crash_engine(
+                    victim, preserve_kv=self.faults.plan.preserve_kv
+                )
+        if self._has_deadlines:
+            self._enforce_deadlines()
+        if sched.shed_after_rounds is not None:
+            for r in sched.shed(self):
+                if self.cancel(r.rid, status=STATUS_SHED):
+                    sched.stats["shed"] += 1
         # 1) one same-bucket prefill batch per round (round-robin engines).
         # Gate on free decode capacity: each waiting entry pins its whole
         # padded batch pack on device, so prefilling ahead of slots the
@@ -1723,8 +2130,19 @@ class DisaggregatedServer:
         # then waiting entries in policy order; a blocked entry gives the
         # policy one preemption attempt before it stays waiting
         sched.try_swap_in(self)
+        if self.faults is not None and self.faults.plan.give_up:
+            # a give_up plan turns exhausted retry budgets into terminal
+            # FAILED statuses instead of retrying forever
+            for sw in list(sched.swapped):
+                if self.faults.exhausted("swap_in", sw.req.rid):
+                    self.cancel(sw.req.rid, status=STATUS_FAILED)
         admitted = set()
         for e in sched.admit_order(self):
+            if self.faults is not None and self.faults.exhausted(
+                "admit", e.req.rid
+            ):
+                self.cancel(e.req.rid, status=STATUS_FAILED)
+                continue  # cancel already removed it from waiting
             ok = self._try_admit(e)
             if not ok and sched.on_blocked(self, e):
                 ok = self._try_admit(e)
@@ -1746,11 +2164,24 @@ class DisaggregatedServer:
                 req = self.all_requests.get(rid)
                 if req is not None and req.done:
                     self._forget(rid)
+        # 4) periodic KV invariant audit (strict: any refcount / block-table
+        # discrepancy is a bug worth dying loudly for, even in production)
+        if self.audit_every and sched.round % self.audit_every == 0:
+            self.audit(strict=True)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Drive to completion.  Raises ``SchedulerExhausted`` (carrying the
-        finished and unfinished request ids) if ``max_steps`` rounds pass with
-        requests still in flight, instead of silently dropping them."""
+        """Drive to completion; returns ``{rid: tokens}`` for every request
+        that reached a terminal status (including cancelled/expired ones —
+        check ``req.status`` or ``self.outcomes()`` to tell them apart).
+
+        Raises ``SchedulerExhausted`` if ``max_steps`` rounds pass with
+        requests still in flight.  RESUME CONTRACT: the exception carries a
+        structured snapshot (``e.statuses``: rid -> ``RequestOutcome`` with
+        terminal-or-PENDING status, current lifecycle stage, tokens so far)
+        and the server is left fully intact — queued/waiting/swapped/decoding
+        state, device pages, pins, and holds are all live.  The caller may
+        triage (e.g. ``server.cancel`` the stragglers) and simply call
+        ``run()`` again to continue where it stopped; nothing is dropped."""
         steps = 0
         while self.pending() and steps < max_steps:
             steps += 1
@@ -1765,6 +2196,7 @@ class DisaggregatedServer:
                 f"unfinished: {unfinished[:8]}{'...' if len(unfinished) > 8 else ''}",
                 done=done,
                 unfinished=unfinished,
+                statuses=self.outcomes(),
             )
         return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
 
@@ -1820,6 +2252,7 @@ class MonolithicEngine:
                     if req.max_new_tokens <= 1:
                         req.tokens.append(tok)
                         req.done = True
+                        req.status = STATUS_FINISHED
                     else:
                         self.decode.admit(req, kv, tok, true_len)
             self.decode.step_block()
@@ -1828,10 +2261,23 @@ class MonolithicEngine:
             unfinished = sorted(
                 rid for rid, r in self.all_requests.items() if not r.done
             )
+            statuses = {
+                rid: RequestOutcome(
+                    rid=rid,
+                    status=r.status if r.status != STATUS_PENDING or not r.done
+                    else STATUS_FINISHED,
+                    stage="done" if r.done
+                    else "decoding" if rid in self.decode.requests
+                    else "queued",
+                    tokens=list(r.tokens),
+                )
+                for rid, r in self.all_requests.items()
+            }
             raise SchedulerExhausted(
                 f"hit max_steps={max_steps} with {len(unfinished)} request(s) "
                 f"unfinished: {unfinished[:8]}{'...' if len(unfinished) > 8 else ''}",
                 done=done,
                 unfinished=unfinished,
+                statuses=statuses,
             )
         return {rid: r.tokens for rid, r in self.all_requests.items() if r.done}

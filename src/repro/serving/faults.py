@@ -1,0 +1,189 @@
+"""Deterministic fault injection for the serving stack's lifecycle seams.
+
+Production disaggregated serving treats failure handling as a first-class
+subsystem: KV transfers time out, engines wedge mid-decode, admission races
+lose.  This module supplies the test/bench half of that story — a seeded
+``FaultPlan`` whose injector makes the *existing* lifecycle seams fail on
+purpose, deterministically, so the recovery paths (retry, requeue, crash
+resubmission, replay) are exercised and gated in CI rather than discovered
+in production.
+
+Injection sites (chosen because each already has a caller-visible "try
+again later" contract, so a fault is indistinguishable from a capacity
+race the code must survive anyway):
+
+``chunk_append``   ``DecodeEngine.append_chunk`` returns None — the chunk's
+                   page stream "failed"; the server leaves the request at
+                   the queue head and recomputes the chunk next round.
+``admit``          ``DecodeEngine.admit`` returns None — the KV handoff
+                   "failed"; the entry stays waiting and retries.
+``swap_in``        ``DecodeEngine.swap_in`` returns None — the host->device
+                   scatter "failed"; the stash (and its pins) survive.
+``swap_out``       ``DecodeEngine.swap_out`` raises ``TransientFault`` —
+                   the device->host pack "failed"; the preemption policy
+                   skips the victim this round (nothing was mutated).
+
+Plus one whole-engine failure: ``crash_round`` simulates a ``DecodeEngine``
+dying mid-trace (``DisaggregatedServer.crash_engine``): its device state is
+reinitialised and every in-flight request is either resubmitted from a
+host-side stash (``preserve_kv=True`` — the "engine wedged but HBM is
+readable" case, recovered via ``kvcache.paged_extract_request``) or
+replayed from the prompt (``preserve_kv=False`` — the hard crash; greedy
+streams re-derive bit-identically).
+
+Determinism contract: one ``numpy`` Generator seeded from the plan, drawn
+once per (site, request) attempt in scheduler order.  Under deterministic
+scheduling the whole fault schedule is a pure function of
+``(plan.seed, workload)`` — any chaos-test failure replays with one
+command.  Retries are bounded: after ``max_retries`` failed attempts a
+site either clears (the fault "heals", default) or — ``give_up=True`` —
+reports the request as permanently failed (``exhausted()`` turns True and
+the server cancels it with status ``FAILED``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+#: the injectable lifecycle seams (see module docstring)
+FAULT_SITES = ("chunk_append", "admit", "swap_in", "swap_out")
+
+
+class TransientFault(RuntimeError):
+    """A retryable injected failure at a lifecycle seam whose contract is an
+    exception rather than a None return (currently only ``swap_out``).  The
+    operation did NOT happen; no state was mutated; the caller may retry."""
+
+
+@dataclass
+class FaultPlan:
+    """Seeded, declarative description of what should fail and when.
+
+    seed            RNG seed — the whole fault schedule is a pure function
+                    of it (print it; replay with it)
+    rates           per-site failure probability in [0, 1] (sites absent or
+                    at 0.0 never fail); see ``FAULT_SITES``
+    max_retries     failed attempts per (site, request) before the fault
+                    either clears or (``give_up``) turns permanent
+    backoff_rounds  extra rounds a faulted (site, request) keeps failing
+                    without a new draw, scaled by the attempt count
+                    (0 = retry immediately next round)
+    give_up         after ``max_retries``: True -> the request is
+                    permanently failed (server cancels it with status
+                    ``FAILED``); False (default) -> the fault heals and the
+                    next attempt draws normally
+    crash_round     simulate a whole-DecodeEngine crash at this scheduling
+                    round (None = never)
+    crash_engine    index (mod the server's decode list) of the engine to
+                    crash
+    preserve_kv     crash recovery mode: True = the engine's HBM is still
+                    readable, in-flight requests are extracted to host
+                    stashes and resubmitted; False = hard crash, in-flight
+                    requests replay from their prompts
+    """
+
+    seed: int = 0
+    rates: Dict[str, float] = field(default_factory=dict)
+    max_retries: int = 8
+    backoff_rounds: int = 0
+    give_up: bool = False
+    crash_round: Optional[int] = None
+    crash_engine: int = 0
+    preserve_kv: bool = False
+
+    def __post_init__(self):
+        unknown = set(self.rates) - set(FAULT_SITES)
+        if unknown:
+            raise ValueError(
+                f"unknown fault site(s) {sorted(unknown)}; pick from {FAULT_SITES}"
+            )
+
+
+class FaultInjector:
+    """Executes a ``FaultPlan``: one seeded Generator, per-(site, request)
+    attempt counters, round-scaled backoff, and the crash trigger.
+
+    The server owns exactly one injector and shares it with its decode
+    engines; every ``should_fail`` call draws (or consults backoff) in
+    deterministic scheduling order, so two runs with the same plan and
+    workload inject byte-identical fault schedules.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.rng = np.random.default_rng(plan.seed)
+        self.round = 0
+        # (site, rid) -> consecutive failed attempts / earliest retry round
+        self.attempts: Dict[Tuple[str, Optional[int]], int] = {}
+        self.backoff_until: Dict[Tuple[str, Optional[int]], int] = {}
+        self._crashed = False
+        self.stats = {"injected": {s: 0 for s in FAULT_SITES}, "crashes": 0}
+
+    def begin_round(self) -> None:
+        """Advance the injector's round clock (drives backoff + the crash)."""
+        self.round += 1
+
+    def should_fail(self, site: str, rid: Optional[int] = None) -> bool:
+        """Whether this attempt at ``site`` for request ``rid`` fails.
+
+        Draws at most once; a (site, request) under backoff keeps failing
+        without a draw so the retry cadence — not the retry count — is what
+        backoff stretches.  After ``max_retries`` failures the fault either
+        clears (default: this attempt succeeds and the counters reset) or,
+        with ``give_up``, keeps failing forever — the caller is expected to
+        notice ``exhausted()`` and fail the request out structurally."""
+        rate = self.plan.rates.get(site, 0.0)
+        if rate <= 0.0:
+            return False
+        key = (site, rid)
+        n = self.attempts.get(key, 0)
+        if n >= self.plan.max_retries:
+            if self.plan.give_up:
+                return True  # permanent: exhausted() tells the caller why
+            self.attempts.pop(key, None)  # bounded retry: the fault heals
+            self.backoff_until.pop(key, None)
+            return False
+        if self.round < self.backoff_until.get(key, 0):
+            return True  # still backing off; no draw, no new attempt
+        if float(self.rng.random()) < rate:
+            self.attempts[key] = n + 1
+            self.backoff_until[key] = (
+                self.round + self.plan.backoff_rounds * (n + 1)
+            )
+            self.stats["injected"][site] += 1
+            return True
+        self.attempts.pop(key, None)
+        self.backoff_until.pop(key, None)
+        return False
+
+    def exhausted(self, site: str, rid: Optional[int] = None) -> bool:
+        """True when (site, rid) burned its whole retry budget under a
+        ``give_up`` plan — the caller should fail the request structurally
+        (terminal status ``FAILED``) instead of retrying forever."""
+        return (
+            self.plan.give_up
+            and self.attempts.get((site, rid), 0) >= self.plan.max_retries
+        )
+
+    def crash_due(self) -> bool:
+        """Whether the planned engine crash fires THIS round (consumed: the
+        plan crashes at most once)."""
+        if (
+            self.plan.crash_round is not None
+            and not self._crashed
+            and self.round >= self.plan.crash_round
+        ):
+            self._crashed = True
+            self.stats["crashes"] += 1
+            return True
+        return False
+
+    def forget(self, rid: int) -> None:
+        """Drop per-request attempt state (a request that exited the system
+        must not leak injector bookkeeping)."""
+        for key in [k for k in self.attempts if k[1] == rid]:
+            del self.attempts[key]
+        for key in [k for k in self.backoff_until if k[1] == rid]:
+            del self.backoff_until[key]

@@ -84,6 +84,7 @@ from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import model as M
@@ -683,6 +684,120 @@ def gather_prefix_pack(caches: Cache, tables, cfg: ModelConfig) -> Cache:
         else:
             out.append(None)
     return out
+
+
+class AuditReport(NamedTuple):
+    """Result of ``audit()``: ``ok`` iff every invariant held; the
+    discrepancy strings name the page/slot and the broken invariant."""
+
+    ok: bool
+    n_pages: int
+    discrepancies: List[str]
+
+
+def audit(
+    state: PagedDecodeState,
+    *,
+    page_size: int,
+    index_pages=(),
+    chunk_holds=None,
+    href=None,
+) -> AuditReport:
+    """On-device KV invariant auditor (host-syncs the small allocator arrays
+    — refcounts, block tables, positions — never the pools themselves).
+
+    Invariants checked, in terms of the refcount conservation law the whole
+    paged design rests on (``page_refs[p]`` == number of live holders):
+
+    1. **block-table validity** — every entry is a real page id or the trash
+       page; an INACTIVE slot's row is all-trash (release resets rows); an
+       ACTIVE slot's mapped region ``[0, ceil(position / page_size))``
+       contains no trash entry (decode would silently write into the trash
+       page) and nothing past the region is mapped (a stale mapping holds a
+       phantom ref).
+    2. **refcount conservation** — for every page,
+       ``page_refs[p] == (# active block-table mappings of p)
+       + (# prefix-index entries holding p) + (# in-flight chunk holds)``.
+       Growth pages decode allocated mid-block are counted by their
+       block-table mapping, so the law covers them with no extra term.
+    3. **non-negativity** — no refcount underflow (a double release).
+    4. **host-mirror sanity** (when ``href`` is given) — the engine's
+       admit-time hold mirror never exceeds the device truth
+       (``href[p] <= refs[p]``; decode-growth pages legitimately have
+       device refs with no mirror entry, never the reverse).
+
+    ``index_pages`` / ``chunk_holds`` are iterables of page ids WITH
+    multiplicity (one occurrence per hold).  Pure read-only host math over
+    one sync of the small arrays — safe to run every N rounds in production
+    and after every drain in tests.
+    """
+    refs = np.asarray(state.page_refs)
+    bt = np.asarray(state.block_tables)
+    active = np.asarray(state.active)
+    positions = np.asarray(state.positions)
+    n_pages = int(refs.shape[0])
+    max_slots, pages_per_slot = bt.shape
+    probs: List[str] = []
+
+    expected = np.zeros(n_pages, np.int64)
+    for p in index_pages:
+        if 0 <= p < n_pages:
+            expected[p] += 1
+        else:
+            probs.append(f"index holds out-of-range page {p}")
+    for p in chunk_holds or ():
+        if 0 <= p < n_pages:
+            expected[p] += 1
+        else:
+            probs.append(f"chunk hold on out-of-range page {p}")
+
+    for slot in range(max_slots):
+        row = bt[slot]
+        if (row < 0).any() or (row > n_pages).any():
+            probs.append(f"slot {slot}: block-table entry out of range")
+            continue
+        if not active[slot]:
+            if (row != n_pages).any():
+                probs.append(
+                    f"slot {slot}: inactive but still maps "
+                    f"{int((row != n_pages).sum())} page(s) (phantom refs)"
+                )
+            continue
+        n_mapped = -(-int(positions[slot]) // page_size)
+        n_mapped = min(n_mapped, pages_per_slot)
+        mapped, rest = row[:n_mapped], row[n_mapped:]
+        if (mapped == n_pages).any():
+            probs.append(
+                f"slot {slot}: trash page inside the mapped region "
+                f"(position {int(positions[slot])})"
+            )
+        if (rest != n_pages).any():
+            probs.append(
+                f"slot {slot}: {int((rest != n_pages).sum())} stale "
+                f"mapping(s) past the write head (phantom refs)"
+            )
+        for p in mapped[mapped < n_pages]:
+            expected[p] += 1
+
+    neg = np.nonzero(refs < 0)[0]
+    for p in neg[:8]:
+        probs.append(f"page {int(p)}: negative refcount {int(refs[p])} (double release)")
+    bad = np.nonzero(refs != expected)[0]
+    for p in bad[:8]:
+        probs.append(
+            f"page {int(p)}: refs {int(refs[p])} != expected "
+            f"{int(expected[p])} (mappings + index holds + chunk holds)"
+        )
+    if len(bad) > 8:
+        probs.append(f"... and {len(bad) - 8} more refcount discrepancies")
+    if href is not None:
+        hbad = np.nonzero(np.asarray(href) > refs)[0]
+        for p in hbad[:8]:
+            probs.append(
+                f"page {int(p)}: host hold mirror {int(href[p])} exceeds "
+                f"device refs {int(refs[p])}"
+            )
+    return AuditReport(ok=not probs, n_pages=n_pages, discrepancies=probs)
 
 
 def paged_kv_cache_bytes(

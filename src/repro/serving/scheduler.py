@@ -50,6 +50,7 @@ import time
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
+from .faults import TransientFault
 from .prefix_cache import chunk_hashes
 
 if TYPE_CHECKING:  # engine.py imports this module; keep the cycle type-only
@@ -108,7 +109,12 @@ class Scheduler:
 
     name = "fcfs"
 
-    def __init__(self):
+    def __init__(self, shed_after_rounds: Optional[int] = None):
+        # load-shedding policy knob: a QUEUED request that has waited this
+        # many scheduling rounds is shed (terminal status SHED) instead of
+        # waiting forever under overload; None (default) never sheds, which
+        # keeps the FCFS regression anchor untouched
+        self.shed_after_rounds = shed_after_rounds
         self.queue: List["GenRequest"] = []
         self.waiting: List[WaitingEntry] = []
         self.swapped: List[SwappedRequest] = []
@@ -122,7 +128,7 @@ class Scheduler:
         self._seq = 0
         self.queue_wait_rounds: Dict[int, int] = {}
         self.queue_wait_s: Dict[int, float] = {}
-        self.stats = {"preemptions": 0, "swap_ins": 0}
+        self.stats = {"preemptions": 0, "swap_ins": 0, "shed": 0}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -191,6 +197,25 @@ class Scheduler:
     def _may_resume(self, server: "DisaggregatedServer", sw: SwappedRequest) -> bool:
         """Policy veto for re-admitting a swapped request this round."""
         return True
+
+    def shed(self, server: "DisaggregatedServer") -> List["GenRequest"]:
+        """Load-shedding hook: which QUEUED requests to fail out (terminal
+        status SHED) this round instead of serving.  Default policy: any
+        request still queued after ``shed_after_rounds`` rounds — the system
+        is overloaded past its deadline horizon and keeping the request
+        only delays everyone behind it.  Mid-chunk requests are exempt:
+        their streamed pages are sunk cost about to pay off.  Policies can
+        override for smarter shedding (e.g. lowest priority first)."""
+        if self.shed_after_rounds is None:
+            return []
+        out = []
+        for r in self.queue:
+            if r.rid in server.chunks:
+                continue
+            waited = self.round - self.submit_round.get(r.rid, self.round)
+            if waited >= self.shed_after_rounds:
+                out.append(r)
+        return out
 
     def try_swap_in(self, server: "DisaggregatedServer") -> None:
         """Re-admit swapped-out requests (oldest first) when their engine has
@@ -290,8 +315,8 @@ class KVAwareScheduler(Scheduler):
 
     name = "kv-aware"
 
-    def __init__(self, age_rounds: int = 32):
-        super().__init__()
+    def __init__(self, age_rounds: int = 32, **kw):
+        super().__init__(**kw)
         self.age_rounds = age_rounds
 
     def footprint(self, server: "DisaggregatedServer", req: "GenRequest") -> int:
@@ -364,8 +389,8 @@ class PriorityScheduler(Scheduler):
     name = "priority"
 
     def __init__(self, swap: bool = True, max_preemptions_per_round: int = 2,
-                 age_rounds: int = 32):
-        super().__init__()
+                 age_rounds: int = 32, **kw):
+        super().__init__(**kw)
         self.swap = swap
         self.max_preemptions_per_round = max_preemptions_per_round
         self.age_rounds = age_rounds
@@ -431,7 +456,13 @@ class PriorityScheduler(Scheduler):
                 and not d.can_admit(entry.true_len, req.max_new_tokens, n_shared=ns)
             ):
                 victim = victims.pop(0)
-                self.swapped.append(d.swap_out(victim.rid))
+                try:
+                    self.swapped.append(d.swap_out(victim.rid))
+                except TransientFault:
+                    # injected swap failure: nothing was mutated — the
+                    # victim keeps running, the budget is uncharged, and
+                    # the blocked entry retries next round
+                    continue
                 self.stats["preemptions"] += 1
                 self._budget -= 1
                 freed = True

@@ -24,7 +24,7 @@ def test_serving_bench_smoke(tmp_path):
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_bench", "--smoke",
          "--json", str(json_path)],
-        cwd=REPO, env=env, capture_output=True, text=True, timeout=540,
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=1200,
     )
     assert out.returncode == 0, f"smoke failed:\n{out.stdout}\n{out.stderr}"
     assert "SMOKE OK" in out.stdout
@@ -38,7 +38,8 @@ def test_serving_bench_smoke(tmp_path):
 
 def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
              fcfs_p99=5.0, kv_p99=3.0, sched_mism=0, preemptions=1,
-             high_wait=1, preempt_mism=0, with_sched=True):
+             high_wait=1, preempt_mism=0, with_sched=True, with_rob=True,
+             rob_seed=0, rob_mism=0, rob_audit=0, rob_recovery=4, rob_shed=2):
     out = {
         "tokens_per_s": {"slab": 1000.0, "paged": 1000.0 * tps_ratio,
                          "ratio": tps_ratio},
@@ -61,6 +62,18 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
             "priority": {"swap": {"preemptions": preemptions,
                                   "high_wait_rounds": high_wait,
                                   "preempted_stream_mismatches": preempt_mism}},
+        }
+    if with_rob:
+        out["robustness"] = {
+            "seed": rob_seed,
+            "stream_mismatches": rob_mism,
+            "audit_discrepancies": rob_audit,
+            "faults_injected": {"chunk_append": 1, "admit": 2,
+                                "swap_in": 0, "swap_out": 0},
+            "crash": {"round": 3, "affected": [0, 1, 2],
+                      "recovery_rounds": rob_recovery},
+            "shed": {"submitted": 10, "shed": rob_shed,
+                     "served": 10 - rob_shed, "shed_after_rounds": 3},
         }
     return out
 
@@ -128,6 +141,46 @@ def test_regression_compare_skips_scheduler_for_old_baselines():
     checks = compare(_metrics(), _metrics(with_sched=False))
     assert all(ok for _, ok, _ in checks)
     assert not any(n.startswith("sched_") for n, _, _ in checks)
+
+
+def test_regression_compare_robustness_gates():
+    # chaos streams must stay bit-identical and the KV audit clean — always
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(rob_mism=1), _metrics())
+    )
+    assert not checks["robust_stream_mismatches"]
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(rob_audit=3), _metrics())
+    )
+    assert not checks["robust_audit_clean"]
+    # same seed: recovery rounds / shed counts are exact
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(rob_recovery=7), _metrics())
+    )
+    assert not checks["robust_schedule_committed"]
+    checks = dict(
+        (n, ok) for n, ok, _ in compare(_metrics(rob_shed=5), _metrics())
+    )
+    assert not checks["robust_schedule_committed"]
+    # different seed (local --seed experimentation): exact compare skipped,
+    # but the unconditional gates still apply
+    checks = dict(
+        (n, ok)
+        for n, ok, _ in compare(_metrics(rob_seed=42, rob_recovery=7), _metrics())
+    )
+    assert checks["robust_schedule_committed"]
+    checks = dict(
+        (n, ok)
+        for n, ok, _ in compare(_metrics(rob_seed=42, rob_audit=1), _metrics())
+    )
+    assert not checks["robust_audit_clean"]
+
+
+def test_regression_compare_skips_robustness_for_old_baselines():
+    """A pre-robustness committed reference must not fail the gate."""
+    checks = compare(_metrics(), _metrics(with_rob=False))
+    assert all(ok for _, ok, _ in checks)
+    assert not any(n.startswith("robust_") for n, _, _ in checks)
 
 
 def test_regression_compare_fails_on_kv_accounting_drift():

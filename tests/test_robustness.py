@@ -1,0 +1,460 @@
+"""Request-lifecycle robustness: cancellation at every stage, deadlines,
+deterministic fault injection (with the chaos churn matrix), KV invariant
+auditing, engine-crash recovery, load shedding, and the SchedulerExhausted
+resume contract.
+
+The bit-exactness arguments all lean on one property: greedy decode
+(temperature 0) is schedule-independent, so however faults, retries,
+cancellations, or crashes reshuffle the rounds, every SURVIVING request's
+token stream must equal the undisturbed run's, bit for bit.
+
+Chaos seed: ``CHAOS_SEED`` in the environment (default 0) seeds every fault
+plan here and is printed at collection, so any nightly-chaos failure replays
+with ``CHAOS_SEED=<seed> pytest tests/test_robustness.py``.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    FaultInjector,
+    FaultPlan,
+    GenRequest,
+    PrefillEngine,
+    SamplingParams,
+    SchedulerExhausted,
+    TransientFault,
+    STATUS_CANCELLED,
+    STATUS_DEADLINE,
+    STATUS_FAILED,
+    STATUS_FINISHED,
+    STATUS_SHED,
+    make_scheduler,
+)
+from repro.serving.scheduler import FCFSScheduler
+
+PAGE = 16
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+print(f"[chaos] CHAOS_SEED={CHAOS_SEED} "
+      f"(replay: CHAOS_SEED={CHAOS_SEED} pytest tests/test_robustness.py)")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=6, lo=5, hi=40, base=0):
+    rng = np.random.default_rng(seed)
+    return [
+        GenRequest(base + i,
+                   rng.integers(0, cfg.vocab_size, size=int(rng.integers(lo, hi))),
+                   max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _server(params, cfg, *, scheduler=None, paged=True, prefix=False,
+            chunk=None, max_slots=4, max_len=128, n_pages=None,
+            decode_block=4, faults=None, audit_every=None, seed=0):
+    sp = SamplingParams(temperature=0.0)
+    return DisaggregatedServer(
+        [PrefillEngine(params, cfg, sp, chunk_tokens=chunk)],
+        [DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
+                      sampling=sp, decode_block=decode_block, paged=paged,
+                      page_size=PAGE, n_pages=n_pages, prefix_cache=prefix,
+                      seed=seed)],
+        seed=seed, max_prefill_batch=4, scheduler=scheduler, faults=faults,
+        audit_every=audit_every,
+    )
+
+
+def _assert_clean(srv):
+    """Zero host-side leaks and a clean device audit after drain (the churn
+    invariants every exit path — finish, cancel, fail, shed — must uphold)."""
+    s = srv.scheduler
+    assert not s.queue and not s.waiting and not s.swapped
+    assert s.submit_round == {}
+    assert srv._hash_memo == {}
+    assert srv.chunks == {}
+    for eng in srv.decodes:
+        assert eng.requests == {}
+        if eng.paged:
+            assert eng._pins == {}
+            assert eng._chunk_holds == {}
+            assert eng._reserved == [0] * eng.max_slots
+            if eng.prefix is not None:
+                assert eng.prefix._pins == {}
+                assert eng.prefix._swap_pins == {}
+        rep = eng.audit()
+        assert rep.ok, rep.discrepancies
+    srv.audit(strict=True)
+
+
+# ---------------------------------------------------------------------------
+# cancellation at every lifecycle stage
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_and_decoding(setup):
+    cfg, params = setup
+    ref_srv = _server(params, cfg, prefix=True)
+    ref_reqs = _requests(cfg, 5, max_new=12)
+    for r in ref_reqs:
+        ref_srv.submit(r)
+    ref = ref_srv.run()
+
+    srv = _server(params, cfg, prefix=True)
+    reqs = _requests(cfg, 5, max_new=12)
+    for r in reqs:
+        srv.submit(r)
+    assert srv._stage_of(4) == "queued"
+    assert srv.cancel(4)
+    assert reqs[4].done and reqs[4].status == STATUS_CANCELLED
+    for _ in range(2):
+        srv.run_round()
+    decoding = [r.rid for r in reqs[:4] if srv._stage_of(r.rid) == "decoding"]
+    assert decoding
+    victim = decoding[0]
+    got_before = len(srv.all_requests[victim].tokens)
+    assert srv.cancel(victim)
+    assert srv.all_requests[victim].status == STATUS_CANCELLED
+    # truncated, not erased
+    assert len(srv.all_requests[victim].tokens) == got_before
+    srv.run()
+    # cancel is a no-op on terminal requests (the finish won the race)
+    assert not srv.cancel(victim)
+    for r in reqs:
+        if r.rid not in (4, victim):
+            assert list(r.tokens) == ref[r.rid], f"survivor {r.rid} diverged"
+            assert r.status == STATUS_FINISHED
+    _assert_clean(srv)
+
+
+def test_cancel_waiting(setup):
+    cfg, params = setup
+    # 2 slots, 4 prefilled: some entries stay prefilled-waiting after round 1
+    srv = _server(params, cfg, prefix=True, max_slots=2)
+    reqs = _requests(cfg, 4, max_new=12)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_round()
+    waiting = [e.req.rid for e in srv.scheduler.waiting]
+    assert waiting, "expected prefilled-waiting entries with 2 slots"
+    assert srv._stage_of(waiting[0]) == "waiting"
+    assert srv.cancel(waiting[0])
+    srv.run()
+    assert srv.all_requests[waiting[0]].status == STATUS_CANCELLED
+    _assert_clean(srv)
+
+
+def test_cancel_mid_chunk(setup):
+    cfg, params = setup
+    srv = _server(params, cfg, prefix=True, chunk=32)
+    rng = np.random.default_rng(3)
+    long = GenRequest(0, rng.integers(0, cfg.vocab_size, size=96),
+                      max_new_tokens=4)
+    short = GenRequest(1, rng.integers(0, cfg.vocab_size, size=12),
+                       max_new_tokens=4)
+    srv.submit(long)
+    srv.submit(short)
+    srv.run_round()
+    assert srv._stage_of(0) == "chunking"
+    assert srv.cancel(0)  # drops the cursor, the chunk holds, and the pins
+    srv.run()
+    assert long.status == STATUS_CANCELLED
+    assert short.status == STATUS_FINISHED
+    _assert_clean(srv)
+
+
+def test_cancel_swapped(setup):
+    cfg, params = setup
+    sched = make_scheduler("priority", swap=True)
+    srv = _server(params, cfg, scheduler=sched, max_slots=8, n_pages=16,
+                  decode_block=8)
+    lows = [GenRequest(i, np.random.default_rng(5).integers(
+        0, cfg.vocab_size, size=10), max_new_tokens=24) for i in range(5)]
+    for r in lows:
+        srv.submit(r)
+    srv.run_round()
+    srv.run_round()
+    high = GenRequest(100, np.random.default_rng(6).integers(
+        0, cfg.vocab_size, size=40), max_new_tokens=16, priority=1)
+    srv.submit(high)
+    while not srv.scheduler.swapped and srv.pending():
+        srv.run_round()
+    assert srv.scheduler.swapped, "preemption never swapped a victim out"
+    victim = srv.scheduler.swapped[0].req.rid
+    assert srv._stage_of(victim) == "swapped"
+    assert srv.cancel(victim)
+    assert srv.all_requests[victim].status == STATUS_CANCELLED
+    srv.run()
+    assert high.status == STATUS_FINISHED
+    _assert_clean(srv)
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_survivors_bitexact(setup):
+    cfg, params = setup
+    ref_srv = _server(params, cfg)
+    ref_reqs = _requests(cfg, 6, max_new=8)
+    for r in ref_reqs:
+        ref_srv.submit(r)
+    ref = ref_srv.run()
+
+    # 2 slots: the last requests queue for several rounds and expire
+    srv = _server(params, cfg, max_slots=2)
+    reqs = _requests(cfg, 6, max_new=8)
+    for r in reqs:
+        r.deadline_rounds = 6
+        srv.submit(r)
+    srv.run()
+    statuses = {r.rid: r.status for r in reqs}
+    assert STATUS_DEADLINE in statuses.values(), statuses
+    assert STATUS_FINISHED in statuses.values(), statuses
+    for r in reqs:
+        if r.status == STATUS_FINISHED:
+            assert list(r.tokens) == ref[r.rid], f"survivor {r.rid} diverged"
+    _assert_clean(srv)
+
+
+def test_ttft_deadline(setup):
+    cfg, params = setup
+    srv = _server(params, cfg, max_slots=2)
+    reqs = _requests(cfg, 6, max_new=8)
+    for r in reqs:
+        r.ttft_deadline = 3
+        srv.submit(r)
+    srv.run()
+    statuses = {r.rid: r.status for r in reqs}
+    assert STATUS_DEADLINE in statuses.values(), statuses
+    # a request with a first token can never expire on the TTFT deadline
+    for r in reqs:
+        if r.status == STATUS_DEADLINE:
+            assert r.tokens == []
+    _assert_clean(srv)
+
+
+# ---------------------------------------------------------------------------
+# chaos churn matrix: faults x schedulers x engine modes
+# ---------------------------------------------------------------------------
+
+_REFS = {}  # mode -> fault-free reference streams (greedy: policy-invariant)
+
+_MODES = {
+    "slab": dict(paged=False, prefix=False, chunk=None),
+    "paged": dict(paged=True, prefix=False, chunk=None),
+    "prefix": dict(paged=True, prefix=True, chunk=None),
+    "chunked": dict(paged=True, prefix=True, chunk=32),
+}
+
+
+def _mode_requests(cfg, mode):
+    reqs = _requests(cfg, 4, seed=1, max_new=6)
+    if mode == "chunked":
+        rng = np.random.default_rng(2)
+        reqs.append(GenRequest(4, rng.integers(0, cfg.vocab_size, size=80),
+                               max_new_tokens=6))
+    return reqs
+
+
+def _mode_rates(mode):
+    if mode == "slab":
+        return {"admit": 0.2}
+    rates = {"admit": 0.15, "swap_in": 0.15, "swap_out": 0.15}
+    if mode == "chunked":
+        rates["chunk_append"] = 0.15
+    return rates
+
+
+@pytest.mark.parametrize("mode", sorted(_MODES))
+@pytest.mark.parametrize("sched", ["fcfs", "kv-aware", "priority"])
+def test_chaos_churn(setup, sched, mode):
+    cfg, params = setup
+    kw = _MODES[mode]
+    if mode not in _REFS:
+        ref_srv = _server(params, cfg, **kw)
+        ref_reqs = _mode_requests(cfg, mode)
+        for r in ref_reqs:
+            ref_srv.submit(r)
+        _REFS[mode] = ref_srv.run()
+    ref = _REFS[mode]
+
+    swap = sched == "priority" and kw["paged"]
+    plan = FaultPlan(seed=CHAOS_SEED, rates=_mode_rates(mode))
+    srv = _server(params, cfg, scheduler=make_scheduler(sched, swap=swap),
+                  faults=plan, audit_every=4, **kw)
+    reqs = _mode_requests(cfg, mode)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    for r in reqs:
+        assert r.status == STATUS_FINISHED
+        assert list(r.tokens) == ref[r.rid], \
+            f"[{sched}/{mode}] stream {r.rid} diverged under faults"
+    _assert_clean(srv)
+
+
+# ---------------------------------------------------------------------------
+# engine crash recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preserve_kv", [False, True])
+def test_engine_crash_recovery_bitexact(setup, preserve_kv):
+    cfg, params = setup
+    ref_srv = _server(params, cfg, prefix=True, chunk=32)
+    rng = np.random.default_rng(9)
+    def trace():
+        r = np.random.default_rng(9)
+        out = [GenRequest(0, r.integers(0, cfg.vocab_size, size=96),
+                          max_new_tokens=8)]
+        out += [GenRequest(1 + i, r.integers(0, cfg.vocab_size,
+                                             size=int(r.integers(8, 14))),
+                           max_new_tokens=8) for i in range(3)]
+        return out
+    for r in trace():
+        ref_srv.submit(r)
+    ref = ref_srv.run()
+
+    plan = FaultPlan(seed=CHAOS_SEED, crash_round=3, preserve_kv=preserve_kv)
+    srv = _server(params, cfg, prefix=True, chunk=32, faults=plan)
+    reqs = trace()
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    assert srv.crash_events, "planned crash never fired"
+    ev = srv.crash_events[0]
+    assert ev["replayed"] or ev["stashed"], "crash hit no in-flight work"
+    if preserve_kv:
+        assert ev["stashed"], "preserve_kv crash produced no host stashes"
+    assert srv.decodes[0].stats.get("crashes") == 1
+    for r in reqs:
+        assert r.status == STATUS_FINISHED
+        assert list(r.tokens) == ref[r.rid], \
+            f"stream {r.rid} diverged across the crash"
+    _assert_clean(srv)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: give-up failures and load shedding
+# ---------------------------------------------------------------------------
+
+
+def test_give_up_fails_structurally(setup):
+    cfg, params = setup
+    plan = FaultPlan(seed=CHAOS_SEED, rates={"admit": 1.0}, max_retries=3,
+                     give_up=True)
+    srv = _server(params, cfg, faults=plan)
+    reqs = _requests(cfg, 2)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()  # returns instead of spinning forever
+    for r in reqs:
+        assert r.done and r.status == STATUS_FAILED
+    _assert_clean(srv)
+
+
+def test_load_shedding(setup):
+    cfg, params = setup
+    srv = _server(params, cfg,
+                  scheduler=FCFSScheduler(shed_after_rounds=3), max_slots=2)
+    reqs = _requests(cfg, 10, max_new=8)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    statuses = [r.status for r in reqs]
+    assert statuses.count(STATUS_SHED) >= 1, statuses
+    assert statuses.count(STATUS_SHED) == srv.scheduler.stats["shed"]
+    assert STATUS_FINISHED in statuses
+    _assert_clean(srv)
+
+
+# ---------------------------------------------------------------------------
+# SchedulerExhausted: structured statuses + the resume contract
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_exhausted_statuses_and_resume(setup):
+    cfg, params = setup
+    srv = _server(params, cfg, max_slots=2)
+    reqs = _requests(cfg, 6, max_new=8)
+    for r in reqs:
+        srv.submit(r)
+    with pytest.raises(SchedulerExhausted) as ei:
+        srv.run(max_steps=2)
+    exc = ei.value
+    assert set(exc.statuses) == {r.rid for r in reqs}
+    stages = {"queued", "chunking", "waiting", "decoding", "swapped", "done"}
+    for rid, oc in exc.statuses.items():
+        assert oc.rid == rid
+        assert oc.stage in stages, oc
+        if oc.status == STATUS_FINISHED:
+            assert oc.stage == "done"
+    assert any(oc.status == "PENDING" for oc in exc.statuses.values())
+    # resume: the server state is intact — just run() again
+    out = srv.run()
+    assert set(out) == {r.rid for r in reqs}
+    assert all(r.status == STATUS_FINISHED for r in reqs)
+    _assert_clean(srv)
+
+
+# ---------------------------------------------------------------------------
+# the KV invariant auditor itself
+# ---------------------------------------------------------------------------
+
+
+def test_audit_detects_corruption(setup):
+    cfg, params = setup
+    srv = _server(params, cfg, prefix=True)
+    reqs = _requests(cfg, 3, max_new=12)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_round()
+    srv.run_round()
+    eng = srv.decodes[0]
+    assert eng.audit().ok
+    # leak a refcount on device: conservation must catch it
+    st = eng.state
+    eng.state = st._replace(page_refs=st.page_refs.at[0].add(1))
+    rep = eng.audit()
+    assert not rep.ok and rep.discrepancies
+    with pytest.raises(AssertionError):
+        srv.audit(strict=True)
+    eng.state = eng.state._replace(page_refs=st.page_refs)  # heal
+    srv.run()
+    _assert_clean(srv)
+
+
+def test_fault_plan_validation_and_determinism():
+    with pytest.raises(ValueError):
+        FaultPlan(rates={"bogus_site": 0.5})
+    a = FaultInjector(FaultPlan(seed=CHAOS_SEED, rates={"admit": 0.5}))
+    b = FaultInjector(FaultPlan(seed=CHAOS_SEED, rates={"admit": 0.5}))
+    draws_a = [a.should_fail("admit", i) for i in range(64)]
+    draws_b = [b.should_fail("admit", i) for i in range(64)]
+    assert draws_a == draws_b  # the schedule is a pure function of the seed
+    assert a.stats == b.stats
+
+
+def test_swap_out_fault_is_transient():
+    with pytest.raises(TransientFault):
+        raise TransientFault("nothing mutated")
+    inj = FaultInjector(FaultPlan(seed=0, rates={"swap_out": 1.0},
+                                  max_retries=2))
+    assert inj.should_fail("swap_out", 1)
+    assert inj.should_fail("swap_out", 1)
+    # bounded retry: the fault heals after max_retries attempts
+    assert not inj.should_fail("swap_out", 1)
