@@ -28,8 +28,8 @@ PAPER = {
 
 def provision_all(workload, slo, b: Bench, wl_name: str):
     h100 = perf(H100)
-    kw = dict(workload=workload, rate=RATE, slo=slo, ref_perf=h100,
-              duration=SIM_DURATION)
+    kw = {"workload": workload, "rate": RATE, "slo": slo, "ref_perf": h100,
+          "duration": SIM_DURATION}
     designs = {}
     designs["sarathi"] = provision_coloc(name="sarathi", perf=h100, **kw)
     designs["splitwise-homo"] = provision_disagg(

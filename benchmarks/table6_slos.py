@@ -21,8 +21,8 @@ def main():
     h100 = perf(H100)
     for wl_name, wl in WORKLOADS.items():
         for slo_name in ("loose", "normal", "tight"):
-            kw = dict(workload=wl, rate=RATE, slo=SLOS[slo_name], ref_perf=h100,
-                      duration=SIM_DURATION)
+            kw = {"workload": wl, "rate": RATE, "slo": SLOS[slo_name], "ref_perf": h100,
+                  "duration": SIM_DURATION}
             homo = provision_disagg(name="homo", prefill_perf=h100, decode_perf=h100, **kw)
             spad = provision_disagg(name="spad", prefill_perf=perf(PREFILL_CHIP),
                                     decode_perf=perf(DECODE_CHIP), **kw)

@@ -1,0 +1,16 @@
+"""Fast-path invariant analyzer.
+
+Two layers:
+
+- :mod:`repro.analysis.lint` — AST-level rules FP001..FP005 over the source
+  tree (no jax import needed; runs anywhere in milliseconds).
+- :mod:`repro.analysis.trace_verify` — jaxpr/executable-level verification of
+  the real engine (donation aliasing, no host-sync primitives in the decode
+  body, bounded compile counts).  Imports jax + the serving engine.
+
+CLI front end: ``tools/fastpath_lint.py``.  Rules and the allow-comment
+syntax are documented in ``docs/analysis.md``.
+"""
+
+from repro.analysis.lint import Report, lint_files, lint_paths  # noqa: F401
+from repro.analysis.rules import Finding  # noqa: F401

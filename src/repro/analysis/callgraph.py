@@ -1,0 +1,303 @@
+"""Name-based call graph + jit-region detection over a set of Python files.
+
+This is deliberately a *name-based* (duck-typed) call graph: ``self.m(...)``
+resolves to methods named ``m`` — same class first, then any analyzed class;
+``f(...)`` resolves to module-level functions named ``f`` — same module first,
+then any analyzed module.  That over-approximates reachability, which is the
+right bias for a lint (a host sync that *might* be on the decode path should
+be annotated, not invisible).
+
+Jit regions: a function is a *jit entry* when it is passed to ``jax.jit`` /
+``jax.lax.scan`` (directly, via a decorator, or via a local wrapper like
+``DecodeEngine._jit`` whose body returns ``jax.jit(...)``).  Functions
+lexically nested inside a jit entry are traced too.  The transitive closure
+of the call graph from jit entries is the JIT set; the closure from the
+decode-loop roots (``step_block`` / ``run_round`` / ``run`` / ``step``) is
+the LOOP set.  FP001 only fires inside JIT ∪ LOOP.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+# Functions whose bodies start the decode loop: anything reachable from these
+# runs per-token (or per-block) in steady state.
+DECODE_ROOTS = ("step_block", "run_round", "run", "step")
+
+
+@dataclass
+class FuncInfo:
+    """One function/method in the analyzed set."""
+
+    path: str
+    cls: str | None
+    name: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    lineno: int
+    jit_entry: bool = False  # body is traced (passed to jit/scan or nested in one)
+    # (kind, name, base): base is the attribute base for method calls
+    # ("self", a module alias, or another object name), else None
+    calls: list[tuple[str, str, str | None]] = field(default_factory=list)
+
+    @property
+    def qual(self) -> str:
+        owner = f"{self.cls}." if self.cls else ""
+        return f"{self.path}::{owner}{self.name}"
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    tree: ast.Module
+    src: str
+    lines: list[str]
+    numpy_aliases: set[str] = field(default_factory=set)  # e.g. {"np"}
+    jax_aliases: set[str] = field(default_factory=set)  # e.g. {"jax"}
+    module_aliases: set[str] = field(default_factory=set)  # all imported names
+    funcs: list[FuncInfo] = field(default_factory=list)
+
+
+def _collect_imports(mod: ModuleInfo) -> None:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                bound = alias.asname or alias.name.split(".")[0]
+                mod.module_aliases.add(bound)
+                if alias.name == "numpy":
+                    mod.numpy_aliases.add(bound)
+                if alias.name == "jax":
+                    mod.jax_aliases.add(bound)
+        elif isinstance(node, ast.ImportFrom):
+            # `from jax import numpy as jnp` must NOT count as numpy: jnp is
+            # device-side.  Only `from numpy import ...` would, and the repo
+            # never does that for asarray.
+            for alias in node.names:
+                mod.module_aliases.add(alias.asname or alias.name)
+
+
+def _collect_funcs(mod: ModuleInfo) -> None:
+    """Populate mod.funcs with lexical class ownership."""
+
+    def visit(node: ast.AST, cls: str | None) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                visit(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                mod.funcs.append(
+                    FuncInfo(mod.path, cls, child.name, child, child.lineno)
+                )
+                # nested defs keep the lexical class owner (methods defining
+                # local closures); good enough for name-based resolution
+                visit(child, cls)
+            else:
+                visit(child, cls)
+
+    visit(mod.tree, None)
+
+
+def own_nodes(func: FuncInfo):
+    """Yield AST nodes of *this* function body only, not nested defs."""
+    stack = list(ast.iter_child_nodes(func.node))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _callee_name(call: ast.Call) -> tuple[str, str, str | None] | None:
+    """Classify a call target: ("method", name, base) / ("func", name, None)."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        base = f.value.id if isinstance(f.value, ast.Name) else None
+        return ("method", f.attr, base)
+    if isinstance(f, ast.Name):
+        return ("func", f.id, None)
+    return None
+
+
+def _jit_wrapper_names(funcs: list[FuncInfo]) -> set[str]:
+    """Functions whose body returns jax.jit(...) — e.g. DecodeEngine._jit."""
+    out = set()
+    for fn in funcs:
+        for node in own_nodes(fn):
+            if not (isinstance(node, ast.Return) and isinstance(node.value, ast.Call)):
+                continue
+            callee = node.value.func
+            if isinstance(callee, ast.Attribute) and callee.attr == "jit":
+                out.add(fn.name)
+            elif isinstance(callee, ast.Name) and callee.id == "jit":
+                out.add(fn.name)
+    return out
+
+
+def _is_jit_caller(call: ast.Call, wrappers: set[str]) -> bool:
+    """True when `call` is jax.jit(f...), lax.scan(f...), or a wrapper(f...)."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        if f.attr in ("jit", "scan", "fori_loop", "while_loop", "cond", "switch"):
+            return True
+        if f.attr in wrappers:
+            return True
+    elif isinstance(f, ast.Name):
+        if f.id in ("jit",) or f.id in wrappers:
+            return True
+    return False
+
+
+class Analysis:
+    """Parsed modules + call graph + JIT/LOOP reachability sets."""
+
+    def __init__(self, files: dict[str, str]):
+        """files: {path: source}."""
+        self.modules: dict[str, ModuleInfo] = {}
+        for path, src in sorted(files.items()):
+            tree = ast.parse(src, filename=path)
+            mod = ModuleInfo(path, tree, src, src.splitlines())
+            _collect_imports(mod)
+            _collect_funcs(mod)
+            self.modules[path] = mod
+
+        self.funcs: list[FuncInfo] = [
+            f for m in self.modules.values() for f in m.funcs
+        ]
+        self.jit_wrappers = _jit_wrapper_names(self.funcs)
+        self._mark_jit_entries()
+        self._build_edges()
+        self.jit_set = self.reachable(
+            {f.qual for f in self.funcs if f.jit_entry}
+        )
+        self.loop_set = self.reachable(
+            {
+                f.qual
+                for f in self.funcs
+                if f.name in DECODE_ROOTS and "serving" in f.path
+            }
+        )
+
+    # ----------------------------------------------------------- jit regions
+    def _mark_jit_entries(self) -> None:
+        by_key: dict[tuple[str, str], list[FuncInfo]] = {}
+        for fn in self.funcs:
+            by_key.setdefault((fn.path, fn.name), []).append(fn)
+
+        for mod in self.modules.values():
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if not _is_jit_caller(node, self.jit_wrappers):
+                    continue
+                for arg in node.args[:1]:  # traced callable is arg 0
+                    if isinstance(arg, ast.Name):
+                        for fn in by_key.get((mod.path, arg.id), []):
+                            fn.jit_entry = True
+
+        # decorators: @jax.jit / @jit / @partial(jax.jit, ...)
+        for fn in self.funcs:
+            decorators = getattr(fn.node, "decorator_list", [])
+            for dec in decorators:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                names = [target] + (dec.args if isinstance(dec, ast.Call) else [])
+                for n in names:
+                    if (isinstance(n, ast.Attribute) and n.attr == "jit") or (
+                        isinstance(n, ast.Name) and n.id == "jit"
+                    ):
+                        fn.jit_entry = True
+
+        # lexical nesting: a def inside a jit entry is traced when called
+        changed = True
+        while changed:
+            changed = False
+            for fn in self.funcs:
+                if fn.jit_entry:
+                    continue
+                for other in self.funcs:
+                    if other.jit_entry and other.path == fn.path:
+                        if _encloses(other.node, fn.node):
+                            fn.jit_entry = True
+                            changed = True
+                            break
+
+    # ------------------------------------------------------------ call graph
+    def _build_edges(self) -> None:
+        for fn in self.funcs:
+            for node in own_nodes(fn):
+                if isinstance(node, ast.Call):
+                    name = _callee_name(node)
+                    if name:
+                        fn.calls.append(name)
+
+        # resolution indexes
+        self._methods: dict[str, list[FuncInfo]] = {}
+        self._module_funcs: dict[tuple[str, str], list[FuncInfo]] = {}
+        self._any_funcs: dict[str, list[FuncInfo]] = {}
+        for fn in self.funcs:
+            if fn.cls:
+                self._methods.setdefault(fn.name, []).append(fn)
+            else:
+                self._module_funcs.setdefault((fn.path, fn.name), []).append(fn)
+            self._any_funcs.setdefault(fn.name, []).append(fn)
+
+    def resolve(
+        self, caller: FuncInfo, kind: str, name: str, base: str | None = None
+    ) -> list[FuncInfo]:
+        if kind == "method":
+            # `mod.func(...)`: the base is an imported module alias — resolve
+            # to module-level functions named `name` (prefer `<base>.py`)
+            if base and base != "self":
+                mod = self.modules.get(caller.path)
+                if mod and base in mod.module_aliases:
+                    cands = [
+                        f for f in self._any_funcs.get(name, []) if f.cls is None
+                    ]
+                    best = [f for f in cands if f.path.endswith(f"{base}.py")]
+                    if best or cands:
+                        return best or cands
+            if base == "self":
+                same_cls = [
+                    f
+                    for f in self._methods.get(name, [])
+                    if f.cls == caller.cls and f.path == caller.path
+                ]
+                return same_cls or self._methods.get(name, [])
+            # unknown object: duck-type to every method of that name (plus
+            # module-level functions — `obj` may be a module we missed)
+            return self._methods.get(name, []) + [
+                f for f in self._any_funcs.get(name, []) if f.cls is None
+            ]
+        local = self._module_funcs.get((caller.path, name), [])
+        return local or self._any_funcs.get(name, [])
+
+    def reachable(self, roots: set[str]) -> set[str]:
+        by_qual = {f.qual: f for f in self.funcs}
+        seen = set()
+        frontier = [by_qual[q] for q in roots if q in by_qual]
+        while frontier:
+            fn = frontier.pop()
+            if fn.qual in seen:
+                continue
+            seen.add(fn.qual)
+            for kind, name, base in fn.calls:
+                for callee in self.resolve(fn, kind, name, base):
+                    if callee.qual not in seen:
+                        frontier.append(callee)
+        return seen
+
+    def callers_of(self, name: str) -> list[FuncInfo]:
+        """Functions with a call edge to any function/method named `name`."""
+        out = []
+        for fn in self.funcs:
+            if any(n == name for _, n, _b in fn.calls):
+                out.append(fn)
+        return out
+
+
+def _encloses(outer: ast.AST, inner: ast.AST) -> bool:
+    if outer is inner:
+        return False
+    for node in ast.walk(outer):
+        if node is inner:
+            return True
+    return False

@@ -1,0 +1,155 @@
+"""Lint driver: run FP rules over files, apply allow-comments, build a report.
+
+Allow syntax (one per comment, reason mandatory)::
+
+    x = np.asarray(tok)  # fastpath: allow[FP001] first-token readback
+    # fastpath: allow[FP003] seed-compat mode trades cache boundedness
+    key_ = (S, 0)
+
+An allow on its own line targets the next line.  Every allow must suppress
+at least one finding of its rule on its target line — a stale allow (clean
+line) is itself an error, so the audit trail can never rot.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.analysis.callgraph import Analysis
+from repro.analysis.rules import ALL_RULES, RULE_IDS, Finding
+
+ALLOW_RE = re.compile(r"#\s*fastpath:\s*allow\[(FP\d{3})\]\s*(.*)$")
+
+
+@dataclass(frozen=True)
+class Allow:
+    rule: str
+    path: str
+    comment_line: int  # where the comment sits
+    target_line: int  # the line it suppresses
+    reason: str
+
+
+@dataclass
+class Report:
+    findings: list[Finding] = field(default_factory=list)  # unsuppressed
+    allowed: list[tuple[Allow, Finding]] = field(default_factory=list)
+    errors: list[Finding] = field(default_factory=list)  # stale / malformed allows
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.findings or self.errors)
+
+    def counts(self) -> dict[str, dict[str, int]]:
+        """{rule: {"findings": n, "allowed": n}} for the summary table."""
+        out: dict[str, dict[str, int]] = {
+            r: {"findings": 0, "allowed": 0} for r in RULE_IDS
+        }
+        for f in self.findings:
+            out.setdefault(f.rule, {"findings": 0, "allowed": 0})["findings"] += 1
+        for _, f in self.allowed:
+            out.setdefault(f.rule, {"findings": 0, "allowed": 0})["allowed"] += 1
+        return out
+
+
+def parse_allows(path: str, src: str) -> tuple[list[Allow], list[Finding]]:
+    """Extract allow-comments from real COMMENT tokens (docstrings that merely
+    *mention* the syntax, like this module's, are not comments)."""
+    allows, errors = [], []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except tokenize.TokenizeError:  # unparseable file: the AST pass reports it
+        return allows, errors
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        i = tok.start[0]
+        m = ALLOW_RE.search(tok.string)
+        if m is None:
+            if "fastpath:" in tok.string and "allow" in tok.string:
+                errors.append(
+                    Finding(
+                        "FP000", path, i, 0,
+                        "malformed fastpath allow comment (expected "
+                        "`# fastpath: allow[FPxxx] <reason>`)",
+                    )
+                )
+            continue
+        rule, reason = m.group(1), m.group(2).strip()
+        if not reason:
+            errors.append(
+                Finding(
+                    "FP000", path, i, 0,
+                    f"allow[{rule}] has no reason — every exception must "
+                    "say why it is legitimate",
+                )
+            )
+            continue
+        own_line = tok.line.lstrip().startswith("#")
+        target = i + 1 if own_line else i
+        allows.append(Allow(rule, path, i, target, reason))
+    return allows, errors
+
+
+def collect_files(paths: list[str]) -> dict[str, str]:
+    files: dict[str, str] = {}
+    for p in paths:
+        root = Path(p)
+        if root.is_dir():
+            for f in sorted(root.rglob("*.py")):
+                files[str(f)] = f.read_text()
+        elif root.suffix == ".py":
+            files[str(root)] = root.read_text()
+    return files
+
+
+def lint_files(files: dict[str, str], select: set[str] | None = None) -> Report:
+    """Run the rules over {path: source}; apply allows; return the report."""
+    report = Report()
+    an = Analysis(files)
+
+    raw: list[Finding] = []
+    for rule_cls in ALL_RULES:
+        if select and rule_cls.ID not in select:
+            continue
+        raw.extend(rule_cls().check(an))
+
+    allows: list[Allow] = []
+    for path, src in files.items():
+        file_allows, errors = parse_allows(path, src)
+        allows.extend(file_allows)
+        report.errors.extend(errors)
+
+    by_site: dict[tuple[str, int, str], list[Allow]] = {}
+    for a in allows:
+        by_site.setdefault((a.path, a.target_line, a.rule), []).append(a)
+
+    used: set[int] = set()
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.col)):
+        site = by_site.get((f.path, f.line, f.rule), [])
+        if site:
+            report.allowed.append((site[0], f))
+            used.add(id(site[0]))
+        else:
+            report.findings.append(f)
+
+    for a in allows:
+        if select and a.rule not in select:
+            continue
+        if id(a) not in used:
+            report.errors.append(
+                Finding(
+                    "FP000", a.path, a.comment_line, 0,
+                    f"stale allow[{a.rule}]: no {a.rule} finding on line "
+                    f"{a.target_line} — remove the comment",
+                )
+            )
+    return report
+
+
+def lint_paths(paths: list[str], select: set[str] | None = None) -> Report:
+    return lint_files(collect_files(paths), select=select)

@@ -1,0 +1,584 @@
+"""FP001–FP005 rule implementations (AST layer).
+
+Each rule is a class with a stable ``ID`` and a ``check(analysis) ->
+list[Finding]`` method.  Rules are flow-insensitive and name-based by
+design — they over-approximate, and legitimate findings are annotated with
+``# fastpath: allow[FPxxx] <reason>`` so every exception is audited and
+counted (see docs/analysis.md).
+
+Rule summary:
+
+- FP001 host-sync call reachable from the decode loop or a jit region
+- FP002 use-after-donate: a donated argument read again in the caller
+- FP003 unbounded jit-cache key: a ``len()``-derived scalar keys a jit cache
+  without passing through a bucketing function
+- FP004 acquire/release pairing: every hold increment needs a release path
+  that funnels through ``_forget``
+- FP005 unseeded ``np.random`` in serving/faults code
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from repro.analysis.callgraph import Analysis, FuncInfo, own_nodes
+
+# FP001 -----------------------------------------------------------------
+NUMPY_SYNC_FUNCS = {"asarray", "array"}
+SYNC_METHODS = {"item", "block_until_ready"}
+# FP003 -----------------------------------------------------------------
+BOUNDER_NAMES = {"_bucket", "_pad_len", "bucket"}
+JIT_CACHE_ATTR_SUFFIX = "fns"
+# FP004 -----------------------------------------------------------------
+HOLD_COUNTERS = {"_href", "_chunk_holds"}  # incremented hold structures
+PIN_ACQUIRES = {"pin", "pin_prefix", "swap_pin"}
+PIN_RELEASES = {"unpin", "release_prefix_pin", "swap_unpin"}
+RELEASE_FUNNEL = "_forget"
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - very old nodes
+        return "<expr>"
+
+
+def _is_numpy_call(call: ast.Call, numpy_aliases: set[str], names: set[str]) -> bool:
+    f = call.func
+    return (
+        isinstance(f, ast.Attribute)
+        and f.attr in names
+        and isinstance(f.value, ast.Name)
+        and f.value.id in numpy_aliases
+    )
+
+
+class RuleFP001:
+    """Host-sync calls reachable from the decode loop or a jit region."""
+
+    ID = "FP001"
+
+    def check(self, an: Analysis) -> list[Finding]:
+        out = []
+        hot = an.jit_set | an.loop_set
+        for fn in an.funcs:
+            if fn.qual not in hot:
+                continue
+            mod = an.modules[fn.path]
+            in_jit = fn.qual in an.jit_set
+            for node in own_nodes(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._sync_kind(node, mod.numpy_aliases, mod.jax_aliases, in_jit)
+                if msg:
+                    out.append(
+                        Finding(
+                            self.ID, fn.path, node.lineno, node.col_offset,
+                            f"host sync `{msg}` on the decode/jit path "
+                            f"(in {fn.name})",
+                        )
+                    )
+        return out
+
+    @staticmethod
+    def _sync_kind(call, numpy_aliases, jax_aliases, in_jit) -> str | None:
+        f = call.func
+        if _is_numpy_call(call, numpy_aliases, NUMPY_SYNC_FUNCS):
+            return _unparse(f)
+        if isinstance(f, ast.Attribute):
+            if f.attr == "device_get" and (
+                isinstance(f.value, ast.Name) and f.value.id in jax_aliases
+            ):
+                return _unparse(f)
+            if f.attr in SYNC_METHODS and not call.args:
+                return f".{f.attr}()"
+        elif isinstance(f, ast.Name):
+            if f.id == "device_get":
+                return "device_get"
+            # int()/float() force a concrete value: only a sync when the
+            # enclosing code is actually traced (inside a jit region)
+            if (
+                in_jit
+                and f.id in ("int", "float")
+                and call.args
+                and not isinstance(call.args[0], ast.Constant)
+            ):
+                return f"{f.id}(...)"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# FP002: use-after-donate
+# ---------------------------------------------------------------------------
+
+
+def _donated_positions(call: ast.Call, wrappers: dict[str, int]) -> tuple | None:
+    """If `call` builds a donating jitted callable, return donated positions."""
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id", None)
+    if name == "jit":
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                v = kw.value
+                if isinstance(v, ast.Tuple):
+                    return tuple(
+                        e.value for e in v.elts if isinstance(e, ast.Constant)
+                    )
+                if isinstance(v, ast.Constant):
+                    return (v.value,)
+                return ()  # dynamic tuple: positions unknown
+        return None
+    if name in wrappers:
+        for kw in call.keywords:
+            if kw.arg == "donate_state_argnum" and isinstance(kw.value, ast.Constant):
+                return (kw.value.value,)
+        return (wrappers[name],)
+    return None
+
+
+def _donation_wrappers(an: Analysis) -> dict[str, int]:
+    """Functions returning jax.jit(..., donate_argnums=(param,)) — name -> default."""
+    out = {}
+    for fn in an.funcs:
+        params = getattr(fn.node, "args", None)
+        if params is None:
+            continue
+        names = [a.arg for a in params.args]
+        defaults = params.defaults
+        for node in own_nodes(fn):
+            if not (isinstance(node, ast.Return) and isinstance(node.value, ast.Call)):
+                continue
+            call = node.value
+            cname = (
+                call.func.attr
+                if isinstance(call.func, ast.Attribute)
+                else getattr(call.func, "id", None)
+            )
+            if cname != "jit":
+                continue
+            for kw in call.keywords:
+                if kw.arg != "donate_argnums":
+                    continue
+                for ref in ast.walk(kw.value):
+                    if isinstance(ref, ast.Name) and ref.id in names:
+                        idx = names.index(ref.id)
+                        off = idx - (len(names) - len(defaults))
+                        default = 0
+                        if 0 <= off < len(defaults) and isinstance(
+                            defaults[off], ast.Constant
+                        ):
+                            default = defaults[off].value
+                        out[fn.name] = default
+    return out
+
+
+class _DonationMap:
+    """attr / dict-attr / factory names -> donated positions, per class."""
+
+    def __init__(self, an: Analysis):
+        self.wrappers = _donation_wrappers(an)
+        self.attr: dict[str, tuple] = {}  # self.<name>(...) donates
+        self.dict_attr: dict[str, tuple] = {}  # self.<name>[k](...) donates
+        self.factory: dict[str, tuple] = {}  # self.<name>(k)(...) donates
+
+        # donating-callable assignments can sit anywhere: module level
+        # (`step = jax.jit(f, donate_argnums=...)`) or inside methods
+        # (`self._release = self._jit(...)`)
+        for mod in an.modules.values():
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Assign) or not isinstance(
+                    node.value, ast.Call
+                ):
+                    continue
+                pos = _donated_positions(node.value, self.wrappers)
+                if pos is None:
+                    continue
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Attribute):
+                        self.attr[tgt.attr] = pos
+                    elif isinstance(tgt, ast.Subscript) and isinstance(
+                        tgt.value, ast.Attribute
+                    ):
+                        self.dict_attr[tgt.value.attr] = pos
+                    elif isinstance(tgt, ast.Name):
+                        self.attr[tgt.id] = pos
+
+        # factory: a method whose body returns self._D[...] for a donating _D
+        for fn in an.funcs:
+            for node in own_nodes(fn):
+                if not (
+                    isinstance(node, ast.Return)
+                    and isinstance(node.value, ast.Subscript)
+                    and isinstance(node.value.value, ast.Attribute)
+                ):
+                    continue
+                dname = node.value.value.attr
+                if dname in self.dict_attr:
+                    self.factory[fn.name] = self.dict_attr[dname]
+
+    def positions_for(self, call: ast.Call) -> tuple | None:
+        """Donated positions if `call` invokes a donating callable."""
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in self.attr:
+            return self.attr[f.id]
+        if isinstance(f, ast.Attribute) and f.attr in self.attr:
+            return self.attr[f.attr]
+        if (
+            isinstance(f, ast.Subscript)
+            and isinstance(f.value, ast.Attribute)
+            and f.value.attr in self.dict_attr
+        ):
+            return self.dict_attr[f.value.attr]
+        if (
+            isinstance(f, ast.Call)
+            and isinstance(f.func, ast.Attribute)
+            and f.func.attr in self.factory
+        ):
+            return self.factory[f.func.attr]
+        return None
+
+
+def _assigned_names(stmt: ast.AST) -> set[str]:
+    """Unparsed targets this statement (re)binds, flattening tuples."""
+    out = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    for t in targets:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            out.update(_unparse(e) for e in t.elts)
+        else:
+            out.add(_unparse(t))
+    return out
+
+
+def _reads_in(stmt: ast.AST, name: str) -> ast.AST | None:
+    """First Load of `name` (an unparsed Name/Attribute chain) in stmt."""
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            if isinstance(getattr(node, "ctx", None), ast.Load):
+                if _unparse(node) == name:
+                    return node
+    return None
+
+
+_SIMPLE_STMTS = (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr, ast.Return)
+
+
+def _blocks_of(fn_node: ast.AST):
+    """Yield every statement list in the function, not descending into
+    nested defs (those are separate FuncInfos with their own blocks)."""
+    pending = [getattr(fn_node, "body", [])]
+    while pending:
+        block = pending.pop()
+        yield block
+        for stmt in block:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for fname in ("body", "orelse", "finalbody"):
+                child = getattr(stmt, fname, None)
+                if child:
+                    pending.append(child)
+            for handler in getattr(stmt, "handlers", []):
+                pending.append(handler.body)
+
+
+class RuleFP002:
+    """A value passed through a donated position, then read again.
+
+    Flow-insensitive within each statement block: the donated name must be
+    rebound by the donating statement itself (the ``x = f(x)`` safe idiom)
+    or never read again in the block.  A read inside a later nested block
+    counts as a read — over-approximate on purpose.
+    """
+
+    ID = "FP002"
+
+    def check(self, an: Analysis) -> list[Finding]:
+        dm = _DonationMap(an)
+        out = []
+        for fn in an.funcs:
+            for block in _blocks_of(fn.node):
+                out.extend(self._check_block(dm, fn, block))
+        return out
+
+    def _check_block(self, dm, fn: FuncInfo, block) -> list[Finding]:
+        findings = []
+        for i, stmt in enumerate(block):
+            if not isinstance(stmt, _SIMPLE_STMTS):
+                continue
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                pos = dm.positions_for(call)
+                if not pos:
+                    continue
+                for p in pos:
+                    if not isinstance(p, int) or p >= len(call.args):
+                        continue
+                    arg = call.args[p]
+                    if not isinstance(arg, (ast.Name, ast.Attribute)):
+                        continue
+                    name = _unparse(arg)
+                    if name in _assigned_names(stmt):
+                        continue  # donated-and-reassigned: the safe idiom
+                    hit = self._later_read(block[i + 1:], name)
+                    if hit is not None:
+                        findings.append(
+                            Finding(
+                                self.ID, fn.path, hit.lineno, hit.col_offset,
+                                f"`{name}` read after being donated at "
+                                f"line {call.lineno} (in {fn.name})",
+                            )
+                        )
+        return findings
+
+    @staticmethod
+    def _later_read(stmts, name):
+        for stmt in stmts:
+            if isinstance(stmt, _SIMPLE_STMTS) and name in _assigned_names(stmt):
+                # a self-referencing rebind (x = f(x)) still reads first
+                if isinstance(stmt, ast.Assign):
+                    return _reads_in(stmt.value, name)
+                return None
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    break
+                if isinstance(node, (ast.Name, ast.Attribute)):
+                    if isinstance(getattr(node, "ctx", None), ast.Load):
+                        if _unparse(node) == name:
+                            return node
+        return None
+
+
+# ---------------------------------------------------------------------------
+# FP003: unbounded jit-cache keys
+# ---------------------------------------------------------------------------
+
+
+class RuleFP003:
+    """len()-derived scalars keying a jit cache without bucketing."""
+
+    ID = "FP003"
+
+    def check(self, an: Analysis) -> list[Finding]:
+        out = []
+        for fn in an.funcs:
+            out.extend(self._check_func(fn))
+        return out
+
+    def _check_func(self, fn: FuncInfo) -> list[Finding]:
+        unbounded: set[str] = set()
+        findings = []
+        reported: set[str] = set()
+        for stmt in ast.walk(fn.node):
+            if isinstance(stmt, ast.Assign):
+                names = _assigned_names(stmt)
+                if self._expr_unbounded(stmt.value, unbounded):
+                    unbounded |= names
+                else:
+                    unbounded -= names
+        sites = []
+        for node in own_nodes(fn):
+            if not isinstance(node, ast.Subscript):
+                continue
+            base = node.value
+            if not (
+                isinstance(base, ast.Attribute)
+                and base.attr.endswith(JIT_CACHE_ATTR_SUFFIX)
+            ):
+                continue
+            if self._expr_unbounded(node.slice, unbounded):
+                sites.append((node.lineno, node.col_offset, base.attr, node.slice))
+        # one finding per distinct key, at its first (source-order) use
+        for lineno, col, attr, key_node in sorted(sites, key=lambda s: (s[0], s[1])):
+            key = _unparse(key_node)
+            if key in reported:
+                continue
+            reported.add(key)
+            findings.append(
+                Finding(
+                    self.ID, fn.path, lineno, col,
+                    f"jit cache `{attr}` keyed by unbounded "
+                    f"`{key}` (no bucketing; in {fn.name})",
+                )
+            )
+        return findings
+
+    def _expr_unbounded(self, expr: ast.AST, unbounded: set[str]) -> bool:
+        """True when expr derives from len() without a bounding function."""
+        if isinstance(expr, ast.Call):
+            f = expr.func
+            name = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id", "")
+            if name in BOUNDER_NAMES:
+                return False
+            if name == "min":
+                return all(self._expr_unbounded(a, unbounded) for a in expr.args)
+            if name == "len":
+                return True
+            return any(self._expr_unbounded(a, unbounded) for a in expr.args)
+        if isinstance(expr, ast.Name):
+            return expr.id in unbounded
+        if isinstance(expr, ast.Attribute):
+            return False  # config attrs / .shape: statically fixed
+        if isinstance(expr, ast.Constant):
+            return False
+        return any(
+            self._expr_unbounded(c, unbounded) for c in ast.iter_child_nodes(expr)
+        )
+
+
+# ---------------------------------------------------------------------------
+# FP004: acquire/release pairing through _forget
+# ---------------------------------------------------------------------------
+
+
+class RuleFP004:
+    """Every hold increment needs a release reachable from the _forget funnel."""
+
+    ID = "FP004"
+
+    def check(self, an: Analysis) -> list[Finding]:
+        acquires: list[tuple[str, FuncInfo, ast.AST]] = []  # (kind, fn, node)
+        releases: dict[str, list[FuncInfo]] = {}
+
+        for fn in an.funcs:
+            for node in own_nodes(fn):
+                kind = self._acquire_kind(node)
+                if kind:
+                    acquires.append((kind, fn, node))
+                for rkind in self._release_kinds(node):
+                    releases.setdefault(rkind, []).append(fn)
+
+        if not acquires:
+            return []
+
+        # the funnel: _forget itself, everything it (transitively) calls, and
+        # its direct callers (cancel/abort wrappers route through it)
+        funnel_roots = {f.qual for f in an.funcs if f.name == RELEASE_FUNNEL}
+        funnel_roots |= {f.qual for f in an.callers_of(RELEASE_FUNNEL)}
+        funnel = an.reachable(funnel_roots)
+
+        out = []
+        for kind, fn, node in acquires:
+            ok = any(rf.qual in funnel for rf in releases.get(kind, []))
+            if not ok:
+                out.append(
+                    Finding(
+                        self.ID, fn.path, node.lineno, node.col_offset,
+                        f"`{kind}` hold acquired here has no release path "
+                        f"through `{RELEASE_FUNNEL}` (in {fn.name})",
+                    )
+                )
+        return out
+
+    @staticmethod
+    def _counter_name(target: ast.AST) -> str | None:
+        if isinstance(target, ast.Subscript) and isinstance(
+            target.value, ast.Attribute
+        ):
+            if target.value.attr in HOLD_COUNTERS:
+                return target.value.attr
+        return None
+
+    def _acquire_kind(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Add):
+            return self._counter_name(node.target)
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.BinOp):
+            if isinstance(node.value.op, ast.Add):
+                for tgt in node.targets:
+                    name = self._counter_name(tgt)
+                    if name:
+                        return name
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr in PIN_ACQUIRES:
+                return "pin"
+        return None
+
+    def _release_kinds(self, node: ast.AST):
+        if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Sub):
+            name = self._counter_name(node.target)
+            if name:
+                yield name
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.BinOp):
+            if isinstance(node.value.op, ast.Sub):
+                for tgt in node.targets:
+                    name = self._counter_name(tgt)
+                    if name:
+                        yield name
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr in PIN_RELEASES:
+                yield "pin"
+            if node.func.attr == "pop" and isinstance(node.func.value, ast.Attribute):
+                if node.func.value.attr in HOLD_COUNTERS:
+                    yield node.func.value.attr
+        # decrement written via .get(p, 0) - 1 then reassigned
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+            if isinstance(node.left, ast.Call) and isinstance(
+                node.left.func, ast.Attribute
+            ):
+                inner = node.left.func
+                if inner.attr == "get" and isinstance(inner.value, ast.Attribute):
+                    if inner.value.attr in HOLD_COUNTERS:
+                        yield inner.value.attr
+
+
+# ---------------------------------------------------------------------------
+# FP005: unseeded randomness in serving/faults code
+# ---------------------------------------------------------------------------
+
+
+class RuleFP005:
+    """np.random.* outside default_rng(seed) breaks deterministic chaos."""
+
+    ID = "FP005"
+    SCOPE = ("serving", "faults")
+
+    def check(self, an: Analysis) -> list[Finding]:
+        out = []
+        for mod in an.modules.values():
+            if not any(part in mod.path for part in self.SCOPE):
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if not (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Attribute)
+                    and f.value.attr == "random"
+                    and isinstance(f.value.value, ast.Name)
+                    and f.value.value.id in mod.numpy_aliases
+                ):
+                    continue
+                if f.attr == "default_rng" and node.args:
+                    continue  # seeded generator: the sanctioned entry point
+                out.append(
+                    Finding(
+                        self.ID, mod.path, node.lineno, node.col_offset,
+                        f"unseeded `np.random.{f.attr}` in serving/faults "
+                        "code (use default_rng(seed))",
+                    )
+                )
+        return out
+
+
+ALL_RULES = (RuleFP001, RuleFP002, RuleFP003, RuleFP004, RuleFP005)
+RULE_IDS = tuple(r.ID for r in ALL_RULES)

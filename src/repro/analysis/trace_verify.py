@@ -1,0 +1,232 @@
+"""Layer 2: jaxpr/executable-level verification of the real engine.
+
+Three checks, all against *lowered artifacts* rather than source text, so a
+refactor cannot silently regress the fast-path contracts:
+
+- **decode-body purity**: the jaxpr of the fused ``step_block`` body must
+  contain no host-callback or device-transfer primitives — nothing inside
+  the scanned decode loop may talk to the host.
+- **donation aliasing**: for every jitted donated transition (``step_block``,
+  admit, release, ``paged_append_chunk``) the compiled executable must
+  report an ``input_output_alias`` entry for every donated state leaf.  A
+  donation that XLA declined (shape/dtype mismatch after a refactor) would
+  double KV memory and break the bytes-touched-once argument — this check
+  turns that into a test failure.
+- **compile-count boundedness**: replaying a sweep of prompt lengths through
+  the bucketed prefill must create at most ``len(buckets)`` cache entries.
+
+Everything runs on CPU XLA with a reduced config (a few seconds), so it can
+sit in the tier-1 matrix; ``tools/fastpath_lint.py --trace`` runs the same
+checks from the CLI.
+"""
+
+from __future__ import annotations
+
+import re
+
+# primitives that move data to/from the host or call back into Python; none
+# of these may appear inside the scanned decode body
+BANNED_PRIMITIVES = (
+    "io_callback",
+    "pure_callback",
+    "python_callback",
+    "callback",
+    "host_callback",
+    "outside_call",
+    "device_put",
+    "infeed",
+    "outfeed",
+    "debug_print",
+)
+
+_ALIAS_RE = re.compile(r"\{([\d,\s]*)\}:\s*\((\d+)")
+
+
+def _jaxpr_primitives(jaxpr) -> set[str]:
+    """All primitive names in a (closed) jaxpr, recursing into sub-jaxprs
+    (pjit/scan/while bodies live in eqn.params).
+
+    ``device_put`` of a *literal* is constant placement (jnp.int32(1) inside
+    a traced body — folded at compile time, no runtime transfer) and is not
+    counted; ``device_put`` of a traced var is.
+    """
+    from jax.core import Literal
+
+    names: set[str] = set()
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "device_put" and all(
+                isinstance(v, Literal) for v in eqn.invars
+            ):
+                continue
+            names.add(eqn.primitive.name)
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    walk(inner)
+                elif hasattr(v, "eqns"):
+                    walk(v)
+
+    walk(getattr(jaxpr, "jaxpr", jaxpr))
+    return names
+
+
+def decode_body_violations(engine, k: int | None = None) -> list[str]:
+    """Banned-primitive scan of the fused decode block's jaxpr."""
+    import jax
+
+    k = k if k is not None else engine.decode_block
+    fn = engine._block_fn(k)
+    jaxpr = jax.make_jaxpr(fn)(engine.params, engine.state)
+    hits = sorted(_jaxpr_primitives(jaxpr) & set(BANNED_PRIMITIVES))
+    return [
+        f"decode body (step_block k={k}) contains host-sync primitive `{p}`"
+        for p in hits
+    ]
+
+
+def _aliased_param_indices(fn, *args) -> set[int]:
+    """Flat parameter indices the compiled executable aliases to an output.
+
+    The first line of the compiled HLO carries
+    ``input_output_alias={ {out}: (param, {}, may-alias), ... }``.
+    """
+    compiled = fn.lower(*args).compile()
+    text = compiled.as_text().splitlines()[0]
+    return {int(param) for _out, param in _ALIAS_RE.findall(text)}
+
+
+def _leaf_names(tree) -> list[str]:
+    """Key-path names for every leaf of a pytree, in flatten order."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(path) for path, _leaf in flat]
+
+
+def donation_violations(fn, donate_pos: int, tag: str, *args) -> list[str]:
+    """Every leaf of args[donate_pos] must be aliased to an output."""
+    import jax
+
+    aliased = _aliased_param_indices(fn, *args)
+    problems = []
+    offset = 0
+    for i, arg in enumerate(args):
+        n_leaves = len(jax.tree_util.tree_leaves(arg))
+        if i == donate_pos:
+            names = _leaf_names(arg)
+            for j in range(n_leaves):
+                if offset + j not in aliased:
+                    problems.append(
+                        f"{tag}: donated leaf `{names[j]}` (flat param "
+                        f"{offset + j}) has no input_output_alias — "
+                        "donation silently degraded to a copy"
+                    )
+        offset += n_leaves
+    return problems
+
+
+def engine_donation_violations(engine, kv_pack=None) -> list[str]:
+    """Donation-aliasing check for every donated engine transition."""
+    import jax.numpy as jnp
+
+    problems = []
+    k = engine.decode_block
+    problems += donation_violations(
+        engine._block_fn(k), 1, f"step_block(k={k})", engine.params, engine.state
+    )
+    keep = jnp.ones((engine.max_slots,), bool)
+    problems += donation_violations(
+        engine._release, 0, "release", engine.state, keep
+    )
+    if kv_pack is not None:
+        args = (
+            engine.state,
+            kv_pack,
+            jnp.int32(0),
+            jnp.int32(0),
+            jnp.int32(1),
+            jnp.int32(1),
+        )
+        if engine.paged:
+            import numpy as np
+
+            pps = engine.pages_per_slot
+            args += (
+                jnp.asarray(np.full((pps,), -1, np.int32)),
+                jnp.int32(0),
+                jnp.asarray(np.zeros((pps,), bool)),
+                jnp.int32(0),
+            )
+        problems += donation_violations(
+            engine._admit_fn(kv_pack), 0, "admit", *args
+        )
+    return problems
+
+
+def compile_count_violations(prefill, lengths) -> list[str]:
+    """Replaying `lengths` through the bucketed prefill must stay within the
+    bucket list (one jit-cache entry per touched bucket)."""
+    if not prefill.bucketed:
+        return ["compile-count check needs a bucketed PrefillEngine"]
+    touched = {prefill._pad_len(n) for n in lengths}
+    before = len(prefill._fns)
+    import jax
+
+    for n in lengths:
+        req_tokens = list(range(1, n + 1))
+        prefill.prefill(_gen_request(0, req_tokens), jax.random.PRNGKey(0))
+    grown = len(prefill._fns) - before
+    problems = []
+    if grown > len(touched):
+        problems.append(
+            f"prefill compiled {grown} entries for {len(lengths)} lengths "
+            f"spanning {len(touched)} buckets — jit-cache key is unbounded"
+        )
+    if len(prefill._fns) > 2 * len(prefill.buckets):
+        problems.append(
+            f"prefill jit cache has {len(prefill._fns)} entries for "
+            f"{len(prefill.buckets)} buckets"
+        )
+    return problems
+
+
+def _gen_request(rid, tokens):
+    import numpy as np
+
+    from repro.serving.engine import GenRequest
+
+    return GenRequest(rid, np.asarray(tokens, np.int32), 4)
+
+
+def build_tiny_engines(paged: bool = True):
+    """(prefill, decode, kv_pack) on a reduced config — shared by the CLI
+    and tests/test_donation_aliasing.py."""
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import model as M
+    from repro.serving import DecodeEngine, PrefillEngine, SamplingParams
+
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sp = SamplingParams(temperature=0.0)
+    prefill = PrefillEngine(params, cfg, sp)
+    decode = DecodeEngine(
+        params, cfg, max_slots=2, max_len=64, sampling=sp,
+        decode_block=2, paged=paged, page_size=16,
+    )
+    _tok, kv_pack, _tl = prefill.prefill(
+        _gen_request(0, list(range(1, 9))), jax.random.PRNGKey(1)
+    )
+    return prefill, decode, kv_pack
+
+
+def verify_all() -> list[str]:
+    """Run every layer-2 check; returns a list of violations (empty = clean)."""
+    prefill, decode, kv_pack = build_tiny_engines(paged=True)
+    problems = decode_body_violations(decode)
+    problems += engine_donation_violations(decode, kv_pack)
+    problems += compile_count_violations(prefill, [3, 5, 9, 17, 20])
+    return problems

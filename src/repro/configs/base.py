@@ -275,17 +275,17 @@ def reduced(cfg: ModelConfig, *, d_model: int = 64, n_layers: Optional[int] = No
         n_layers = pat  # one repeat of the full pattern
     n_heads = 4
     n_kv = max(1, min(cfg.n_kv_heads, (n_heads if cfg.n_kv_heads >= cfg.n_heads else 2)))
-    changes = dict(
-        name=cfg.name + "-reduced",
-        n_layers=n_layers,
-        d_model=d_model,
-        n_heads=n_heads,
-        n_kv_heads=n_kv,
-        d_head=16,
-        d_ff=d_model * 2,
-        vocab_size=256,
-        max_seq_len=512,
-    )
+    changes = {
+        "name": cfg.name + "-reduced",
+        "n_layers": n_layers,
+        "d_model": d_model,
+        "n_heads": n_heads,
+        "n_kv_heads": n_kv,
+        "d_head": 16,
+        "d_ff": d_model * 2,
+        "vocab_size": 256,
+        "max_seq_len": 512,
+    }
     if cfg.moe is not None:
         changes["moe"] = MoEConfig(
             n_experts=4,

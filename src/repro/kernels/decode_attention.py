@@ -99,6 +99,7 @@ def decode_attention_pallas(
     G = H // KV
     scale = d ** -0.5
 
+    # fastpath: allow[FP001] int() of a static Python scalar at trace time, not a traced value
     L_eff = L if max_length is None else max(1, min(L, int(max_length)))
     bs = min(block_s, L_eff)
     ns = -(-L_eff // bs)  # bounded split count; blocks past it are never read
@@ -230,6 +231,7 @@ def decode_attention_paged_pallas(
     G = H // KV
     scale = d ** -0.5
 
+    # fastpath: allow[FP001] int() of a static Python scalar at trace time, not a traced value
     ns = n_pg if max_length is None else max(1, min(n_pg, -(-int(max_length) // ps)))
     qt = q.reshape(B, KV, G, d)
     kt = jnp.moveaxis(k_pool, 2, 1)  # [P, KV, ps, d]

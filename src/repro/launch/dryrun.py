@@ -26,7 +26,7 @@ from repro.launch.steps import build_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
 
-MESHES = {"single": dict(multi_pod=False), "pod": dict(multi_pod=True)}
+MESHES = {"single": {"multi_pod": False}, "pod": {"multi_pod": True}}
 
 
 def cells(archs=None, shapes=None, assigned_only=True):

@@ -435,7 +435,7 @@ def mla_init(key, cfg: ModelConfig):
     d, H = cfg.d_model, cfg.n_heads
     ks = jax.random.split(key, 6)
     qh = a.qk_nope_head_dim + a.qk_rope_head_dim
-    p = {
+    return {
         "wq_a": _normal(ks[0], (d, a.q_lora_rank), d ** -0.5, pdt(cfg)),
         "q_ln": jnp.ones((a.q_lora_rank,), pdt(cfg)),
         "wq_b": _normal(ks[1], (a.q_lora_rank, H, qh), a.q_lora_rank ** -0.5, pdt(cfg)),
@@ -449,7 +449,6 @@ def mla_init(key, cfg: ModelConfig):
         ),
         "wo": _normal(ks[4], (H, a.v_head_dim, d), (H * a.v_head_dim) ** -0.5, pdt(cfg)),
     }
-    return p
 
 
 def mla_axes(cfg: ModelConfig):

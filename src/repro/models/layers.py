@@ -129,8 +129,7 @@ def embed_axes(cfg: ModelConfig):
 
 
 def embed_apply(p, tokens, cfg: ModelConfig):
-    x = jnp.take(p["tokens"], tokens, axis=0)
-    return x
+    return jnp.take(p["tokens"], tokens, axis=0)
 
 
 def add_positions(p, x, cfg: ModelConfig, offset: int | jnp.ndarray = 0):

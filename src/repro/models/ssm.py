@@ -30,7 +30,7 @@ def mamba_init(key, cfg: ModelConfig):
         jax.random.uniform(ks[2], (nh,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
         + jnp.log(0.001)
     )
-    p = {
+    return {
         "in_proj": _normal(ks[0], (d, 2 * di + 2 * gdn + nh), d ** -0.5, pdt(cfg)),
         "conv_w": _normal(ks[1], (s.d_conv, conv_ch), s.d_conv ** -0.5, pdt(cfg)),
         "conv_b": jnp.zeros((conv_ch,), pdt(cfg)),
@@ -42,7 +42,6 @@ def mamba_init(key, cfg: ModelConfig):
         "norm": jnp.ones((di,), pdt(cfg)),
         "out_proj": _normal(ks[4], (di, d), di ** -0.5, pdt(cfg)),
     }
-    return p
 
 
 def mamba_axes(cfg: ModelConfig):

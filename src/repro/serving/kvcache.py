@@ -637,7 +637,7 @@ def paged_swap_out(
         state, slot, n_pg * page_size, cfg, page_size=page_size,
         start_page=start_page,
     )
-    return jax.device_get(pack)
+    return jax.device_get(pack)  # fastpath: allow[FP001] swap-out runs at preemption cadence, off the decode path
 
 
 def paged_swap_in(
@@ -731,10 +731,10 @@ def audit(
     one sync of the small arrays — safe to run every N rounds in production
     and after every drain in tests.
     """
-    refs = np.asarray(state.page_refs)
-    bt = np.asarray(state.block_tables)
-    active = np.asarray(state.active)
-    positions = np.asarray(state.positions)
+    refs = np.asarray(state.page_refs)  # fastpath: allow[FP001] audit-cadence sync (small array)
+    bt = np.asarray(state.block_tables)  # fastpath: allow[FP001] audit-cadence sync (small array)
+    active = np.asarray(state.active)  # fastpath: allow[FP001] audit-cadence sync (small array)
+    positions = np.asarray(state.positions)  # fastpath: allow[FP001] audit-cadence sync (small array)
     n_pages = int(refs.shape[0])
     max_slots, pages_per_slot = bt.shape
     probs: List[str] = []
@@ -791,7 +791,7 @@ def audit(
     if len(bad) > 8:
         probs.append(f"... and {len(bad) - 8} more refcount discrepancies")
     if href is not None:
-        hbad = np.nonzero(np.asarray(href) > refs)[0]
+        hbad = np.nonzero(np.asarray(href) > refs)[0]  # fastpath: allow[FP001] audit-cadence sync
         for p in hbad[:8]:
             probs.append(
                 f"page {int(p)}: host hold mirror {int(href[p])} exceeds "

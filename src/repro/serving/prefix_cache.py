@@ -41,7 +41,7 @@ def chunk_hashes(tokens, page_size: int, max_chunks: Optional[int] = None) -> Li
     ``h_j`` covers tokens ``[0, (j+1) * page_size)`` — prefix-complete, so a
     hash hit implies the whole prefix matches, not just the chunk body.
     """
-    arr = np.asarray(tokens, np.int32)
+    arr = np.asarray(tokens, np.int32)  # fastpath: allow[FP001] hashes the host token list (numpy in)
     n = len(arr) // page_size
     if max_chunks is not None:
         n = min(n, max_chunks)

@@ -287,7 +287,7 @@ class Scheduler:
                     continue
             rest.append(r)
         self.queue = rest
-        for r, (m, d) in zip(group, matches):
+        for r, (m, d) in zip(group, matches, strict=False):
             if m is not None:
                 d.pin_prefix(r.rid, m)
             # the request leaves the queue: its memoized hashes ride on in

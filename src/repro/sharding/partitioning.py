@@ -120,7 +120,7 @@ def resolve_spec(
     used: set = set()
     out = []
     assert len(axes) == len(shape), (axes, shape)
-    for name, size in zip(axes, shape):
+    for name, size in zip(axes, shape, strict=False):
         assigned = None
         if name is not None:
             for cand in rules.get(name, []):

@@ -102,7 +102,7 @@ def restore(path: str, tree_like: Any, step: Optional[int] = None) -> Tuple[Any,
         f"checkpoint has {meta['n']} leaves, expected {len(leaves_like)}"
     )
     leaves = []
-    for i, (like, dt) in enumerate(zip(leaves_like, meta["dtypes"])):
+    for i, (like, dt) in enumerate(zip(leaves_like, meta["dtypes"], strict=False)):
         arr = _decode(data[f"a{i}"], dt)
         assert tuple(arr.shape) == tuple(like.shape), (i, arr.shape, like.shape)
         leaves.append(jnp.asarray(arr))

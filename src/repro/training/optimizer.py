@@ -87,7 +87,7 @@ class AdamW:
         flat_g = tdef.flatten_up_to(grads)
         flat_m = tdef.flatten_up_to(state.m)
         flat_v = tdef.flatten_up_to(state.v)
-        new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p, strict=False)]
         new_p = tdef.unflatten([n[0] for n in new])
         new_m = tdef.unflatten([n[1] for n in new])
         new_v = tdef.unflatten([n[2] for n in new])

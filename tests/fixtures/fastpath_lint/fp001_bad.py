@@ -1,0 +1,10 @@
+"""FP001 bad: np.asarray inside a jitted body."""
+import jax
+import numpy as np
+
+
+def body(x):
+    return np.asarray(x).sum()
+
+
+step = jax.jit(body)

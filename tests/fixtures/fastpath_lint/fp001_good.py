@@ -1,0 +1,16 @@
+"""FP001 good: device-side jnp.asarray, plus one audited allow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def body(x):
+    return jnp.asarray(x).sum()
+
+
+def step_done(x):
+    return np.asarray(x)  # fastpath: allow[FP001] lifecycle-cadence readback
+
+
+step = jax.jit(body)
+final = jax.jit(step_done)

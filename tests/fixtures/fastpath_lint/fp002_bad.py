@@ -1,0 +1,9 @@
+"""FP002 bad: state read after being passed through a donated position."""
+import jax
+
+step = jax.jit(lambda s: s, donate_argnums=(0,))
+
+
+def caller(state):
+    out = step(state)
+    return out, state.tokens

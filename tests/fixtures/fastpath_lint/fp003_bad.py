@@ -1,0 +1,13 @@
+"""FP003 bad: a len()-derived scalar keys the jit cache directly."""
+
+
+class Prefill:
+    def __init__(self):
+        self._fns = {}
+
+    def get(self, prompt):
+        S = len(prompt)
+        key = (S, 1)
+        if key not in self._fns:
+            self._fns[key] = object()
+        return self._fns[key]

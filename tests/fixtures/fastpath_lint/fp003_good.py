@@ -1,0 +1,17 @@
+"""FP003 good: the key passes through the bucketing function."""
+
+
+def _bucket(n):
+    return max(16, 1 << (n - 1).bit_length())
+
+
+class Prefill:
+    def __init__(self):
+        self._fns = {}
+
+    def get(self, prompt):
+        S = _bucket(len(prompt))
+        key = (S, 1)
+        if key not in self._fns:
+            self._fns[key] = object()
+        return self._fns[key]

@@ -1,0 +1,9 @@
+"""FP004 bad: a hold increment with no release path through _forget."""
+
+
+class Pool:
+    def __init__(self):
+        self._href = {}
+
+    def admit(self, p):
+        self._href[p] = self._href.get(p, 0) + 1

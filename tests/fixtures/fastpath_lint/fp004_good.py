@@ -1,0 +1,15 @@
+"""FP004 good: the increment pairs with a decrement reachable from _forget."""
+
+
+class Pool:
+    def __init__(self):
+        self._href = {}
+
+    def admit(self, p):
+        self._href[p] = self._href.get(p, 0) + 1
+
+    def _release(self, p):
+        self._href[p] -= 1
+
+    def _forget(self, p):
+        self._release(p)

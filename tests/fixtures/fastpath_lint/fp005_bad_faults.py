@@ -1,0 +1,6 @@
+"""FP005 bad: unseeded np.random in faults code."""
+import numpy as np
+
+
+def jitter():
+    return np.random.random()

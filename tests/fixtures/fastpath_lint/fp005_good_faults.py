@@ -1,0 +1,10 @@
+"""FP005 good: all randomness flows from a seeded generator."""
+import numpy as np
+
+
+def make_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def jitter(rng):
+    return rng.random()

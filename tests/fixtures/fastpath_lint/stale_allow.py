@@ -1,0 +1,6 @@
+"""An allow-comment on a clean line must itself be an error."""
+import numpy as np
+
+
+def pure_host(x):
+    return np.sum(x)  # fastpath: allow[FP001] nothing to suppress here

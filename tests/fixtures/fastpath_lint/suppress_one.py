@@ -1,0 +1,12 @@
+"""An allow suppresses exactly the finding on its own line, not others."""
+import jax
+import numpy as np
+
+
+def body(x):
+    a = np.asarray(x)  # fastpath: allow[FP001] the audited one
+    b = np.asarray(x)
+    return a + b
+
+
+step = jax.jit(body)

@@ -90,48 +90,48 @@ def test_regression_compare_tolerates_machine_noise():
 
 
 def test_regression_compare_fails_on_mismatches():
-    checks = dict((n, ok) for n, ok, _ in compare(_metrics(smism=2), _metrics()))
+    checks = {n: ok for n, ok, _ in compare(_metrics(smism=2), _metrics())}
     assert not checks["shared_stream_mismatches"]
-    checks = dict((n, ok) for n, ok, _ in compare(_metrics(mism=1), _metrics()))
+    checks = {n: ok for n, ok, _ in compare(_metrics(mism=1), _metrics())}
     assert not checks["paged_stream_mismatches"]
 
 
 def test_regression_compare_fails_on_throughput_regression():
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(tps_ratio=0.9 * 0.7), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(tps_ratio=0.9 * 0.7), _metrics())
+    }
     assert not checks["tokens_per_s_ratio"]
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(spt_ratio=1.1 * 1.3), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(spt_ratio=1.1 * 1.3), _metrics())
+    }
     assert not checks["decode_s_per_token_ratio"]
 
 
 def test_regression_compare_scheduler_gates():
     # kv-aware must keep strictly beating fcfs on queue-wait p99
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(kv_p99=5.0), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(kv_p99=5.0), _metrics())
+    }
     assert not checks["sched_kv_aware_p99_improves"]
     # round math is deterministic: any drift from the committed reference fails
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(kv_p99=2.0), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(kv_p99=2.0), _metrics())
+    }
     assert not checks["sched_wait_rounds_committed"]
     assert checks["sched_kv_aware_p99_improves"]  # still an improvement
     # preempted streams must stay bit-exact; preemption count must not drift
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(preempt_mism=1), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(preempt_mism=1), _metrics())
+    }
     assert not checks["sched_preempted_streams_bitexact"]
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(preemptions=0, high_wait=4),
-                                        _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(preemptions=0, high_wait=4),
+                                      _metrics())
+    }
     assert not checks["sched_preemptions_committed"]
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(sched_mism=2), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(sched_mism=2), _metrics())
+    }
     assert not checks["sched_stream_mismatches"]
 
 
@@ -145,34 +145,32 @@ def test_regression_compare_skips_scheduler_for_old_baselines():
 
 def test_regression_compare_robustness_gates():
     # chaos streams must stay bit-identical and the KV audit clean — always
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(rob_mism=1), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rob_mism=1), _metrics())
+    }
     assert not checks["robust_stream_mismatches"]
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(rob_audit=3), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rob_audit=3), _metrics())
+    }
     assert not checks["robust_audit_clean"]
     # same seed: recovery rounds / shed counts are exact
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(rob_recovery=7), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rob_recovery=7), _metrics())
+    }
     assert not checks["robust_schedule_committed"]
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(rob_shed=5), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rob_shed=5), _metrics())
+    }
     assert not checks["robust_schedule_committed"]
     # different seed (local --seed experimentation): exact compare skipped,
     # but the unconditional gates still apply
-    checks = dict(
-        (n, ok)
-        for n, ok, _ in compare(_metrics(rob_seed=42, rob_recovery=7), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rob_seed=42, rob_recovery=7), _metrics())
+    }
     assert checks["robust_schedule_committed"]
-    checks = dict(
-        (n, ok)
-        for n, ok, _ in compare(_metrics(rob_seed=42, rob_audit=1), _metrics())
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rob_seed=42, rob_audit=1), _metrics())
+    }
     assert not checks["robust_audit_clean"]
 
 
@@ -185,12 +183,12 @@ def test_regression_compare_skips_robustness_for_old_baselines():
 
 def test_regression_compare_fails_on_kv_accounting_drift():
     # deterministic accounting drifted from the committed value -> stale BENCH
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(saving=0.40), _metrics(saving=0.45))
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(saving=0.40), _metrics(saving=0.45))
+    }
     assert not checks["kv_new_bytes_saving_committed"]
     # and the hard 30% acceptance floor
-    checks = dict(
-        (n, ok) for n, ok, _ in compare(_metrics(saving=0.2), _metrics(saving=0.2))
-    )
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(saving=0.2), _metrics(saving=0.2))
+    }
     assert not checks["kv_new_bytes_saving_floor"]

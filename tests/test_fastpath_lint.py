@@ -1,0 +1,149 @@
+"""Layer-1 analyzer tests: exact finding locations per fixture, allow-comment
+semantics (suppress exactly one finding; stale allows are errors), and the
+CLI exit-code contract (non-zero on violations, zero on src/repro at HEAD)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import lint_files, lint_paths
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "fastpath_lint"
+CLI = REPO / "tools" / "fastpath_lint.py"
+
+
+def _lint(name):
+    return lint_paths([str(FIXTURES / name)])
+
+
+def _sites(report):
+    return [(Path(f.path).name, f.line, f.rule) for f in report.findings]
+
+
+# ---------------------------------------------------------------- bad corpus
+
+BAD_EXPECT = {
+    "fp001_bad.py": [("fp001_bad.py", 7, "FP001")],
+    "fp002_bad.py": [("fp002_bad.py", 9, "FP002")],
+    "fp003_bad.py": [("fp003_bad.py", 12, "FP003")],
+    "fp004_bad.py": [("fp004_bad.py", 9, "FP004")],
+    "fp005_bad_faults.py": [("fp005_bad_faults.py", 6, "FP005")],
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_EXPECT))
+def test_bad_fixture_exact_location(name):
+    report = _lint(name)
+    assert _sites(report) == BAD_EXPECT[name]
+
+
+@pytest.mark.parametrize("name", sorted(BAD_EXPECT))
+def test_cli_exits_nonzero_on_violation(name):
+    proc = subprocess.run(
+        [sys.executable, str(CLI), str(FIXTURES / name)],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    rule = f"FP{name[2:5]}"
+    assert rule in proc.stdout
+
+
+# --------------------------------------------------------------- good corpus
+
+
+@pytest.mark.parametrize(
+    "name",
+    [
+        "fp001_good.py",
+        "fp002_good.py",
+        "fp003_good.py",
+        "fp004_good.py",
+        "fp005_good_faults.py",
+    ],
+)
+def test_good_fixture_clean(name):
+    report = _lint(name)
+    assert not report.failed, _sites(report) + [str(e) for e in report.errors]
+
+
+def test_good_fp001_allow_is_counted():
+    report = _lint("fp001_good.py")
+    assert len(report.allowed) == 1
+    allow, finding = report.allowed[0]
+    assert allow.rule == finding.rule == "FP001"
+
+
+# ------------------------------------------------------------ allow semantics
+
+
+def test_allow_suppresses_exactly_one_finding():
+    report = _lint("suppress_one.py")
+    assert len(report.allowed) == 1
+    assert _sites(report) == [("suppress_one.py", 8, "FP001")]
+
+
+def test_stale_allow_is_an_error():
+    report = _lint("stale_allow.py")
+    assert not report.findings
+    assert len(report.errors) == 1
+    assert report.errors[0].rule == "FP000"
+    assert "stale" in report.errors[0].message
+    assert report.failed
+
+
+def test_allow_without_reason_is_an_error():
+    src = (
+        "import jax\nimport numpy as np\n\n\n"
+        "def body(x):\n"
+        "    return np.asarray(x)  # fastpath: allow[FP001]\n\n\n"
+        "step = jax.jit(body)\n"
+    )
+    report = lint_files({"reasonless.py": src})
+    assert any("no reason" in e.message for e in report.errors)
+
+
+def test_allow_on_own_line_targets_next_line():
+    src = (
+        "import jax\nimport numpy as np\n\n\n"
+        "def body(x):\n"
+        "    # fastpath: allow[FP001] audited readback\n"
+        "    return np.asarray(x)\n\n\n"
+        "step = jax.jit(body)\n"
+    )
+    report = lint_files({"ownline.py": src})
+    assert not report.failed
+    assert len(report.allowed) == 1
+
+
+def test_docstring_mentioning_allow_syntax_is_not_an_allow():
+    src = '"""Docs: use `# fastpath: allow[FP001] reason` to annotate."""\n'
+    report = lint_files({"doconly.py": src})
+    assert not report.failed
+    assert not report.allowed
+
+
+# ------------------------------------------------------------- HEAD is clean
+
+
+def test_src_repro_clean_at_head():
+    report = lint_paths([str(REPO / "src" / "repro")])
+    assert not report.failed, [str(f) for f in report.findings + report.errors]
+    # the audited lifecycle syncs stay visible as counted allows
+    assert len(report.allowed) >= 15
+
+
+def test_cli_exits_zero_on_head():
+    proc = subprocess.run(
+        [sys.executable, str(CLI)],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_select_filters_rules():
+    report = lint_paths([str(FIXTURES / "fp001_bad.py")], select={"FP003"})
+    assert not report.findings

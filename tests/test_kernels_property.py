@@ -11,7 +11,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 
-SET = dict(max_examples=20, deadline=None)
+SET = {"max_examples": 20, "deadline": None}
 
 
 def _mx(a, b):

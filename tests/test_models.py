@@ -187,5 +187,5 @@ def test_param_axes_structure_matches_params():
             ),
         )
         assert len(pl) == len(al)
-        for p, a in zip(pl, al):
+        for p, a in zip(pl, al, strict=True):
             assert p.ndim == len(a), (p.shape, a)

@@ -152,7 +152,7 @@ def test_decode_step_block_tables_matches_slab(fixture, request):
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer != "attn":
             continue
-        for w, g in zip(jax.tree.leaves(slab_caches[i]), jax.tree.leaves(back[i])):
+        for w, g in zip(jax.tree.leaves(slab_caches[i]), jax.tree.leaves(back[i]), strict=True):
             np.testing.assert_array_equal(
                 np.asarray(w[:, 1:2, :38], np.float32), np.asarray(g, np.float32)
             )

@@ -254,10 +254,10 @@ def test_ttft_deadline(setup):
 _REFS = {}  # mode -> fault-free reference streams (greedy: policy-invariant)
 
 _MODES = {
-    "slab": dict(paged=False, prefix=False, chunk=None),
-    "paged": dict(paged=True, prefix=False, chunk=None),
-    "prefix": dict(paged=True, prefix=True, chunk=None),
-    "chunked": dict(paged=True, prefix=True, chunk=32),
+    "slab": {"paged": False, "prefix": False, "chunk": None},
+    "paged": {"paged": True, "prefix": False, "chunk": None},
+    "prefix": {"paged": True, "prefix": True, "chunk": None},
+    "chunked": {"paged": True, "prefix": True, "chunk": 32},
 }
 
 

@@ -529,7 +529,7 @@ def test_paged_extract_start_page_matches_tail(setup):
     tail = kvcache.paged_extract_request(eng.state, slot, length, cfg,
                                          page_size=PAGE, start_page=1)
     for i, (mixer, _) in enumerate(cfg.block_pattern):
-        for f, t in zip(jax.tree.leaves(full[i]), jax.tree.leaves(tail[i])):
+        for f, t in zip(jax.tree.leaves(full[i]), jax.tree.leaves(tail[i]), strict=True):
             if mixer == "attn":
                 np.testing.assert_array_equal(np.asarray(f[:, :, PAGE:]),
                                               np.asarray(t))
@@ -558,7 +558,7 @@ def test_paged_swap_in_reference_transition(setup):
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer != "attn":
             continue
-        for a, b in zip(jax.tree.leaves(back[i]), jax.tree.leaves(sw.pack[i])):
+        for a, b in zip(jax.tree.leaves(back[i]), jax.tree.leaves(sw.pack[i]), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b[:, :, :sw.length]))
 
 
@@ -606,7 +606,7 @@ def test_priority_preemption_end_to_end(setup):
     assert not sched.swapped  # everything resumed
     wait_swap = sched.queue_wait_rounds[100]
     # preempted lows finish bit-identically to the uninterrupted run
-    for got, want in zip(ls, ref):
+    for got, want in zip(ls, ref, strict=True):
         assert got.tokens == want.tokens
     assert len(high.tokens) == 16
 
@@ -615,7 +615,7 @@ def test_priority_preemption_end_to_end(setup):
     assert len(out_ns) == 6
     assert sched_ns.stats["preemptions"] == 0
     assert sched_ns.queue_wait_rounds[100] > wait_swap
-    for got, want in zip(ls_ns, ref):
+    for got, want in zip(ls_ns, ref, strict=True):
         assert got.tokens == want.tokens
 
 

@@ -100,7 +100,7 @@ def test_insert_extract_roundtrip(fixture, request):
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         want = jax.tree.leaves(single[i])
         got = jax.tree.leaves(back[i])
-        for w, g in zip(want, got):
+        for w, g in zip(want, got, strict=True):
             if mixer == "attn":
                 w = w[:, :, :10]
                 g = g[:, :, :10]

@@ -46,8 +46,8 @@ def test_input_specs_cover_assigned_matrix():
     from repro.configs import ASSIGNED_ARCHS, shape_applicable
 
     n = 0
-    for name, cfg in ASSIGNED_ARCHS.items():
-        for sname, shape in SHAPES.items():
+    for cfg in ASSIGNED_ARCHS.values():
+        for shape in SHAPES.values():
             ok, _ = shape_applicable(cfg, shape)
             if not ok:
                 with pytest.raises(ValueError):

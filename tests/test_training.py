@@ -97,7 +97,7 @@ def test_checkpoint_roundtrip_bf16():
         ckpt.save(d, tree, step=5)
         got, step = ckpt.restore(d, tree)
         assert step == 5
-        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got), strict=True):
             assert x.dtype == y.dtype
             assert np.array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
 

@@ -1,5 +1,6 @@
-"""Docs rot check: the fenced snippets in README.md and docs/serving.md must
-actually run, and the links between the markdown files must resolve.
+"""Docs rot check: the fenced snippets in README.md, docs/serving.md and
+docs/analysis.md must actually run, and the links between the markdown files
+must resolve.
 
 Docs that cannot break are docs nobody trusts, so CI executes them:
 
@@ -25,7 +26,11 @@ from pathlib import Path
 from typing import List, Tuple
 
 REPO = Path(__file__).resolve().parent.parent
-DOCS = [REPO / "README.md", REPO / "docs" / "serving.md"]
+DOCS = [
+    REPO / "README.md",
+    REPO / "docs" / "serving.md",
+    REPO / "docs" / "analysis.md",
+]
 
 FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 # [text](target) — but not images ![..](..) and not inline code

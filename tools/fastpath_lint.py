@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Fast-path invariant analyzer CLI.
+
+Layer 1 (default) is pure-AST: no jax import, runs in milliseconds::
+
+    PYTHONPATH=src python tools/fastpath_lint.py            # lint src/repro
+    PYTHONPATH=src python tools/fastpath_lint.py --select FP001,FP003 path/
+
+Layer 2 (``--trace``) imports the real engine and verifies donation
+aliasing, decode-body purity, and compile-count boundedness against the
+lowered executables (CPU XLA; a few seconds)::
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python tools/fastpath_lint.py --trace
+
+Exit status: 0 clean, 1 findings / stale allows / trace violations.
+``--summary`` appends a markdown findings table to ``$GITHUB_STEP_SUMMARY``
+(or a file given with ``--summary-file``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.lint import Report, lint_paths  # noqa: E402
+
+
+def summary_table(report: Report, traced: list[str] | None) -> str:
+    lines = [
+        "### fastpath lint",
+        "",
+        "| rule | findings | allowed (audited) |",
+        "|------|----------|-------------------|",
+    ]
+    for rule, c in sorted(report.counts().items()):
+        lines.append(f"| {rule} | {c['findings']} | {c['allowed']} |")
+    if report.errors:
+        lines.append(f"| FP000 (stale/malformed allows) | {len(report.errors)} | — |")
+    if traced is not None:
+        status = "clean" if not traced else f"{len(traced)} violation(s)"
+        lines.append("")
+        lines.append(f"**trace verifier (layer 2):** {status}")
+        lines.extend(f"- {p}" for p in traced)
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None, help="files/dirs to lint")
+    ap.add_argument("--select", help="comma-separated rule IDs (default: all)")
+    ap.add_argument(
+        "--trace", action="store_true",
+        help="also run the jaxpr/executable-level verifier (imports jax)",
+    )
+    ap.add_argument(
+        "--summary", action="store_true",
+        help="append a markdown table to $GITHUB_STEP_SUMMARY",
+    )
+    ap.add_argument("--summary-file", help="write the markdown table here")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [
+        os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    ]
+    select = set(args.select.split(",")) if args.select else None
+    report = lint_paths(paths, select=select)
+
+    for f in report.findings:
+        print(f)
+    for f in report.errors:
+        print(f)
+
+    traced = None
+    if args.trace:
+        from repro.analysis.trace_verify import verify_all
+
+        traced = verify_all()
+        for p in traced:
+            print(f"trace: {p}")
+
+    n_allowed = len(report.allowed)
+    n_bad = len(report.findings) + len(report.errors) + len(traced or [])
+    print(
+        f"fastpath lint: {len(report.findings)} finding(s), "
+        f"{len(report.errors)} allow error(s), {n_allowed} audited allow(s)"
+        + (f", {len(traced)} trace violation(s)" if traced is not None else "")
+    )
+
+    out = summary_table(report, traced)
+    if args.summary_file:
+        with open(args.summary_file, "w") as fh:
+            fh.write(out)
+    if args.summary and os.environ.get("GITHUB_STEP_SUMMARY"):
+        with open(os.environ["GITHUB_STEP_SUMMARY"], "a") as fh:
+            fh.write(out)
+
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
