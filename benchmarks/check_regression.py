@@ -32,7 +32,14 @@ Failure conditions (``--tolerance`` defaults to 0.25):
   run's surviving streams must be bit-identical to the fault-free run and
   the post-drain KV audit clean (always), and the fault counts / crash
   recovery rounds / shed counts must match the committed reference exactly
-  when the fresh run used the committed fault seed.
+  when the fresh run used the committed fault seed,
+* router (when the committed reference carries the section): on the skewed
+  prefix trace every matched request must route to the replica already
+  holding its prefix pages with 0 matched-chunk recompute, load imbalance
+  must stay under the committed bound, the unskewed routed streams must be
+  bit-identical to the single-replica FCFS baseline, and the per-replica
+  assignments must match the committed reference exactly (routing is a
+  pure function of the trace).
 
 ``compare()`` is pure and imported by tier-1 tests, so the gate's logic is
 itself under test without paying for a bench run.  With
@@ -228,6 +235,61 @@ def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple
                 f"{r_rob.get('seed')} (exact compare only on the committed "
                 f"seed)",
             )
+
+    # multi-replica router: the routed trace is fully deterministic (greedy
+    # streams + lexicographic tie-breaking), so locality/balance compare
+    # exactly; drift means the routing policy changed and the reference
+    # must be regenerated deliberately
+    r_rt = reference.get("router")
+    if r_rt is not None:
+        f_rt = fresh.get("router", {})
+        f_sk = f_rt.get("skewed", {})
+        r_sk = r_rt.get("skewed", {})
+        holder = f_sk.get("routed_to_holder", -1)
+        matched = f_sk.get("matched_requests", 0)
+        add(
+            "router_routed_to_holder",
+            matched > 0 and holder == matched,
+            f"{holder}/{matched} (acceptance: every prefix-matched request "
+            f"routes to the replica holding its pages)",
+        )
+        rec = f_sk.get("matched_chunk_recompute", -1)
+        add(
+            "router_matched_recompute",
+            rec == 0,
+            f"{rec} (acceptance: 0 — matched pages mapped from the "
+            f"holder's pool, never recomputed)",
+        )
+        bound = r_sk.get("load_imbalance_bound", 0)
+        imb = f_sk.get("load_imbalance", float("inf"))
+        add(
+            "router_load_imbalance",
+            imb <= bound,
+            f"{imb:.3f} (acceptance: <= committed bound {bound})",
+        )
+        umm = f_rt.get("unskewed", {}).get("stream_mismatches", -1)
+        add(
+            "router_stream_mismatches",
+            umm == 0,
+            f"{umm} (acceptance: 0 — routed streams bit-identical to the "
+            f"single-replica FCFS baseline)",
+        )
+
+        def rt_shape(d: dict) -> tuple:
+            sk, un = d.get("skewed", {}), d.get("unskewed", {})
+            return (
+                d.get("replicas"),
+                tuple(sk.get("per_replica_requests", ())),
+                sk.get("matched_pages"),
+                tuple(un.get("per_replica_requests", ())),
+            )
+
+        add(
+            "router_assignments_committed",
+            rt_shape(f_rt) == rt_shape(r_rt),
+            f"fresh {rt_shape(f_rt)} vs committed {rt_shape(r_rt)} — "
+            f"replica assignments are a pure function of the trace",
+        )
     return checks
 
 

@@ -50,9 +50,11 @@ from repro.models import model as M
 from repro.serving import (
     DecodeEngine,
     DisaggregatedServer,
+    EngineConfig,
     FaultPlan,
     GenRequest,
     PrefillEngine,
+    Router,
     make_scheduler,
 )
 from repro.serving.kvcache import kv_cache_bytes
@@ -85,6 +87,14 @@ ROB_FAULT_RATES = {"chunk_append": 0.1, "admit": 0.1,
                    "swap_in": 0.1, "swap_out": 0.1}
 ROB_SHED_AFTER = 3   # overload run: shed queued requests waiting > 3 rounds
 ROB_SHED_REQUESTS = 10
+# router section: its OWN constants too (same rule as the robustness
+# section) — the multi-replica routed trace is fully deterministic and
+# check_regression compares it exactly between smoke and full runs
+RTR_REPLICAS = 2
+RTR_MAX_NEW = 6
+RTR_MATCHED_PER_FAMILY = 3   # skewed wave: 3 requests per prefix family
+RTR_UNSKEWED = 6             # control wave: unique prompts, no matches
+RTR_IMBALANCE_BOUND = 1.25   # max/mean per-replica requests (committed)
 
 
 def _requests(cfg, n, max_new=None, seed=0):
@@ -600,6 +610,114 @@ def _robustness_metrics(params, cfg, seed=0):
     }
 
 
+def _router_config():
+    """The router section's EngineConfig (the front-door layers accept only
+    the config object): the smoke-sized paged + prefix-cached stack."""
+    return EngineConfig(
+        max_slots=MAX_SLOTS, max_len=MAX_LEN, decode_block=DECODE_BLOCK,
+        paged=True, prefix_cache=True, page_size=PAGE_SIZE,
+        max_prefill_batch=MAX_SLOTS,
+    )
+
+
+def _router_prefixes(cfg):
+    rng = np.random.default_rng(29)
+    return [rng.integers(0, cfg.vocab_size, size=PREFIX_LEN).tolist()
+            for _ in range(2)]
+
+
+def _router_reqs(cfg, n, base, prefix=None, seed=0):
+    rng = np.random.default_rng(seed + base)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 16))).tolist()
+        prompt = (list(prefix) + tail) if prefix is not None else tail
+        out.append(GenRequest(base + i, prompt, max_new_tokens=RTR_MAX_NEW))
+    return out
+
+
+def _router_metrics(params, cfg):
+    """Multi-replica KV-aware routing, fully deterministic (greedy streams +
+    lexicographic tie-breaking => exact comparison in check_regression).
+
+    Skewed-prefix trace: a seed wave plants prefix family A on one replica
+    and family B on the other, then an interleaved matched wave must route
+    EVERY request to the replica holding its pages — and the matched pages
+    must be mapped (shared), never recomputed.  Unskewed control: unique
+    prompts spread by free-pages/queue-depth, and the routed greedy streams
+    must be bit-identical to a single-replica FCFS run of the same trace.
+    """
+    ec = _router_config()
+
+    # -- skewed-prefix trace ------------------------------------------------
+    router = Router(params, cfg, ec, replicas=RTR_REPLICAS)
+    fam_a, fam_b = _router_prefixes(cfg)
+    router.submit(_router_reqs(cfg, 1, base=0, prefix=fam_a)[0])
+    router.submit(_router_reqs(cfg, 1, base=1, prefix=fam_b)[0])
+    router.drain()
+    holder = {"a": router.assignments[0], "b": router.assignments[1]}
+    shared_before = sum(
+        d.stats["shared_pages"] for s in router.servers for d in s.decodes
+    )
+    wave = []
+    for i in range(RTR_MATCHED_PER_FAMILY):
+        wave.append((_router_reqs(cfg, 1, base=100 + i, prefix=fam_a)[0], "a"))
+        wave.append((_router_reqs(cfg, 1, base=200 + i, prefix=fam_b)[0], "b"))
+    matched_pages, to_holder = 0, 0
+    for req, fam in wave:
+        router.submit(req)
+        d = router.trace[-1]
+        matched_pages += d.matched_pages
+        to_holder += int(d.replica == holder[fam] and d.matched_pages > 0)
+    router.drain()
+    shared_delta = sum(
+        d.stats["shared_pages"] for s in router.servers for d in s.decodes
+    ) - shared_before
+    counts = router.load()
+    imbalance = max(counts) / (sum(counts) / len(counts))
+    skewed = {
+        "matched_requests": len(wave),
+        "routed_to_holder": int(to_holder),
+        "matched_pages": int(matched_pages),
+        "shared_pages_delta": int(shared_delta),
+        # pages matched at routing but NOT mapped from the holder's pool
+        # would have been recomputed by prefill — the gate pins this to 0
+        "matched_chunk_recompute": int(max(0, matched_pages - shared_delta)),
+        "per_replica_requests": counts,
+        "load_imbalance": imbalance,
+        "load_imbalance_bound": RTR_IMBALANCE_BOUND,
+    }
+
+    # -- unskewed control: routing must not change streams ------------------
+    def unskewed_reqs():
+        return _router_reqs(cfg, RTR_UNSKEWED, base=0, seed=41)
+
+    routed = Router(params, cfg, ec, replicas=RTR_REPLICAS)
+    for r in unskewed_reqs():
+        routed.submit(r)
+    routed_out = routed.run()
+    single = DisaggregatedServer.from_config(params, cfg, ec)
+    for r in unskewed_reqs():
+        single.submit(r)
+    single_out = single.run()
+    mism = int(sum(routed_out[r] != single_out[r] for r in single_out))
+    unskewed = {
+        "requests": RTR_UNSKEWED,
+        "stream_mismatches": mism,
+        "per_replica_requests": routed.load(),
+    }
+
+    return {
+        "replicas": RTR_REPLICAS,
+        "trace": {"prefix_len": PREFIX_LEN, "page_size": PAGE_SIZE,
+                  "matched_per_family": RTR_MATCHED_PER_FAMILY,
+                  "max_new": RTR_MAX_NEW},
+        "skewed": skewed,
+        "unskewed": unskewed,
+    }
+
+
 def _smoke_metrics(params, cfg, rob_seed=0):
     """The seconds-scale equivalence slice (also embedded in the full run as
     the committed ``smoke_reference`` for benchmarks/check_regression.py)."""
@@ -632,6 +750,7 @@ def _smoke_metrics(params, cfg, rob_seed=0):
         "scheduler": _sched_metrics(params, cfg),
         "chunked_prefill": _chunked_metrics(params, cfg),
         "robustness": _robustness_metrics(params, cfg, seed=rob_seed),
+        "router": _router_metrics(params, cfg),
     }
 
 
@@ -709,6 +828,18 @@ def main(argv=None) -> None:
               rb["shed"]["shed"],
               f"of {rb['shed']['submitted']} under overload "
               f"(served {rb['shed']['served']})")
+        rt = sm["router"]
+        b.row("smoke_router_routed_to_holder", rt["skewed"]["routed_to_holder"],
+              f"of {rt['skewed']['matched_requests']} prefix-matched "
+              "requests (acceptance: all)")
+        b.row("smoke_router_matched_recompute",
+              rt["skewed"]["matched_chunk_recompute"],
+              "acceptance: 0 (matched pages mapped, never recomputed)")
+        b.row("smoke_router_load_imbalance", rt["skewed"]["load_imbalance"],
+              f"acceptance: <= {rt['skewed']['load_imbalance_bound']}")
+        b.row("smoke_router_stream_mismatches",
+              rt["unskewed"]["stream_mismatches"],
+              "acceptance: 0 (routed == single-replica FCFS, bit for bit)")
         b.dump()
         if args.json:
             with open(args.json, "w") as f:
@@ -736,6 +867,16 @@ def main(argv=None) -> None:
             "the injected engine crash hit no in-flight work (trace too short)"
         assert rb["crash"]["recovery_rounds"] is not None, \
             "crash-affected requests never finished"
+        assert rt["skewed"]["routed_to_holder"] \
+            == rt["skewed"]["matched_requests"], \
+            "a prefix-matched request was routed away from its page holder"
+        assert rt["skewed"]["matched_chunk_recompute"] == 0, \
+            "matched prefix pages were recomputed instead of mapped"
+        assert rt["skewed"]["load_imbalance"] \
+            <= rt["skewed"]["load_imbalance_bound"], \
+            "per-replica load imbalance exceeded the committed bound"
+        assert rt["unskewed"]["stream_mismatches"] == 0, \
+            "routed streams diverged from the single-replica FCFS baseline"
         print("SMOKE OK")
         return
 
@@ -884,6 +1025,23 @@ def main(argv=None) -> None:
     assert abs(tps_ratio - 1.0) <= 0.25, \
         f"KV-aware tokens/s drifted {tps_ratio:.3f}x vs FCFS (acceptance +-25%)"
 
+    # -- multi-replica KV-aware router: locality, balance, stream identity --
+    rt = _router_metrics(params, cfg)
+    b.row("router_routed_to_holder", rt["skewed"]["routed_to_holder"],
+          f"of {rt['skewed']['matched_requests']} prefix-matched requests "
+          "(acceptance: all)")
+    b.row("router_matched_recompute", rt["skewed"]["matched_chunk_recompute"],
+          "acceptance: 0 (matched pages mapped from the holder's pool)")
+    b.row("router_load_imbalance", rt["skewed"]["load_imbalance"],
+          f"acceptance: <= {rt['skewed']['load_imbalance_bound']}")
+    b.row("router_stream_mismatches", rt["unskewed"]["stream_mismatches"],
+          "acceptance: 0 (routed == single-replica FCFS, bit for bit)")
+    b.dump()
+    assert rt["skewed"]["routed_to_holder"] == rt["skewed"]["matched_requests"]
+    assert rt["skewed"]["matched_chunk_recompute"] == 0
+    assert rt["skewed"]["load_imbalance"] <= rt["skewed"]["load_imbalance_bound"]
+    assert rt["unskewed"]["stream_mismatches"] == 0
+
     # seconds-scale smoke slice, committed as the CI regression reference
     full_mn, full_nr = MAX_NEW, N_REQUESTS
     MAX_NEW, N_REQUESTS = 4, 3
@@ -935,6 +1093,7 @@ def main(argv=None) -> None:
         "scheduler": dict(sched, tokens_per_s_ratio=tps_ratio),
         "chunked_prefill": ck,
         "robustness": rb,
+        "router": rt,
         "smoke_reference": smoke_reference,
         "config": {"decode_block": DECODE_BLOCK, "max_slots": MAX_SLOTS,
                    "max_len": MAX_LEN, "max_new": MAX_NEW, "n_requests": N_REQUESTS},

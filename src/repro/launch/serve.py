@@ -25,10 +25,16 @@ import jax
 import numpy as np
 
 from ..configs import ARCHS, reduced as reduce_cfg
+from ..serving import (
+    DisaggregatedServer,
+    EngineConfig,
+    GenRequest,
+    Router,
+    SamplingParams,
+)
 from ..models import model as M
-from ..serving import DecodeEngine, DisaggregatedServer, GenRequest, PrefillEngine, SamplingParams
 from ..serving.faults import FAULT_SITES, FaultPlan
-from ..serving.scheduler import SCHEDULERS, make_scheduler
+from ..serving.scheduler import SCHEDULERS
 
 
 def main():
@@ -36,6 +42,10 @@ def main():
     ap.add_argument("--arch", default="qwen1.5-4b", choices=sorted(ARCHS))
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="complete server replicas behind the KV-aware "
+                         "Router (prefix-locality -> free-pages -> queue-"
+                         "depth routing); 1 = single server, no router")
     ap.add_argument("--prefill-engines", type=int, default=1)
     ap.add_argument("--decode-engines", type=int, default=1)
     ap.add_argument("--max-slots", type=int, default=8)
@@ -137,18 +147,6 @@ def main():
     if args.reduced:
         cfg = reduce_cfg(cfg)
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
-    sp = SamplingParams(temperature=args.temperature)
-    prefills = [PrefillEngine(params, cfg, sp, chunk_tokens=args.chunk_tokens)
-                for _ in range(args.prefill_engines)]
-    decodes = [
-        DecodeEngine(params, cfg, max_slots=args.max_slots, max_len=args.max_len, sampling=sp,
-                     decode_block=args.decode_block, donate=not args.no_donate,
-                     seed=args.seed + i, paged=args.paged, page_size=args.page_size,
-                     n_pages=args.pages, prefix_cache=args.prefix_cache)
-        for i in range(args.decode_engines)
-    ]
-    sched = make_scheduler(args.scheduler, swap=args.swap,
-                           shed_after_rounds=args.shed_after_rounds)
     faults = None
     if args.fault_rate is not None or args.crash_round is not None:
         rates = (
@@ -160,10 +158,29 @@ def main():
                            preserve_kv=args.preserve_kv)
         print(f"# chaos: fault seed {args.fault_seed} "
               f"(replay with --fault-seed {args.fault_seed})")
-    srv = DisaggregatedServer(prefills, decodes, seed=args.seed,
-                              max_prefill_batch=args.prefill_batch,
-                              scheduler=sched, faults=faults,
-                              audit_every=args.audit_every)
+    ec = EngineConfig(
+        max_slots=args.max_slots, max_len=args.max_len,
+        decode_block=args.decode_block, donate=not args.no_donate,
+        paged=args.paged, page_size=args.page_size, n_pages=args.pages,
+        prefix_cache=args.prefix_cache,
+        chunk_tokens=args.chunk_tokens,
+        sampling=SamplingParams(temperature=args.temperature),
+        seed=args.seed, max_prefill_batch=args.prefill_batch,
+        scheduler=args.scheduler,
+        scheduler_kwargs={"swap": args.swap,
+                          "shed_after_rounds": args.shed_after_rounds},
+        faults=faults, audit_every=args.audit_every,
+    )
+    if args.replicas > 1:
+        srv = Router(params, cfg, ec, replicas=args.replicas,
+                     n_prefills=args.prefill_engines,
+                     n_decodes=args.decode_engines)
+        sched = srv.servers[0].scheduler
+    else:
+        srv = DisaggregatedServer.from_config(
+            params, cfg, ec,
+            n_prefills=args.prefill_engines, n_decodes=args.decode_engines)
+        sched = srv.scheduler
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -181,7 +198,9 @@ def main():
     for o in outcomes.values():
         statuses[o.status] = statuses.get(o.status, 0) + 1
     n_tok = sum(len(v) for v in results.values())
-    waits = sorted(sched.queue_wait_rounds.values())
+    servers = srv.servers if args.replicas > 1 else [srv]
+    scheds = [s.scheduler for s in servers]
+    waits = sorted(w for sc in scheds for w in sc.queue_wait_rounds.values())
     report = {
         "arch": cfg.name,
         "scheduler": sched.name,
@@ -194,15 +213,21 @@ def main():
             "p50": float(np.percentile(waits, 50)) if waits else 0.0,
             "p99": float(np.percentile(waits, 99)) if waits else 0.0,
         },
-        "preemptions": sched.stats["preemptions"],
-        "swap_ins": sched.stats["swap_ins"],
-        "shed": sched.stats["shed"],
+        "preemptions": sum(sc.stats["preemptions"] for sc in scheds),
+        "swap_ins": sum(sc.stats["swap_ins"] for sc in scheds),
+        "shed": sum(sc.stats["shed"] for sc in scheds),
     }
+    if args.replicas > 1:
+        report["replicas"] = args.replicas
+        report["per_replica_requests"] = srv.load()
+        report["routed_prefix_pages"] = sum(
+            d.matched_pages for d in srv.trace
+        )
     if faults is not None:
         report["faults"] = {
             "seed": args.fault_seed,
-            "injected": srv.faults.stats["injected"],
-            "crash_events": srv.crash_events,
+            "injected": sum(s.faults.stats["injected"] for s in servers),
+            "crash_events": [e for s in servers for e in s.crash_events],
         }
     if args.audit_every:
         report["audit"] = "clean"  # audit(strict=True) would have raised

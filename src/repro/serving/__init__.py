@@ -31,6 +31,25 @@ tier-1 tests — docs/serving.md is the narrative guide):
   left intact (resumable) and a structured per-request status snapshot
   (``statuses``: rid -> ``RequestOutcome``), never silently dropping
   requests.
+* ``EngineConfig`` — the one frozen, validated bag of engine/server knobs
+  (``serving.config``); engines take it via ``config=``, the server via
+  ``DisaggregatedServer.from_config``, and the front-door layers accept
+  ONLY it.  The loose constructor kwargs remain as a deprecated shim.
+* ``Router`` / ``RouteDecision`` — the multi-replica KV-aware front door
+  (``serving.router``): N server replicas, each submit routed on prefix-
+  cache locality (chained chunk hashes vs every replica's ``PrefixIndex``),
+  free pages, then queue depth, with deterministic tie-breaking.
+* ``Client`` / ``StreamMetrics`` — the asyncio streaming API
+  (``serving.api``): ``async for token in client.generate(...)`` adapts the
+  per-round token blocks into per-token generators; TTFT/TBT measured at
+  the API surface.
+* ``RequestHandle`` — returned by ``submit()`` (server and router):
+  ``status()`` / ``result()`` / ``cancel()`` / ``stream()`` for one request
+  without juggling rids against ``outcomes()``; delegates to the rid-based
+  surface, which keeps working.
+* ``server.drain(max_rounds=...)`` — THE unified drain contract
+  (``run()`` / ``run_round()`` are its anchor-compatible views; see the
+  ``drain`` docstring).
 * Request-lifecycle robustness: terminal statuses (``STATUS_FINISHED`` /
   ``STATUS_CANCELLED`` / ``STATUS_DEADLINE`` / ``STATUS_FAILED`` /
   ``STATUS_SHED``, collected in ``TERMINAL_STATUSES``) recorded on every
@@ -42,6 +61,8 @@ tier-1 tests — docs/serving.md is the narrative guide):
   invariant auditor; ``server.crash_engine`` recovers a dead engine's
   in-flight work.  See docs/serving.md §6.
 """
+from .api import Client, StreamMetrics  # noqa: F401
+from .config import EngineConfig  # noqa: F401
 from .engine import (  # noqa: F401
     STATUS_CANCELLED,
     STATUS_DEADLINE,
@@ -57,10 +78,12 @@ from .engine import (  # noqa: F401
     MonolithicEngine,
     PrefillEngine,
     PrefixMatch,
+    RequestHandle,
     RequestOutcome,
     SchedulerExhausted,
 )
 from .faults import FAULT_SITES, FaultInjector, FaultPlan, TransientFault  # noqa: F401
+from .router import RouteDecision, Router  # noqa: F401
 from .prefix_cache import PrefixIndex, chunk_hashes  # noqa: F401
 from .sampling import SamplingParams, sample  # noqa: F401
 from .scheduler import (  # noqa: F401

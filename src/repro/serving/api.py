@@ -1,0 +1,217 @@
+"""Async streaming front door: per-token generators over per-round blocks.
+
+The engines below this layer are synchronous and block-oriented: one
+scheduling round runs one fused decode block per engine and hands the host a
+``[decode_block, max_slots]`` token block (ONE sanctioned device sync per
+block — see ROADMAP "serving fast path").  Callers, though, want the
+production-shaped surface::
+
+    client = Client.from_config(params, cfg, config, replicas=2)
+    async for tok in client.generate(prompt, max_new_tokens=32):
+        ...
+
+``Client`` adapts one into the other.  Each ``generate()`` call submits a
+request (through the router's KV-aware ``submit`` or a single server's) and
+returns an async generator that yields tokens one by one as rounds land
+them.  Concurrent generators COOPERATE on driving: whichever stream runs dry
+takes the round lock and advances the backend by exactly one round, then
+yields the event loop so sibling streams drain what the round produced.  The
+round sequence is the same global, deterministic sequence a synchronous
+``drain()`` would run — the event loop only changes who happens to call it,
+never what it computes — so routed async streams stay bit-identical to the
+synchronous path.
+
+Tokens are read from the host-side request records (``req.tokens``), which
+the per-block readback already populated: the async layer introduces NO
+extra device syncs (``tools/fastpath_lint.py`` checks this file like any
+other serving module).
+
+TTFT / TBT are measured HERE, at the API surface, where a user would see
+them: ``StreamMetrics.ttft_s`` is wall-clock submit -> first yielded token,
+``tbt_s`` the wall-clock gaps between yielded tokens, and ``ttft_rounds``
+the deterministic round-clock equivalent (owning replica rounds before the
+first token).
+
+Terminal statuses and cancellation surface through the SAME handle: the
+generator simply stops yielding when the request reaches any terminal
+status (``StreamMetrics.status`` records which), and closing the generator
+early (``break`` / ``aclose()``) cancels the in-flight request via
+``handle.cancel()``.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import AsyncIterator, Dict, List, Optional
+
+from ..configs.base import ModelConfig
+from .config import EngineConfig
+from .engine import (
+    DisaggregatedServer,
+    GenRequest,
+    RequestHandle,
+    SchedulerExhausted,
+)
+from .router import Router
+
+
+@dataclass
+class StreamMetrics:
+    """Per-request latency record, measured at the API surface.
+
+    ttft_s / ttft_rounds  submit -> FIRST yielded token (wall clock / owning
+                          replica's deterministic round clock)
+    tbt_s                 wall-clock gaps between consecutively yielded
+                          tokens (len == n_tokens - 1 for a finished stream)
+    status                terminal STATUS_* once the stream ended (None while
+                          live); cancelled/expired streams are truncated,
+                          not erased
+    """
+
+    rid: int
+    submit_s: float
+    ttft_s: Optional[float] = None
+    ttft_rounds: Optional[int] = None
+    tbt_s: List[float] = field(default_factory=list)
+    n_tokens: int = 0
+    finish_s: Optional[float] = None
+    status: Optional[str] = None
+
+
+class Client:
+    """Asyncio streaming client over a ``Router`` or ``DisaggregatedServer``.
+
+    Accepts only a ready backend (or an ``EngineConfig`` via
+    ``from_config``) — never loose engine kwargs.
+    """
+
+    def __init__(self, backend, *, max_rounds: int = 10_000):
+        self.backend = backend
+        self.max_rounds = max_rounds
+        self.metrics: Dict[int, StreamMetrics] = {}
+        # one backend round at a time: the lock serializes round-driving
+        # across concurrent streams (the rounds themselves stay the global
+        # deterministic sequence regardless of which stream drives)
+        self._round_lock = asyncio.Lock()
+        self._rids = itertools.count()
+
+    @classmethod
+    def from_config(
+        cls,
+        params,
+        cfg: ModelConfig,
+        config: EngineConfig,
+        *,
+        replicas: int = 1,
+        max_rounds: int = 10_000,
+    ) -> "Client":
+        """Build the whole stack from one ``EngineConfig``: a KV-aware
+        ``Router`` over ``replicas`` server replicas (or a bare single
+        server for ``replicas=1``)."""
+        if replicas == 1:
+            backend = DisaggregatedServer.from_config(params, cfg, config)
+        else:
+            backend = Router(params, cfg, config, replicas=replicas)
+        return cls(backend, max_rounds=max_rounds)
+
+    def _fresh_rid(self) -> int:
+        rid = next(self._rids)
+        while rid in self.backend.all_requests:
+            rid = next(self._rids)
+        return rid
+
+    def submit(
+        self,
+        prompt,
+        *,
+        max_new_tokens: int = 16,
+        rid: Optional[int] = None,
+        eos_id: Optional[int] = None,
+        priority: int = 0,
+        deadline_rounds: Optional[int] = None,
+        ttft_deadline: Optional[int] = None,
+    ) -> RequestHandle:
+        """Submit one request (KV-aware routed when the backend is a
+        ``Router``); returns its ``RequestHandle``.  The handle's sync
+        surface (``status()``/``result()``/``cancel()``) and the async
+        ``stream(handle)`` both work on it."""
+        if rid is None:
+            rid = self._fresh_rid()
+        req = GenRequest(
+            rid, prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
+            priority=priority, deadline_rounds=deadline_rounds,
+            ttft_deadline=ttft_deadline,
+        )
+        handle = self.backend.submit(req)
+        self.metrics[rid] = StreamMetrics(rid=rid, submit_s=time.perf_counter())
+        return handle
+
+    async def generate(self, prompt, **submit_kwargs) -> AsyncIterator[int]:
+        """``async for token in client.generate(prompt, max_new_tokens=...)``.
+
+        Submit + stream in one call; kwargs are ``submit()``'s.  Breaking out
+        of the loop cancels the in-flight request (see ``stream``)."""
+        handle = self.submit(prompt, **submit_kwargs)
+        async for tok in self.stream(handle):
+            yield tok
+
+    async def stream(self, handle: RequestHandle) -> AsyncIterator[int]:
+        """Per-token async generator for one submitted request.
+
+        Yields each new token as scheduling rounds produce them; returns when
+        the request reaches ANY terminal status (check
+        ``client.metrics[rid].status`` — a cancelled or expired stream is
+        truncated, not an exception).  Closing the generator before the
+        request finished cancels it through the same handle."""
+        rid = handle.rid
+        m = self.metrics.setdefault(
+            rid, StreamMetrics(rid=rid, submit_s=time.perf_counter())
+        )
+        req = handle.request
+        emitted, rounds, last_s = 0, 0, None
+        try:
+            while True:
+                while emitted < len(req.tokens):
+                    tok = req.tokens[emitted]
+                    emitted += 1
+                    now = time.perf_counter()
+                    if last_s is None:
+                        m.ttft_s = now - m.submit_s
+                        m.ttft_rounds = self.backend.rounds_since_submit(rid)
+                    else:
+                        m.tbt_s.append(now - last_s)
+                    last_s = now
+                    m.n_tokens = emitted
+                    yield tok
+                if req.done:
+                    return
+                if rounds >= self.max_rounds:
+                    raise SchedulerExhausted(
+                        f"request {rid} stream stalled after "
+                        f"{self.max_rounds} rounds",
+                        done={r: q.tokens
+                              for r, q in self.backend.all_requests.items()
+                              if q.done},
+                        unfinished=sorted(
+                            r for r, q in self.backend.all_requests.items()
+                            if not q.done
+                        ),
+                        statuses=self.backend.outcomes(),
+                    )
+                async with self._round_lock:
+                    # re-check under the lock: a sibling stream may have
+                    # driven the round that produced our next token while we
+                    # were waiting for it
+                    if not req.done and emitted >= len(req.tokens):
+                        self.backend.run_round()
+                        rounds += 1
+                # let sibling streams drain what this round produced before
+                # anyone drives the next one
+                await asyncio.sleep(0)
+        finally:
+            if not req.done:
+                handle.cancel()
+            m.status = handle.status()
+            m.finish_s = time.perf_counter()

@@ -1,0 +1,175 @@
+"""``EngineConfig``: the one frozen bag of serving knobs.
+
+The engine constructors accreted a kwarg sprawl across PRs 1-7 (paged /
+prefix_cache / chunk_tokens / decode_block / audit_every / scheduler /
+fault plan / ...), and every layer that builds engines — launcher, benches,
+tests, examples — re-threaded the same dozen keywords.  ``EngineConfig``
+consolidates them into ONE immutable, validated object:
+
+* ``PrefillEngine(params, cfg, config=ec)`` / ``DecodeEngine(params, cfg,
+  config=ec)`` build an engine from it (the loose kwargs remain as a
+  compatibility shim — see the deprecation note on each constructor).
+* ``DisaggregatedServer.from_config(params, cfg, ec)`` builds the whole
+  single-replica stack (prefill pool -> handoff -> decode pool) from it.
+* The NEW layers — ``serving.router.Router`` and ``serving.api.Client`` —
+  accept ONLY a config object; they never take loose engine kwargs.
+
+Validation happens at construction (``__post_init__``), so an impossible
+combination (prefix cache without paging, chunk boundaries off the page
+grid) fails where the config is written down rather than rounds later
+inside an engine.
+
+The config is frozen: replicas derive per-replica variants through
+``replace()`` (e.g. ``cfg.replace(seed=cfg.seed + i)``) instead of
+mutating a shared object, which is what makes routed traces reproducible
+from the config alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from .faults import FaultPlan
+from .sampling import SamplingParams
+
+# canonical prefill length buckets (re-exported by serving.engine; defined
+# here so config does not import the engine module it configures)
+DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Frozen serving configuration: every engine/server knob in one place.
+
+    Decode engine:
+      max_slots      concurrent decode cache rows per replica
+      max_len        per-request KV capacity (positions)
+      decode_block   fused decode steps per host sync (1 = seed behaviour)
+      donate         donate the decode state to the jitted step (in-place KV)
+      paged          paged KV cache (page pools + block tables + allocator)
+      page_size      KV positions per page (paged mode)
+      n_pages        pool size in pages (None = slab-equivalent HBM)
+      prefix_cache   refcounted prefix sharing + COW (requires ``paged``)
+
+    Prefill engine:
+      bucketed       pad prompts to length buckets (bounded jit cache)
+      buckets        the bucket ladder
+      chunk_tokens   chunked prefill threshold/quantum (requires ``paged``;
+                     must be a multiple of ``page_size``)
+
+    Shared:
+      sampling       SamplingParams for both phases (None = greedy)
+      seed           PRNG seed: server prefill chain = PRNGKey(seed), decode
+                     stream = fold_in(PRNGKey(seed), 1); replicas offset it
+
+    Server:
+      max_prefill_batch  max same-bucket prompts stacked per prefill call
+      scheduler          policy name for ``make_scheduler`` ("fcfs" is the
+                         bit-exact regression anchor)
+      scheduler_kwargs   extra policy kwargs (e.g. swap=True,
+                         shed_after_rounds=3); stored as a tuple of pairs
+                         internally so the config stays hashable
+      faults             FaultPlan for seeded chaos injection (None = off)
+      audit_every        run the strict KV invariant auditor every N rounds
+    """
+
+    # -- decode engine ------------------------------------------------------
+    max_slots: int = 8
+    max_len: int = 512
+    decode_block: int = 8
+    donate: bool = True
+    paged: bool = False
+    page_size: int = 16
+    n_pages: Optional[int] = None
+    prefix_cache: bool = False
+    # -- prefill engine -----------------------------------------------------
+    bucketed: bool = True
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    chunk_tokens: Optional[int] = None
+    # -- shared -------------------------------------------------------------
+    sampling: Optional[SamplingParams] = None
+    seed: int = 0
+    # -- server -------------------------------------------------------------
+    max_prefill_batch: int = 8
+    scheduler: str = "fcfs"
+    scheduler_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    faults: Optional[FaultPlan] = None
+    audit_every: Optional[int] = None
+
+    def __post_init__(self):
+        if isinstance(self.scheduler_kwargs, dict):
+            object.__setattr__(
+                self, "scheduler_kwargs", tuple(sorted(self.scheduler_kwargs.items()))
+            )
+        object.__setattr__(self, "buckets", tuple(self.buckets))
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache=True requires paged=True "
+                             "(prefix sharing lives in the page pool)")
+        if self.paged and self.max_len % self.page_size:
+            raise ValueError(
+                f"max_len {self.max_len} not a multiple of page_size {self.page_size}"
+            )
+        if self.chunk_tokens is not None:
+            if self.chunk_tokens <= 0:
+                raise ValueError(
+                    f"chunk_tokens must be positive, got {self.chunk_tokens}"
+                )
+            if not self.paged:
+                raise ValueError("chunk_tokens requires paged=True (chunks "
+                                 "stream into the paged pool)")
+            if self.chunk_tokens % self.page_size:
+                raise ValueError(
+                    f"chunk_tokens {self.chunk_tokens} must be a multiple of "
+                    f"page_size {self.page_size} (chunk boundaries are "
+                    f"page-aligned)"
+                )
+        # late import: scheduler.py never imports config, so this cannot cycle
+        from .scheduler import SCHEDULERS
+
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r}; "
+                f"choose from {sorted(SCHEDULERS)}"
+            )
+
+    # -- derived views ------------------------------------------------------
+
+    def replace(self, **changes) -> "EngineConfig":
+        """A copy with ``changes`` applied (the config itself is frozen)."""
+        return dataclasses.replace(self, **changes)
+
+    def prefill_args(self) -> Dict[str, Any]:
+        """Constructor kwargs for one ``PrefillEngine``."""
+        return {
+            "sampling": self.sampling,
+            "bucketed": self.bucketed,
+            "buckets": self.buckets,
+            "chunk_tokens": self.chunk_tokens,
+        }
+
+    def decode_args(self) -> Dict[str, Any]:
+        """Constructor kwargs for one ``DecodeEngine``."""
+        return {
+            "max_slots": self.max_slots,
+            "max_len": self.max_len,
+            "sampling": self.sampling,
+            "decode_block": self.decode_block,
+            "donate": self.donate,
+            "seed": self.seed,
+            "paged": self.paged,
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "prefix_cache": self.prefix_cache,
+        }
+
+    def build_scheduler(self):
+        """A FRESH scheduler instance (policies are stateful: never share one
+        object between servers)."""
+        from .scheduler import make_scheduler
+
+        return make_scheduler(self.scheduler, **dict(self.scheduler_kwargs))

@@ -46,12 +46,11 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as M
 from . import kvcache
+from .config import DEFAULT_BUCKETS, EngineConfig  # noqa: F401  (re-export)
 from .faults import FaultInjector, FaultPlan, TransientFault
 from .prefix_cache import PrefixIndex, chunk_hashes
 from .sampling import SamplingParams, sample
 from .scheduler import FCFSScheduler, Scheduler, SwappedRequest, WaitingEntry
-
-DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
 
 # terminal request statuses (GenRequest.status): every request submitted to a
 # server ends in exactly one of these — results carry the status instead of
@@ -211,6 +210,114 @@ class SchedulerExhausted(RuntimeError):
         self.statuses: Dict[int, RequestOutcome] = statuses or {}
 
 
+class RequestHandle:
+    """What ``submit()`` returns: follow ONE request without juggling its rid
+    against ``outcomes()``.
+
+    The handle is a thin view over the owner (a ``DisaggregatedServer`` or a
+    ``serving.router.Router``) — it holds no state of its own beyond the rid,
+    so handle-path and rid-path operations are the SAME code underneath
+    (``cancel()`` delegates to ``owner.cancel(rid)``, ``status()`` reads the
+    same request record ``outcomes()`` snapshots) and stay bit-exact with
+    each other by construction.
+
+    ``result()`` and ``stream()`` DRIVE the owner's scheduling rounds (the
+    engines are synchronous); rounds are global, so driving through one
+    handle advances every in-flight request.  ``stream()`` yields tokens as
+    the per-round decode blocks land — the async per-token front door in
+    ``serving.api`` is built on the same cursor logic.
+    """
+
+    __slots__ = ("rid", "_owner")
+
+    def __init__(self, rid: int, owner):
+        self.rid = rid
+        self._owner = owner
+
+    def __repr__(self) -> str:
+        return f"RequestHandle(rid={self.rid}, status={self.status()!r})"
+
+    @property
+    def request(self) -> GenRequest:
+        return self._owner.all_requests[self.rid]
+
+    def status(self) -> str:
+        """Current STATUS_* (terminal, or PENDING while in flight)."""
+        req = self.request
+        if req.done and req.status == STATUS_PENDING:
+            return STATUS_FINISHED  # finished through a direct-engine path
+        return req.status
+
+    def done(self) -> bool:
+        return self.request.done
+
+    def tokens(self) -> List[int]:
+        """The stream so far (complete iff ``done()``)."""
+        return list(self.request.tokens)
+
+    def outcome(self) -> RequestOutcome:
+        """Structured snapshot, identical to ``owner.outcomes()[rid]``."""
+        return RequestOutcome(
+            rid=self.rid, status=self.status(),
+            stage=self._owner._stage_of(self.rid), tokens=self.tokens(),
+        )
+
+    def cancel(self, *, status: str = STATUS_CANCELLED) -> bool:
+        """Delegates to ``owner.cancel(rid)`` — bit-exact with the rid path."""
+        return self._owner.cancel(self.rid, status=status)
+
+    def result(self, max_rounds: int = 10_000) -> List[int]:
+        """Drive rounds until THIS request is terminal; return its tokens.
+
+        Raises ``SchedulerExhausted`` (same resume contract as ``run()``)
+        if ``max_rounds`` pass first."""
+        rounds = 0
+        while not self.request.done and rounds < max_rounds:
+            rounds += 1
+            self._owner.run_round()
+        req = self.request
+        if not req.done:
+            raise SchedulerExhausted(
+                f"request {self.rid} still {self._owner._stage_of(self.rid)} "
+                f"after {max_rounds} rounds",
+                done={r: q.tokens for r, q in self._owner.all_requests.items()
+                      if q.done},
+                unfinished=sorted(r for r, q in self._owner.all_requests.items()
+                                  if not q.done),
+                statuses=self._owner.outcomes(),
+            )
+        return list(req.tokens)
+
+    def stream(self, max_rounds: int = 10_000):
+        """Per-token generator over the per-round decode blocks: drives one
+        round whenever no unread token is buffered, yields each new token.
+        Ends when the request reaches ANY terminal status (a cancelled /
+        expired stream is truncated, not erased — check ``status()``).
+        Tokens are read from the host-side request record (the sanctioned
+        per-block readback already paid for them; no extra device sync)."""
+        emitted, rounds = 0, 0
+        req = self.request
+        while True:
+            while emitted < len(req.tokens):
+                tok = req.tokens[emitted]
+                emitted += 1
+                yield tok
+            if req.done:
+                return
+            if rounds >= max_rounds:
+                raise SchedulerExhausted(
+                    f"request {self.rid} stream stalled after {max_rounds} rounds",
+                    done={r: q.tokens for r, q in self._owner.all_requests.items()
+                          if q.done},
+                    unfinished=sorted(
+                        r for r, q in self._owner.all_requests.items() if not q.done
+                    ),
+                    statuses=self._owner.outcomes(),
+                )
+            rounds += 1
+            self._owner.run_round()
+
+
 # ---------------------------------------------------------------------------
 # Prefill engine
 # ---------------------------------------------------------------------------
@@ -245,10 +352,20 @@ class PrefillEngine:
         cfg: ModelConfig,
         sampling: Optional[SamplingParams] = None,
         *,
+        config: Optional[EngineConfig] = None,
         bucketed: bool = True,
         buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
         chunk_tokens: Optional[int] = None,
     ):
+        # ``config`` is the canonical constructor path; the loose kwargs are
+        # a compatibility shim (deprecated — new call sites should pass an
+        # EngineConfig; router/api layers accept only the config object)
+        if config is not None:
+            pa = config.prefill_args()
+            sampling = pa["sampling"]
+            bucketed = pa["bucketed"]
+            buckets = pa["buckets"]
+            chunk_tokens = pa["chunk_tokens"]
         self.params = params
         self.cfg = cfg
         self.sampling = sampling if sampling is not None else SamplingParams()
@@ -487,6 +604,7 @@ class DecodeEngine:
         params,
         cfg: ModelConfig,
         *,
+        config: Optional[EngineConfig] = None,
         max_slots: int = 8,
         max_len: int = 512,
         sampling: Optional[SamplingParams] = None,
@@ -498,6 +616,16 @@ class DecodeEngine:
         n_pages: Optional[int] = None,
         prefix_cache: bool = False,
     ):
+        # ``config`` is the canonical constructor path; the loose kwargs are
+        # a compatibility shim (deprecated — new call sites should pass an
+        # EngineConfig; router/api layers accept only the config object)
+        if config is not None:
+            da = config.decode_args()
+            max_slots, max_len = da["max_slots"], da["max_len"]
+            sampling, decode_block = da["sampling"], da["decode_block"]
+            donate, seed, paged = da["donate"], da["seed"], da["paged"]
+            page_size, n_pages = da["page_size"], da["n_pages"]
+            prefix_cache = da["prefix_cache"]
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
@@ -1502,6 +1630,7 @@ class DisaggregatedServer:
         prefill_engines: List[PrefillEngine],
         decode_engines: List[DecodeEngine],
         *,
+        config: Optional[EngineConfig] = None,
         transfer=lambda kv: kv,
         seed: int = 0,
         max_prefill_batch: int = 8,
@@ -1509,6 +1638,17 @@ class DisaggregatedServer:
         faults: Optional[object] = None,
         audit_every: Optional[int] = None,
     ):
+        # ``config`` is the canonical path for the server-level knobs; the
+        # loose kwargs remain as a compatibility shim (deprecated — new call
+        # sites should pass an EngineConfig, or use ``from_config`` to build
+        # the engines too)
+        if config is not None:
+            seed = config.seed
+            max_prefill_batch = config.max_prefill_batch
+            scheduler = config.build_scheduler() if scheduler is None else scheduler
+            faults = config.faults if faults is None else faults
+            audit_every = config.audit_every if audit_every is None else audit_every
+        self.config = config
         self.prefills = prefill_engines
         self.decodes = decode_engines
         self.transfer = transfer
@@ -1545,6 +1685,41 @@ class DisaggregatedServer:
         # dropped when the request leaves the queue or finishes (_forget)
         self._hash_memo: Dict[Tuple[int, int], List[bytes]] = {}
 
+    @classmethod
+    def from_config(
+        cls,
+        params,
+        cfg: ModelConfig,
+        config: EngineConfig,
+        *,
+        transfer=lambda kv: kv,
+        n_prefills: int = 1,
+        n_decodes: int = 1,
+        replica: int = 0,
+    ) -> "DisaggregatedServer":
+        """Build the whole single-replica stack — prefill pool -> KV handoff
+        -> decode pool — from one ``EngineConfig``.
+
+        ``replica`` offsets the PRNG seeds (server chain and decode stream)
+        by a fixed amount so N replicas built from ONE config draw distinct
+        sampling streams; decode engine ``i`` additionally offsets by ``i``
+        (matching the launcher's long-standing ``seed + i`` convention).
+        Greedy sampling — every committed baseline — is seed-independent, so
+        the offsets never break bit-identity gates."""
+        if not isinstance(config, EngineConfig):
+            raise TypeError(
+                f"from_config takes an EngineConfig, got {type(config).__name__}"
+            )
+        rc = config.replace(seed=config.seed + replica) if replica else config
+        prefills = [
+            PrefillEngine(params, cfg, config=rc) for _ in range(n_prefills)
+        ]
+        decodes = [
+            DecodeEngine(params, cfg, config=rc.replace(seed=rc.seed + i) if i else rc)
+            for i in range(n_decodes)
+        ]
+        return cls(prefills, decodes, config=rc, transfer=transfer)
+
     # the queue / waiting containers live on the scheduler (policy state);
     # these aliases keep the long-standing introspection surface working
     @property
@@ -1563,12 +1738,16 @@ class DisaggregatedServer:
     def waiting(self, v) -> None:
         self.scheduler.waiting = v
 
-    def submit(self, req: GenRequest):
+    def submit(self, req: GenRequest) -> RequestHandle:
         """Validate and queue a request, rejecting up front what the cluster
         can never serve: prompts past the largest prefill bucket (the old path
         minted an unbounded jit key per oversized length) and prompt+max_new
         combinations no decode engine has capacity for (the old path blew up
-        only at admit).  Queue ORDER is the scheduler's business."""
+        only at admit).  Queue ORDER is the scheduler's business.
+
+        Returns a ``RequestHandle`` (status/result/cancel/stream for THIS
+        request); the rid-based surface (``cancel(rid)``, ``outcomes()``)
+        keeps working unchanged — the handle delegates to it."""
         n = len(req.prompt)
         limits = [e.buckets[-1] for e in self.prefills if e.bucketed]
         if limits and n > min(limits):
@@ -1589,10 +1768,17 @@ class DisaggregatedServer:
             self._has_deadlines = True
         self.scheduler.add(req)
         self.all_requests[req.rid] = req
+        return RequestHandle(req.rid, self)
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
+
+    def rounds_since_submit(self, rid: int) -> int:
+        """Scheduling rounds run since ``rid`` was submitted (the round-clock
+        the API surface reports TTFT against)."""
+        s = self.scheduler
+        return s.round - s.submit_round.get(rid, s.round)
 
     def pending(self) -> bool:
         """Whether any request is still in flight anywhere: queued, waiting
@@ -2175,23 +2361,45 @@ class DisaggregatedServer:
         if self.audit_every and sched.round % self.audit_every == 0:
             self.audit(strict=True)
 
+    def drain(self, max_rounds: Optional[int] = None) -> Dict[int, RequestOutcome]:
+        """THE drain contract (documented once, here — ``run()`` and
+        ``run_round()`` are views over it):
+
+        Runs scheduling rounds until nothing is pending (no request queued,
+        waiting, swapped, or decoding) or ``max_rounds`` rounds have run
+        (``None`` = unbounded), then returns ``outcomes()`` — a structured
+        rid -> ``RequestOutcome`` snapshot of EVERY submitted request,
+        terminal or not.  ``drain`` never raises on leftover work: check
+        ``pending()`` or the returned stages to see whether it finished.
+
+        RESUME: the server is always left fully intact — queued / waiting /
+        swapped / decoding state, device pages, pins, and holds all live —
+        so calling ``drain()`` (or ``run()``, or ``run_round()``) again
+        continues exactly where it stopped; nothing is dropped.  The three
+        entry points differ only in step count and error signalling:
+
+        * ``run_round()`` — exactly one round, no completion check;
+        * ``drain(max_rounds)`` — up to ``max_rounds`` rounds, returns
+          outcomes, never raises;
+        * ``run(max_steps)`` — ``drain(max_steps)`` + raises
+          ``SchedulerExhausted`` (carrying the same outcomes snapshot as
+          ``statuses``) if work remains, else returns the legacy
+          ``{rid: tokens}`` view.  Kept as the anchor-compatible alias every
+          existing trace and test drives."""
+        rounds = 0
+        while self.pending() and (max_rounds is None or rounds < max_rounds):
+            rounds += 1
+            self.run_round()
+        return self.outcomes()
+
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Drive to completion; returns ``{rid: tokens}`` for every request
         that reached a terminal status (including cancelled/expired ones —
         check ``req.status`` or ``self.outcomes()`` to tell them apart).
-
-        Raises ``SchedulerExhausted`` if ``max_steps`` rounds pass with
-        requests still in flight.  RESUME CONTRACT: the exception carries a
-        structured snapshot (``e.statuses``: rid -> ``RequestOutcome`` with
-        terminal-or-PENDING status, current lifecycle stage, tokens so far)
-        and the server is left fully intact — queued/waiting/swapped/decoding
-        state, device pages, pins, and holds are all live.  The caller may
-        triage (e.g. ``server.cancel`` the stragglers) and simply call
-        ``run()`` again to continue where it stopped; nothing is dropped."""
-        steps = 0
-        while self.pending() and steps < max_steps:
-            steps += 1
-            self.run_round()
+        Anchor-compatible alias of ``drain(max_steps)`` — see ``drain`` for
+        the unified contract — that raises ``SchedulerExhausted`` (resumable:
+        triage, then call ``run()`` again) if rounds run out first."""
+        self.drain(max_steps)
         if self.pending():
             done = {rid: r.tokens for rid, r in self.all_requests.items() if r.done}
             unfinished = sorted(

@@ -1,0 +1,304 @@
+"""Multi-replica KV-aware router: the serving front door.
+
+The paper's cluster story presupposes a routing layer in front of the
+phase-specialized pods: N prefill-chip/decode-chip replica groups, with a
+load balancer that knows where KV lives (cf. production-stack's KV-aware
+router and the Nexus/TetriServe-style schedulers in PAPERS.md).  ``Router``
+is that layer in this repo's single-process simulation: it owns N complete
+``DisaggregatedServer`` replicas — each a prefill pool -> KV handoff ->
+decode pool built from ONE shared ``EngineConfig`` — and decides, per
+submit, which replica serves the request.
+
+Routing signals, in priority order (lexicographic, so traces are
+reproducible):
+
+1. **Prefix-cache locality** — the chained page-chunk hashes computed at
+   submit (the SAME hashes the in-replica KV-aware scheduler memoizes) are
+   matched against every replica's ``PrefixIndex`` with ``touch=False``:
+   pages matched in a replica's pool are pages its prefill never recomputes,
+   so the longest hit wins outright.  The winning replica's hash memo is
+   seeded with the router's hashes — the prompt is hashed once end to end.
+2. **Free pages** — ties broken toward the replica whose decode pools have
+   the most FREE PAGES (``DecodeEngine.free_pages``, the refcount-aware
+   capacity measure), not merely free slots: a replica with open slots but
+   an exhausted pool would only park the request in its waiting line.
+3. **Queue depth** — remaining ties go to the replica with the fewest live
+   requests (queued + waiting + swapped + decoding).
+4. **Replica index** — the final tie-break is the lowest index, which makes
+   the full decision function deterministic: same config + same submit
+   sequence => bit-identical ``trace`` / ``assignments``.
+
+The router is pure POLICY over intact replicas: each replica's own scheduler
+still orders its queue, and greedy decode streams are schedule-independent,
+so routed streams stay bit-identical to a single-replica FCFS run of the
+same workload (the ``router`` bench section gates exactly that).
+
+``submit`` returns a ``RequestHandle`` bound to the router; ``drain`` /
+``run`` / ``run_round`` mirror the single-server contract (see
+``DisaggregatedServer.drain``), driving every replica that still has work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from .config import EngineConfig
+from .engine import (
+    STATUS_CANCELLED,
+    DisaggregatedServer,
+    GenRequest,
+    RequestHandle,
+    RequestOutcome,
+    SchedulerExhausted,
+)
+from .prefix_cache import chunk_hashes
+
+
+@dataclass(frozen=True)
+class RouteDecision:
+    """One routing decision, recorded on ``Router.trace``.
+
+    rid            the routed request
+    replica        index of the chosen replica
+    matched_pages  prefix pages the chosen replica already holds (0 = cold)
+    scores         the full per-replica signal tuple the decision minimized:
+                   ``(-matched_pages, -free_pages, queue_depth, index)`` per
+                   replica — kept so a trace is auditable, not just replayable
+    """
+
+    rid: int
+    replica: int
+    matched_pages: int
+    scores: Tuple[Tuple[int, int, int, int], ...]
+
+
+class Router:
+    """N ``DisaggregatedServer`` replicas behind one KV-aware submit().
+
+    Accepts ONLY an ``EngineConfig`` (the loose-kwarg shim stops at the
+    engine layer); replica ``i`` is built with the config's seed offset by
+    ``i`` — see ``DisaggregatedServer.from_config``.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        config: EngineConfig,
+        *,
+        replicas: int = 2,
+        transfer=lambda kv: kv,
+        n_prefills: int = 1,
+        n_decodes: int = 1,
+    ):
+        if not isinstance(config, EngineConfig):
+            raise TypeError(
+                f"Router takes an EngineConfig, got {type(config).__name__} "
+                f"(the loose engine kwargs are not accepted here)"
+            )
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.config = config
+        self.servers: List[DisaggregatedServer] = [
+            DisaggregatedServer.from_config(
+                params, cfg, config, transfer=transfer,
+                n_prefills=n_prefills, n_decodes=n_decodes, replica=i,
+            )
+            for i in range(replicas)
+        ]
+        # rid -> owning replica index / request record; the router-level
+        # bookkeeping mirrors the single-server surface so RequestHandle and
+        # callers work identically against either owner
+        self.assignments: Dict[int, int] = {}
+        self.all_requests: Dict[int, GenRequest] = {}
+        self.trace: List[RouteDecision] = []
+        # (rid, page_size) -> chained chunk hashes: computed ONCE at routing
+        # time and handed to the winning replica's memo (prompts are
+        # immutable); dropped when the request is forgotten everywhere
+        self._hash_memo: Dict[Tuple[int, int], List[bytes]] = {}
+
+    # -- routing ------------------------------------------------------------
+
+    def _hashes_for(self, req: GenRequest, page_size: int, max_chunks: int):
+        hk = (req.rid, page_size)
+        if hk not in self._hash_memo:
+            self._hash_memo[hk] = chunk_hashes(req.prompt, page_size, max_chunks)
+        return self._hash_memo[hk]
+
+    def _signals(self, req: GenRequest):
+        """Per-replica (matched_pages, free_pages, queue_depth) scan.
+
+        A scan, not a take: prefix matches use ``touch=False`` (index
+        recency moves only when the winning replica pins at prefill time),
+        and nothing is reserved — the replica's own admission control still
+        applies."""
+        out = []
+        for s in self.servers:
+            matched = 0
+            for d in s.decodes:
+                if not getattr(d, "prefix_cache", False):
+                    continue
+                if not d.can_ever_admit(len(req.prompt), req.max_new_tokens):
+                    continue
+                h = self._hashes_for(req, d.page_size, d.pages_per_slot)
+                m = d.match_prefix(req.prompt, hashes=h, touch=False)
+                if m is not None and m.n_shared > matched:
+                    matched = m.n_shared
+            free = sum(
+                d.free_pages for d in s.decodes if getattr(d, "paged", False)
+            )
+            depth = (
+                len(s.scheduler.queue)
+                + len(s.scheduler.waiting)
+                + len(s.scheduler.swapped)
+                + sum(d.slots.n_active for d in s.decodes)
+            )
+            out.append((matched, free, depth))
+        return out
+
+    def route(self, req: GenRequest) -> RouteDecision:
+        """The routing decision for ``req`` — pure policy, no submission.
+
+        Lexicographic minimum over ``(-matched_pages, -free_pages,
+        queue_depth, replica_index)`` across replicas that could EVER admit
+        the request; deterministic by construction.  Exposed separately from
+        ``submit`` so tests and benches can audit decisions."""
+        signals = self._signals(req)
+        scores = tuple(
+            (-matched, -free, depth, i)
+            for i, (matched, free, depth) in enumerate(signals)
+        )
+        feasible = [
+            i for i, s in enumerate(self.servers)
+            if req.max_new_tokens <= 1 or any(
+                d.can_ever_admit(len(req.prompt), req.max_new_tokens)
+                for d in s.decodes
+            )
+        ]
+        # no feasible replica: route to 0 so submit() raises the canonical
+        # capacity error instead of inventing a router-specific one
+        pick = min(feasible, key=lambda i: scores[i]) if feasible else 0
+        return RouteDecision(
+            rid=req.rid, replica=pick,
+            matched_pages=-scores[pick][0], scores=scores,
+        )
+
+    def submit(self, req: GenRequest) -> RequestHandle:
+        """Route and queue ``req`` on the chosen replica; returns a
+        ``RequestHandle`` bound to the ROUTER (its ``result()`` / ``stream()``
+        drive all replicas).  Validation errors propagate from the replica's
+        ``submit`` before any routing state is recorded."""
+        decision = self.route(req)
+        srv = self.servers[decision.replica]
+        srv.submit(req)
+        # hand the routing-time hashes to the replica so its own KV-aware
+        # scans (Scheduler.match_for) never re-hash this prompt
+        for d in srv.decodes:
+            if getattr(d, "prefix_cache", False):
+                hk = (req.rid, d.page_size)
+                if hk in self._hash_memo:
+                    srv._hash_memo[hk] = self._hash_memo[hk]
+        self.assignments[req.rid] = decision.replica
+        self.all_requests[req.rid] = req
+        self.trace.append(decision)
+        return RequestHandle(req.rid, self)
+
+    # -- the single-server driving surface, spanning all replicas -----------
+
+    @property
+    def replicas(self) -> int:
+        return len(self.servers)
+
+    def owner_of(self, rid: int) -> DisaggregatedServer:
+        """The replica serving ``rid`` (raises KeyError for unknown rids)."""
+        return self.servers[self.assignments[rid]]
+
+    def load(self) -> List[int]:
+        """Requests routed to each replica over the router's lifetime."""
+        counts = [0] * len(self.servers)
+        for i in self.assignments.values():
+            counts[i] += 1
+        return counts
+
+    def pending(self) -> bool:
+        return any(s.pending() for s in self.servers)
+
+    def run_round(self) -> None:
+        """One scheduling round on every replica that still has work, in
+        replica order (the deterministic cluster-wide round)."""
+        for s in self.servers:
+            if s.pending():
+                s.run_round()
+        # drop routing-time hashes of requests that reached a terminal
+        # status (the replicas' own memos are pruned by their _forget)
+        if self._hash_memo:
+            done = {rid for rid, req in self.all_requests.items() if req.done}
+            for hk in [k for k in self._hash_memo if k[0] in done]:
+                del self._hash_memo[hk]
+
+    def drain(self, max_rounds: Optional[int] = None) -> Dict[int, RequestOutcome]:
+        """Cluster-wide drain; same contract as ``DisaggregatedServer.drain``
+        (documented there), with one router round = one round per busy
+        replica."""
+        rounds = 0
+        while self.pending() and (max_rounds is None or rounds < max_rounds):
+            rounds += 1
+            self.run_round()
+        return self.outcomes()
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Anchor-compatible alias of ``drain(max_steps)`` (mirrors
+        ``DisaggregatedServer.run``): returns ``{rid: tokens}`` for terminal
+        requests, raises a resumable ``SchedulerExhausted`` on leftovers."""
+        self.drain(max_steps)
+        if self.pending():
+            done = {r: q.tokens for r, q in self.all_requests.items() if q.done}
+            unfinished = sorted(
+                r for r, q in self.all_requests.items() if not q.done
+            )
+            raise SchedulerExhausted(
+                f"hit max_steps={max_steps} with {len(unfinished)} request(s) "
+                f"unfinished: {unfinished[:8]}{'...' if len(unfinished) > 8 else ''}",
+                done=done,
+                unfinished=unfinished,
+                statuses=self.outcomes(),
+            )
+        return {r: q.tokens for r, q in self.all_requests.items() if q.done}
+
+    def cancel(self, rid: int, *, status: str = STATUS_CANCELLED) -> bool:
+        """Delegates to the owning replica (bit-exact with the in-replica rid
+        path); False for unknown/terminal rids, like the server's."""
+        if rid not in self.assignments:
+            return False
+        ok = self.owner_of(rid).cancel(rid, status=status)
+        if ok:
+            self._forget_hashes(rid)
+        return ok
+
+    def outcomes(self) -> Dict[int, RequestOutcome]:
+        """Merged rid -> ``RequestOutcome`` across replicas (disjoint rids:
+        a request is owned by exactly one replica)."""
+        out: Dict[int, RequestOutcome] = {}
+        for s in self.servers:
+            out.update(s.outcomes())
+        return out
+
+    def audit(self, strict: bool = False):
+        """KV invariant audit across every replica's decode pools."""
+        return [rep for s in self.servers for rep in s.audit(strict=strict)]
+
+    def _stage_of(self, rid: int) -> str:
+        if rid not in self.assignments:
+            return "unknown"
+        return self.owner_of(rid)._stage_of(rid)
+
+    def rounds_since_submit(self, rid: int) -> int:
+        """Scheduling rounds the OWNING replica has run since ``rid`` was
+        submitted (the round-clock TTFT the API surface reports)."""
+        s = self.owner_of(rid).scheduler
+        return s.round - s.submit_round.get(rid, s.round)
+
+    def _forget_hashes(self, rid: int) -> None:
+        for hk in [k for k in self._hash_memo if k[0] == rid]:
+            del self._hash_memo[hk]

@@ -39,7 +39,9 @@ def test_serving_bench_smoke(tmp_path):
 def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
              fcfs_p99=5.0, kv_p99=3.0, sched_mism=0, preemptions=1,
              high_wait=1, preempt_mism=0, with_sched=True, with_rob=True,
-             rob_seed=0, rob_mism=0, rob_audit=0, rob_recovery=4, rob_shed=2):
+             rob_seed=0, rob_mism=0, rob_audit=0, rob_recovery=4, rob_shed=2,
+             with_rt=True, rt_holder=6, rt_recompute=0, rt_imbalance=1.0,
+             rt_mism=0, rt_load=(4, 4)):
     out = {
         "tokens_per_s": {"slab": 1000.0, "paged": 1000.0 * tps_ratio,
                          "ratio": tps_ratio},
@@ -74,6 +76,19 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
                       "recovery_rounds": rob_recovery},
             "shed": {"submitted": 10, "shed": rob_shed,
                      "served": 10 - rob_shed, "shed_after_rounds": 3},
+        }
+    if with_rt:
+        out["router"] = {
+            "replicas": 2,
+            "skewed": {"matched_requests": 6,
+                       "routed_to_holder": rt_holder,
+                       "matched_pages": 12,
+                       "matched_chunk_recompute": rt_recompute,
+                       "per_replica_requests": list(rt_load),
+                       "load_imbalance": rt_imbalance,
+                       "load_imbalance_bound": 1.25},
+            "unskewed": {"requests": 6, "stream_mismatches": rt_mism,
+                         "per_replica_requests": [3, 3]},
         }
     return out
 
@@ -179,6 +194,41 @@ def test_regression_compare_skips_robustness_for_old_baselines():
     checks = compare(_metrics(), _metrics(with_rob=False))
     assert all(ok for _, ok, _ in checks)
     assert not any(n.startswith("robust_") for n, _, _ in checks)
+
+
+def test_regression_compare_router_gates():
+    # every matched request must route to the page-holding replica
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rt_holder=4), _metrics())
+    }
+    assert not checks["router_routed_to_holder"]
+    # matched pages must map, never recompute
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rt_recompute=2), _metrics())
+    }
+    assert not checks["router_matched_recompute"]
+    # load imbalance gated against the committed bound
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rt_imbalance=1.5), _metrics())
+    }
+    assert not checks["router_load_imbalance"]
+    # routed streams must stay bit-identical to single-replica FCFS
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rt_mism=1), _metrics())
+    }
+    assert not checks["router_stream_mismatches"]
+    # replica assignments are deterministic: any drift fails
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(rt_load=(5, 3)), _metrics())
+    }
+    assert not checks["router_assignments_committed"]
+
+
+def test_regression_compare_skips_router_for_old_baselines():
+    """A pre-router committed reference must not fail the gate."""
+    checks = compare(_metrics(), _metrics(with_rt=False))
+    assert all(ok for _, ok, _ in checks)
+    assert not any(n.startswith("router_") for n, _, _ in checks)
 
 
 def test_regression_compare_fails_on_kv_accounting_drift():

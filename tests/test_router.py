@@ -1,0 +1,397 @@
+"""Multi-replica KV-aware router + streaming front door (serving.router /
+serving.api) and the redesigned public serving API (EngineConfig,
+RequestHandle, drain).
+
+The acceptance invariants:
+
+* routing is DETERMINISTIC: same config + same submit sequence => identical
+  replica assignments and decision traces;
+* prefix LOCALITY wins: on a skewed-prefix trace every matched request
+  routes to the replica already holding its pages, and the matched pages
+  are mapped (shared), never recomputed;
+* routing never changes streams: greedy routed streams are bit-identical
+  to a single-replica FCFS run of the same workload;
+* the handle path is the rid path: cancellation/deadline through
+  ``RequestHandle`` matches ``server.cancel(rid)`` bit-exactly;
+* TTFT/TBT are measured at the async API surface.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import (
+    STATUS_CANCELLED,
+    STATUS_DEADLINE,
+    STATUS_FINISHED,
+    Client,
+    DecodeEngine,
+    DisaggregatedServer,
+    EngineConfig,
+    GenRequest,
+    PrefillEngine,
+    RequestHandle,
+    Router,
+)
+
+PAGE = 16
+PREFIX_LEN = 32  # two pages of shared system prompt
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _config(**over):
+    kw = dict(max_slots=4, max_len=128, paged=True, prefix_cache=True,
+              page_size=PAGE)
+    kw.update(over)
+    return EngineConfig(**kw)
+
+
+def _requests(cfg, n, base=0, prefix=None, max_new=4, seed=0, lo=4, hi=16):
+    rng = np.random.default_rng(seed + base)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(lo, hi))).tolist()
+        prompt = (list(prefix) + tail) if prefix is not None else tail
+        out.append(GenRequest(base + i, prompt, max_new_tokens=max_new))
+    return out
+
+
+def _prefixes(cfg, n=2, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=PREFIX_LEN).tolist()
+            for _ in range(n)]
+
+
+# -- EngineConfig (satellite: the consolidated, validated config object) ----
+
+
+def test_engine_config_validates():
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineConfig(prefix_cache=True, paged=False)
+    with pytest.raises(ValueError, match="not a multiple"):
+        EngineConfig(paged=True, max_len=100, page_size=16)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        EngineConfig(paged=True, max_len=128, chunk_tokens=24, page_size=16)
+    with pytest.raises(ValueError, match="scheduler"):
+        EngineConfig(scheduler="lifo")
+    # frozen: replicas derive variants via replace(), never mutation
+    ec = _config()
+    with pytest.raises(Exception):
+        ec.max_slots = 2
+    assert ec.replace(seed=3).seed == 3 and ec.seed == 0
+
+
+def test_config_path_matches_kwarg_shim(setup):
+    """config= and the deprecated loose kwargs build bit-identical engines."""
+    cfg, params = setup
+    ec = _config()
+    srv_cfg = DisaggregatedServer.from_config(params, cfg, ec)
+    srv_kw = DisaggregatedServer(
+        [PrefillEngine(params, cfg)],
+        [DecodeEngine(params, cfg, max_slots=4, max_len=128, paged=True,
+                      prefix_cache=True, page_size=PAGE)],
+    )
+    for r in _requests(cfg, 4):
+        srv_cfg.submit(r)
+    for r in _requests(cfg, 4):
+        srv_kw.submit(r)
+    assert srv_cfg.run() == srv_kw.run()
+
+
+# -- RequestHandle (satellite: submit returns a handle; rid path intact) ----
+
+
+def test_submit_returns_handle(setup):
+    cfg, params = setup
+    srv = DisaggregatedServer.from_config(params, cfg, _config())
+    handles = [srv.submit(r) for r in _requests(cfg, 3)]
+    assert all(isinstance(h, RequestHandle) for h in handles)
+    toks = handles[0].result()  # drives rounds for everyone
+    srv.drain()
+    outs = srv.outcomes()
+    for h in handles:
+        assert h.status() == STATUS_FINISHED
+        assert h.tokens() == outs[h.rid].tokens
+        assert h.outcome() == outs[h.rid]
+    assert toks == outs[handles[0].rid].tokens
+
+
+def test_handle_stream_matches_run(setup):
+    """handle.stream() yields exactly the tokens run() would collect."""
+    cfg, params = setup
+    ec = _config()
+    srv_a = DisaggregatedServer.from_config(params, cfg, ec)
+    srv_b = DisaggregatedServer.from_config(params, cfg, ec)
+    reqs = _requests(cfg, 3, max_new=5)
+    handles = [srv_a.submit(r) for r in reqs]
+    streamed = {h.rid: list(h.stream()) for h in handles}
+    for r in _requests(cfg, 3, max_new=5):
+        srv_b.submit(r)
+    assert streamed == srv_b.run()
+
+
+def test_handle_cancel_matches_rid_path(setup):
+    """Cancellation through the handle is bit-exact with server.cancel(rid):
+    same statuses, same truncated streams, at the same round."""
+    cfg, params = setup
+    ec = _config()
+    outs = []
+    for use_handle in (True, False):
+        srv = DisaggregatedServer.from_config(params, cfg, ec)
+        handles = [srv.submit(r) for r in _requests(cfg, 4, max_new=24)]
+        for _ in range(2):
+            srv.run_round()
+        assert not handles[1].done()  # cancellation lands mid-stream
+        if use_handle:
+            assert handles[1].cancel()
+        else:
+            assert srv.cancel(handles[1].rid)
+        srv.drain()
+        assert handles[1].status() == STATUS_CANCELLED
+        outs.append({h.rid: (h.status(), h.tokens()) for h in handles})
+    assert outs[0] == outs[1]
+
+
+def test_handle_deadline_status(setup):
+    """A deadline expiry surfaces through the same handle, matching the
+    rid-based outcomes() view."""
+    cfg, params = setup
+    srv = DisaggregatedServer.from_config(params, cfg, _config())
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    h = srv.submit(GenRequest(0, prompt, max_new_tokens=64,
+                              deadline_rounds=2))
+    srv.drain()
+    assert h.status() == STATUS_DEADLINE
+    assert srv.outcomes()[0].status == STATUS_DEADLINE
+    assert h.tokens() == srv.outcomes()[0].tokens  # truncated, not erased
+
+
+# -- drain (satellite: the unified run/run_round/resume contract) -----------
+
+
+def test_drain_is_resumable_and_run_equivalent(setup):
+    cfg, params = setup
+    ec = _config()
+    srv = DisaggregatedServer.from_config(params, cfg, ec)
+    for r in _requests(cfg, 4, max_new=24):
+        srv.submit(r)
+    partial = srv.drain(max_rounds=2)  # never raises, work left intact
+    assert srv.pending()
+    assert set(partial) == {0, 1, 2, 3}
+    final = srv.drain()  # resumes where it stopped
+    assert not srv.pending()
+    assert all(o.stage == "done" for o in final.values())
+    # bit-exact with a straight run() of the same workload
+    srv2 = DisaggregatedServer.from_config(params, cfg, ec)
+    for r in _requests(cfg, 4, max_new=24):
+        srv2.submit(r)
+    assert {rid: o.tokens for rid, o in final.items()} == srv2.run()
+
+
+# -- Router: determinism, locality, balance, stream identity ----------------
+
+
+def test_routing_deterministic(setup):
+    """Same seed + workload => identical replica assignment and trace."""
+    cfg, params = setup
+    ec = _config()
+    pa, pb = _prefixes(cfg)
+    runs = []
+    for _ in range(2):
+        router = Router(params, cfg, ec, replicas=2)
+        for r in _requests(cfg, 2, base=0, prefix=pa):
+            router.submit(r)
+        for r in _requests(cfg, 2, base=10, prefix=pb):
+            router.submit(r)
+        router.drain()
+        for r in _requests(cfg, 6, base=20, prefix=pa):
+            router.submit(r)
+        router.drain()
+        runs.append((dict(router.assignments),
+                     [(d.rid, d.replica, d.matched_pages, d.scores)
+                      for d in router.trace]))
+    assert runs[0] == runs[1]
+
+
+def test_skewed_prefix_routes_to_holder(setup):
+    """Skewed-prefix trace: every matched request lands on the replica
+    holding its pages, matched pages are shared (0 recompute), and the
+    per-replica load stays balanced."""
+    cfg, params = setup
+    router = Router(params, cfg, _config(), replicas=2)
+    pa, pb = _prefixes(cfg)
+    # seed wave: one request per family; free-page/depth tie-breaking
+    # spreads them across replicas, planting family A on one and B on the
+    # other
+    ha = router.submit(_requests(cfg, 1, base=0, prefix=pa)[0])
+    hb = router.submit(_requests(cfg, 1, base=1, prefix=pb)[0])
+    router.drain()
+    holder = {"a": router.assignments[0], "b": router.assignments[1]}
+    assert holder["a"] != holder["b"]
+    shared_before = [
+        sum(d.stats["shared_pages"] for d in s.decodes)
+        for s in router.servers
+    ]
+    # skewed wave: interleaved A/B requests, all prefix-matched
+    wave = []
+    for i in range(3):
+        wave.append((_requests(cfg, 1, base=100 + i, prefix=pa)[0], "a"))
+        wave.append((_requests(cfg, 1, base=200 + i, prefix=pb)[0], "b"))
+    matched_total = 0
+    for req, fam in wave:
+        router.submit(req)
+        d = router.trace[-1]
+        assert d.matched_pages == PREFIX_LEN // PAGE, (d, fam)
+        assert d.replica == holder[fam], f"rid {req.rid} missed its holder"
+        matched_total += d.matched_pages
+    router.drain()
+    # matched pages were MAPPED in the holder's pool, not recomputed
+    shared_delta = sum(
+        sum(d.stats["shared_pages"] for d in s.decodes)
+        for s in router.servers
+    ) - sum(shared_before)
+    assert shared_delta >= matched_total  # 0 matched-chunk recompute
+    # the skewed trace is perfectly balanced by construction
+    assert sorted(router.load()) == [4, 4]
+    assert all(o.status == STATUS_FINISHED for o in router.outcomes().values())
+
+
+def test_unskewed_routed_streams_match_single_replica_fcfs(setup):
+    """Routing must never change what is generated: greedy routed streams
+    are bit-identical to the single-replica FCFS baseline."""
+    cfg, params = setup
+    ec = _config()
+    reqs = lambda: _requests(cfg, 6, max_new=5, seed=21)  # noqa: E731
+    router = Router(params, cfg, ec, replicas=2)
+    for r in reqs():
+        router.submit(r)
+    routed = router.run()
+    baseline = DisaggregatedServer.from_config(params, cfg, ec)
+    for r in reqs():
+        baseline.submit(r)
+    assert routed == baseline.run()
+    # unskewed load spreads across replicas
+    assert sorted(router.load()) == [3, 3]
+
+
+def test_router_handle_cancel(setup):
+    """Router-bound handles cancel through the owning replica, bit-exact
+    with the router's rid path."""
+    cfg, params = setup
+    ec = _config()
+    outs = []
+    for use_handle in (True, False):
+        router = Router(params, cfg, ec, replicas=2)
+        handles = [router.submit(r) for r in _requests(cfg, 4, max_new=24)]
+        router.run_round()
+        assert not handles[2].done()  # cancellation lands mid-stream
+        if use_handle:
+            assert handles[2].cancel()
+        else:
+            assert router.cancel(handles[2].rid)
+        router.drain()
+        assert handles[2].status() == STATUS_CANCELLED
+        outs.append({h.rid: (h.status(), h.tokens()) for h in handles})
+    assert outs[0] == outs[1]
+
+
+def test_router_rejects_loose_kwargs(setup):
+    cfg, params = setup
+    with pytest.raises(TypeError, match="EngineConfig"):
+        Router(params, cfg, {"max_slots": 4}, replicas=2)
+
+
+# -- streaming API: per-token generators, TTFT/TBT at the surface -----------
+
+
+def test_async_streams_match_sync_run(setup):
+    """Concurrent async per-token streams reproduce the synchronous drain's
+    streams exactly, and TTFT/TBT are recorded at the API surface."""
+    cfg, params = setup
+    ec = _config()
+    prompts = [r.prompt for r in _requests(cfg, 4, max_new=5, seed=33)]
+
+    async def main():
+        client = Client.from_config(params, cfg, ec, replicas=2)
+
+        async def one(p):
+            toks = []
+            async for t in client.generate(p, max_new_tokens=5):
+                toks.append(t)
+            return toks
+
+        results = await asyncio.gather(*[one(p) for p in prompts])
+        return client, results
+
+    client, results = asyncio.run(main())
+    # reference: the same workload through the synchronous router path
+    ref = Router(params, cfg, ec, replicas=2)
+    for i, p in enumerate(prompts):
+        ref.submit(GenRequest(i, p, max_new_tokens=5))
+    ref_out = ref.run()
+    assert {i: toks for i, toks in enumerate(results)} == ref_out
+    # TTFT/TBT measured at the API surface, per stream
+    for rid, m in client.metrics.items():
+        assert m.status == STATUS_FINISHED
+        assert m.n_tokens == 5
+        assert m.ttft_s is not None and m.ttft_s > 0
+        assert m.ttft_rounds is not None and m.ttft_rounds >= 0
+        assert len(m.tbt_s) == m.n_tokens - 1
+        assert all(g >= 0 for g in m.tbt_s)
+        assert m.finish_s is not None and m.finish_s >= m.submit_s
+
+
+def test_async_ttft_rounds_deterministic(setup):
+    """The round-clock TTFT is deterministic across identical runs (the
+    wall-clock one is not — that's why both exist)."""
+    cfg, params = setup
+    ec = _config()
+    prompts = [r.prompt for r in _requests(cfg, 3, max_new=4, seed=5)]
+
+    async def main():
+        client = Client.from_config(params, cfg, ec, replicas=2)
+
+        async def one(p):
+            return [t async for t in client.generate(p, max_new_tokens=4)]
+
+        await asyncio.gather(*[one(p) for p in prompts])
+        return {rid: m.ttft_rounds for rid, m in client.metrics.items()}
+
+    assert asyncio.run(main()) == asyncio.run(main())
+
+
+def test_async_break_cancels_request(setup):
+    """Breaking out of the async for cancels the in-flight request through
+    the same handle; the truncated stream keeps its tokens."""
+    cfg, params = setup
+    ec = _config()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=10).tolist()
+
+    async def main():
+        client = Client.from_config(params, cfg, ec, replicas=1)
+        got = []
+        async for t in client.generate(prompt, max_new_tokens=32, rid=0):
+            got.append(t)
+            if len(got) == 2:
+                break
+        return client, got
+
+    client, got = asyncio.run(main())
+    m = client.metrics[0]
+    assert m.status == STATUS_CANCELLED
+    assert len(got) == 2
+    out = client.backend.outcomes()[0]
+    assert out.status == STATUS_CANCELLED
+    assert out.tokens[:2] == got
