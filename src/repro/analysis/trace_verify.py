@@ -7,7 +7,8 @@ refactor cannot silently regress the fast-path contracts:
   contain no host-callback or device-transfer primitives — nothing inside
   the scanned decode loop may talk to the host.
 - **donation aliasing**: for every jitted donated transition (``step_block``,
-  admit, release, ``paged_append_chunk``) the compiled executable must
+  admit, release, ``paged_append_chunk`` — including the unified-batching
+  B>1 chunk-group variant) the compiled executable must
   report an ``input_output_alias`` entry for every donated state leaf.  A
   donation that XLA declined (shape/dtype mismatch after a refactor) would
   double KV memory and break the bytes-touched-once argument — this check
@@ -165,6 +166,39 @@ def engine_donation_violations(engine, kv_pack=None) -> list[str]:
     return problems
 
 
+def unified_donation_violations(prefill, decode, n_tokens: int = 32) -> list[str]:
+    """Donation-aliasing check for the unified batched-chunk transition.
+
+    A unified round's device work is ``prefill_chunk_group`` (pure — the
+    pack is a fresh output) followed by one ``append_chunk(kv_group,
+    batch_index=i)`` per row: the same donated ``paged_append_chunk``
+    closure as serial chunked prefill, but compiled against a B>1 pack.
+    A declined donation here copies the whole page pool once per rider
+    row — exactly the cost unified batching exists to avoid — so prove
+    the aliasing on the lowered executable, not the source."""
+    import jax
+    import jax.numpy as jnp
+
+    if not decode.paged:
+        return ["unified donation check needs a paged DecodeEngine"]
+    reqs = [_gen_request(i, list(range(1, n_tokens + 1))) for i in (1, 2)]
+    kv_group = prefill.prefill_chunk_group(
+        [(r, 0) for r in reqs], n_tokens, jax.random.PRNGKey(2),
+        pad_to=n_tokens,
+    )
+    B = jax.tree_util.tree_leaves(kv_group)[0].shape[1]
+    pages = decode.append_chunk(kv_group, n_tokens, batch_index=0)
+    if pages is None:
+        return ["unified donation check: pool cannot hold the probe chunk"]
+    decode.release_chunk_holds(pages)
+    n_alloc = n_tokens // decode.page_size
+    keys = [k for k in decode._append_fns if k[1] == B and k[2] == n_alloc]
+    return donation_violations(
+        decode._append_fns[keys[-1]], 0, f"unified append_chunk(B={B})",
+        decode.state, kv_group, jnp.int32(0),
+    )
+
+
 def compile_count_violations(prefill, lengths) -> list[str]:
     """Replaying `lengths` through the bucketed prefill must stay within the
     bucket list (one jit-cache entry per touched bucket)."""
@@ -228,5 +262,6 @@ def verify_all() -> list[str]:
     prefill, decode, kv_pack = build_tiny_engines(paged=True)
     problems = decode_body_violations(decode)
     problems += engine_donation_violations(decode, kv_pack)
+    problems += unified_donation_violations(prefill, decode)
     problems += compile_count_violations(prefill, [3, 5, 9, 17, 20])
     return problems

@@ -196,12 +196,74 @@ def _paged_dec_kernel(
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("max_length", "interpret"))
+def _paged_dec_partials_kernel(
+    lengths_ref,  # [B] int32 (scalar prefetch, SMEM)
+    bt_ref,  # [B, n_pg] int32 (scalar prefetch, SMEM)
+    q_ref,  # [1, 1, G, d]
+    k_ref,  # [1, 1, ps, d]
+    v_ref,  # [1, 1, ps, d]
+    acc_ref,  # [1, 1, G, d] f32 — UNNORMALIZED numerator
+    m_ref,  # [1, 1, G, 1] f32 — running max
+    l_ref,  # [1, 1, G, 1] f32 — softmax denominator over the cached prefix
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    page_size: int,
+    ns: int,
+):
+    """The paged split-K body, finalized to online-softmax PARTIALS instead of
+    a normalized output: the serving decode step merges the fresh token's
+    rank-1 contribution outside the kernel (the cache is read-only there), so
+    it needs (acc, m, l) rather than acc / l."""
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    @pl.when(si * page_size < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [ps, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, ps]
+        k_pos = si * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        acc_ref[0, 0] = acc_scr[...]
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_length", "interpret", "return_partials")
+)
 def decode_attention_paged_pallas(
     q, k_pool, v_pool, block_tables, lengths,
     *,
     max_length: int = None,
     interpret: bool = False,
+    return_partials: bool = False,
 ):
     """q [B,H,d]; k_pool/v_pool [P, ps, KV, d]; block_tables [B, n_pg] int32;
     lengths [B] -> [B,H,d].
@@ -224,6 +286,14 @@ def decode_attention_paged_pallas(
     ``max_length``: static upper bound on ``lengths`` — caps the split grid
     at ceil(max_length / page_size) pages, exactly like the slab kernel's
     split bound.
+
+    ``return_partials=True`` returns the UNNORMALIZED online-softmax partials
+    over the cached prefix — ``(acc [B,H,d], m [B,H], l [B,H])``, all f32 —
+    instead of the normalized output.  The serving decode step uses this: the
+    fresh token's K/V contribute through a separate rank-1 term merged
+    OUTSIDE the kernel (the cache is consumed read-only per step), so the
+    kernel must not normalize.  A row whose ``lengths`` entry is 0 returns
+    (0, -1e30, 0): its exp-weight underflows to exactly 0 in the merge.
     """
     B, H, d = q.shape
     P, ps, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
@@ -237,25 +307,56 @@ def decode_attention_paged_pallas(
     kt = jnp.moveaxis(k_pool, 2, 1)  # [P, KV, ps, d]
     vt = jnp.moveaxis(v_pool, 2, 1)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+        pl.BlockSpec(
+            (1, 1, ps, d), lambda b, kv, si, lens, bt: (bt[b, si], kv, 0, 0)
+        ),
+        pl.BlockSpec(
+            (1, 1, ps, d), lambda b, kv, si, lens, bt: (bt[b, si], kv, 0, 0)
+        ),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((G, 1), jnp.float32),
+        pltpu.VMEM((G, 1), jnp.float32),
+        pltpu.VMEM((G, d), jnp.float32),
+    ]
+    if return_partials:
+        kernel = functools.partial(
+            _paged_dec_partials_kernel, scale=scale, page_size=ps, ns=ns
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, ns),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1), lambda b, kv, si, *_: (b, kv, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1), lambda b, kv, si, *_: (b, kv, 0, 0)),
+            ],
+            scratch_shapes=scratch_shapes,
+        )
+        acc, m, l = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((B, KV, G, d), jnp.float32),
+                jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+                jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+            ],
+            interpret=interpret,
+        )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qt, kt, vt)
+        return (
+            acc.reshape(B, H, d), m.reshape(B, H), l.reshape(B, H)
+        )
+
     kernel = functools.partial(_paged_dec_kernel, scale=scale, page_size=ps, ns=ns)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, ns),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
-            pl.BlockSpec(
-                (1, 1, ps, d), lambda b, kv, si, lens, bt: (bt[b, si], kv, 0, 0)
-            ),
-            pl.BlockSpec(
-                (1, 1, ps, d), lambda b, kv, si, lens, bt: (bt[b, si], kv, 0, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, d), jnp.float32),
-        ],
+        scratch_shapes=scratch_shapes,
     )
     out = pl.pallas_call(
         kernel,

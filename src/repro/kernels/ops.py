@@ -76,6 +76,27 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths):
     return _ref.decode_attention_paged_ref(q, k_pool, v_pool, block_tables, lengths)
 
 
+def paged_decode_via_pallas() -> bool:
+    """Whether the serving decode step should route paged GQA attention
+    through the block-table Pallas kernel (the default on TPU; forceable with
+    set_impl for CPU interpret-mode tests).  Decided at trace time — the
+    XLA gather path stays the bit-identity reference everywhere else."""
+    return _use_pallas()
+
+
+def decode_attention_paged_partials(q, k_pool, v_pool, block_tables, lengths):
+    """Unnormalized paged decode partials (acc, m, l) for the in-step merge
+    with the fresh token's rank-1 term.  Dispatched inside model code
+    (already under jit); Pallas-only — callers must gate on
+    ``paged_decode_via_pallas()``."""
+    from .decode_attention import decode_attention_paged_pallas
+
+    return decode_attention_paged_pallas(
+        q, k_pool, v_pool, block_tables, lengths,
+        interpret=_interpret(), return_partials=True,
+    )
+
+
 def ssd(x, dt, A, B, C, *, chunk: int = 128, initial_state=None):
     """Dispatched inside model code (already under jit)."""
     if _use_pallas() and _IMPL in ("pallas", "interpret"):

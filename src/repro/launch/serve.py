@@ -66,14 +66,32 @@ def main():
                     help="KV positions per page (paged mode)")
     ap.add_argument("--pages", type=int, default=None,
                     help="pool size in pages (default: slab-equivalent HBM)")
-    ap.add_argument("--chunk-tokens", type=int, default=None,
+    ap.add_argument("--chunk-tokens", type=str, default=None,
                     help="chunked prefill (requires --paged): prompts longer "
                          "than this prefill in page-aligned chunks, each "
                          "chunk's KV streamed into the decode pool "
                          "immediately, so short requests interleave between "
                          "a long prompt's chunks instead of queueing behind "
                          "one monolithic compile; must be a multiple of "
-                         "--page-size")
+                         "--page-size, or 'auto' to size the quantum from "
+                         "measured decode-block time against --tbt-target-ms")
+    ap.add_argument("--tbt-target-ms", type=float, default=None,
+                    help="inter-token-latency SLO target (ms): with "
+                         "--chunk-tokens auto the startup tuner picks the "
+                         "largest chunk quantum whose chunk + decode block "
+                         "fits this")
+    ap.add_argument("--unified-batching", action="store_true",
+                    help="decode-maximal rounds (requires --chunk-tokens): "
+                         "batch chunks of DIFFERENT requests into one "
+                         "prefill dispatch and coalesce chunk work with the "
+                         "decode step under the round token budget")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-round token budget shared by the decode block "
+                         "and rider chunks (unified batching); default "
+                         "max_slots*decode_block + prefill_batch*"
+                         "chunk_tokens fills idle prefill rows with riders "
+                         "— a tighter budget trades chunk progress for "
+                         "decode TBT")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted prefix sharing + copy-on-write (paged "
                          "mode): requests whose prompts share a page-aligned "
@@ -131,9 +149,22 @@ def main():
         if not args.paged:
             ap.error("--chunk-tokens requires --paged (chunks stream into the "
                      "paged pool)")
-        if args.chunk_tokens % args.page_size:
-            ap.error("--chunk-tokens must be a multiple of --page-size "
-                     "(chunk boundaries are page-aligned)")
+        if args.chunk_tokens != "auto":
+            try:
+                args.chunk_tokens = int(args.chunk_tokens)
+            except ValueError:
+                ap.error("--chunk-tokens must be an integer or 'auto'")
+            if args.chunk_tokens % args.page_size:
+                ap.error("--chunk-tokens must be a multiple of --page-size "
+                         "(chunk boundaries are page-aligned)")
+        elif args.tbt_target_ms is None:
+            ap.error("--chunk-tokens auto needs --tbt-target-ms (the SLO the "
+                     "tuner sizes the quantum against)")
+    if args.unified_batching and args.chunk_tokens is None:
+        ap.error("--unified-batching requires --chunk-tokens (rider chunks "
+                 "are what the round batches)")
+    if args.token_budget is not None and not args.unified_batching:
+        ap.error("--token-budget requires --unified-batching")
     if args.swap and args.scheduler != "priority":
         ap.error("--swap requires --scheduler priority")
     if args.swap and not args.paged:
@@ -164,6 +195,9 @@ def main():
         paged=args.paged, page_size=args.page_size, n_pages=args.pages,
         prefix_cache=args.prefix_cache,
         chunk_tokens=args.chunk_tokens,
+        tbt_target_ms=args.tbt_target_ms,
+        unified_batching=args.unified_batching,
+        token_budget=args.token_budget,
         sampling=SamplingParams(temperature=args.temperature),
         seed=args.seed, max_prefill_batch=args.prefill_batch,
         scheduler=args.scheduler,

@@ -81,8 +81,17 @@ def gather_pages(pool, block_tables):
 
     Unmapped table entries point at the trash page; those positions are
     always >= the request's write position and masked by the decode kernels
-    (the mask reads strictly < pos), so trash contents are never attended."""
-    rows = pool[block_tables]  # [B, n_pg, ps, ...]
+    (the mask reads strictly < pos), so trash contents are never attended.
+
+    Gather-free: the page lookup is a one-hot contraction, not a
+    fancy-indexing gather — XLA:CPU lowers general gathers to a scalar
+    element loop that dominates decode wall time, while a [B, n_pg, P]
+    one-hot times the pool is a dense matmul (vectorized on every backend).
+    The result is bit-identical to the gather: each output row sums exactly
+    one nonzero term, and ``x * 1 + 0 * y`` is exact for finite pools."""
+    P = pool.shape[0]
+    oh = jax.nn.one_hot(block_tables, P, dtype=pool.dtype)  # [B, n_pg, P]
+    rows = jnp.einsum("bnp,p...->bn...", oh, pool)  # [B, n_pg, ps, ...]
     B, n_pg, ps = rows.shape[:3]
     return rows.reshape((B, n_pg * ps) + rows.shape[3:])
 
@@ -381,6 +390,17 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=
         k = apply_rope_vec(k, cos, sin)
     k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
     v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+    if block_tables is not None and slopes is None:
+        # Default paged path on TPU: the block-table Pallas kernel streams
+        # pages via scalar-prefetched tables (kernels/decode_attention.py) —
+        # no gather materialization at all.  The XLA gather path below stays
+        # the bit-identity reference (and the CPU path); interpret-mode tests
+        # force this branch off-TPU via kernels.ops.set_impl.
+        from ..kernels import ops as kops
+
+        if kops.paged_decode_via_pallas():
+            out = _paged_decode_pallas(p, q, k, v, cfg, pos_b, cache, block_tables)
+            return out, {"k": k[:, 0], "v": v[:, 0]}
     ck = cache["k"] if block_tables is None else gather_pages(cache["k"], block_tables)
     cv = cache["v"] if block_tables is None else gather_pages(cache["v"], block_tables)
     ck = constrain(ck, ("batch", "kv_seq", "kv_heads", "head_dim"))
@@ -412,6 +432,41 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=
     o = (o / denom[..., None].astype(o.dtype)).reshape(B, 1, H, cfg.d_head)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, {"k": k[:, 0], "v": v[:, 0]}
+
+
+def _paged_decode_pallas(p, q, k, v, cfg: ModelConfig, pos_b, cache, block_tables):
+    """Paged GQA decode via the block-table Pallas kernel (view-free).
+
+    The kernel streams K/V pages through scalar-prefetched block tables and
+    returns UNNORMALIZED online-softmax partials (acc, m, l) in f32 over the
+    strictly-prior tokens (lengths = pos_b, same mask as the XLA path); the
+    fresh token's rank-1 term is merged here, mirroring the XLA path's
+    separate ``s_new`` term.  A request at position 0 has m = -inf partials
+    whose exp-weight underflows to exactly 0, so it attends only to itself.
+    """
+    from ..kernels import ops as kops
+
+    B = q.shape[0]
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    scale = cfg.d_head ** -0.5
+    # kernel head order is KV-major (h = kv*G + g), matching q.reshape below
+    acc, m, l = kops.decode_attention_paged_partials(
+        q[:, 0], cache["k"], cache["v"], block_tables, pos_b
+    )
+    acc = acc.reshape(B, KV, G, cfg.d_head)
+    m = m.reshape(B, KV, G)
+    l = l.reshape(B, KV, G)
+    qg = q.reshape(B, KV, G, cfg.d_head)
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg, k[:, 0], preferred_element_type=jnp.float32)
+    s_new = s_new * scale
+    m2 = jnp.maximum(m, s_new)
+    alpha = jnp.exp(m - m2)
+    beta = jnp.exp(s_new - m2)
+    o = acc * alpha[..., None] + beta[..., None] * v[:, 0][:, :, None, :].astype(acc.dtype)
+    o = o / (l * alpha + beta)[..., None]
+    o = o.reshape(B, 1, H, cfg.d_head).astype(q.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 
 
 def gqa_cache_shape(cfg: ModelConfig, B: int, L: int):

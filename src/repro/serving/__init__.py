@@ -59,7 +59,7 @@ tier-1 tests — docs/serving.md is the narrative guide):
   deterministic failures at the lifecycle seams (``TransientFault`` is the
   swap-out flavour); ``server.audit`` / ``DecodeEngine.audit`` run the KV
   invariant auditor; ``server.crash_engine`` recovers a dead engine's
-  in-flight work.  See docs/serving.md §6.
+  in-flight work.  See docs/serving.md §7.
 """
 from .api import Client, StreamMetrics  # noqa: F401
 from .config import EngineConfig  # noqa: F401

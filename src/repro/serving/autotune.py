@@ -1,0 +1,134 @@
+"""Measured-TBT chunk-quantum tuner (``chunk_tokens="auto"``).
+
+Chunked prefill bounds time-between-tokens (TBT) for decoding requests by
+capping how much prompt work a round may interleave with the decode step.
+The right cap is hardware- and model-dependent: the SPAD observation is
+that prefill arithmetic intensity saturates far earlier on decode-class
+hardware, so a fixed quantum tuned on one chip is wrong on another.
+
+The tuner measures, on the REAL jitted paths the server will run:
+
+* ``t_block`` — one fused decode block over a full batch (``max_slots``
+  rows, ``decode_block`` steps): the floor every round pays.
+* ``t_chunk(q)`` — one bucketed prefill call of ``q`` tokens, for
+  page-aligned power-of-two candidates ``q = page_size * 2**i``.
+
+and picks the LARGEST quantum whose round still meets the SLO::
+
+    t_chunk(q) + t_block <= tbt_target_ms
+
+A larger quantum finishes long prompts in fewer rounds (better TTFT); the
+SLO bounds what that may cost concurrent decodes (worst-case TBT for a
+decoding request is one chunk plus one block).  When even the smallest
+candidate misses the target the tuner falls back to one page —
+chunked-prefill granularity cannot go below the page grid.
+
+Timing uses medians of a handful of repeats after a compile warmup; the
+engines built here are throwaways (the server builds its own afterwards),
+so the only lasting cost is startup wall-clock, and the jit cache makes
+the server's first real rounds cheaper, not slower.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["tune_chunk_tokens", "chunk_candidates"]
+
+_REPEATS = 5  # timed repeats per measurement (median taken)
+
+
+def chunk_candidates(page_size: int, max_len: int, buckets) -> List[int]:
+    """Page-aligned power-of-two quanta to try: ``page_size * 2**i`` while
+    a chunk still fits under both the KV capacity and the bucket ladder."""
+    cap = min(max_len, max(buckets)) if buckets else max_len
+    out: List[int] = []
+    q = page_size
+    while q <= cap:
+        out.append(q)
+        q *= 2
+    return out
+
+
+def _median_time(fn, *, repeats: int = _REPEATS) -> float:
+    """Median wall-clock of ``fn()`` over ``repeats`` runs, after one
+    warmup call that eats the compile."""
+    fn()  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def tune_chunk_tokens(
+    params,
+    cfg,
+    config,
+    *,
+    report: Optional[Dict] = None,
+) -> int:
+    """Resolve ``chunk_tokens="auto"`` to a concrete page-aligned quantum.
+
+    ``config`` is the ``EngineConfig`` being resolved (its ``tbt_target_ms``
+    is the SLO; validated non-None at construction).  Pass ``report={}`` to
+    receive the raw measurements (candidate -> seconds, plus ``t_block``).
+    """
+    from .engine import DecodeEngine, GenRequest, PrefillEngine
+
+    if config.tbt_target_ms is None:
+        raise ValueError("tune_chunk_tokens requires config.tbt_target_ms")
+    target_s = config.tbt_target_ms / 1e3
+
+    # throwaway engines on the REAL jitted paths (plain greedy config: the
+    # tuner measures compute, not sampling / prefix bookkeeping)
+    probe = config.replace(
+        chunk_tokens=None, unified_batching=False, token_budget=None,
+        prefix_cache=False, faults=None, audit_every=None,
+    )
+    pre = PrefillEngine(params, cfg, **probe.prefill_args())
+    dec = DecodeEngine(params, cfg, **probe.decode_args())
+
+    # fill every decode slot so t_block is the saturated-batch cost
+    key = jax.random.PRNGKey(probe.seed)
+    for i in range(probe.max_slots):
+        prompt = [(7 * i + j) % cfg.vocab_size for j in range(probe.page_size)]
+        req = GenRequest(
+            rid=i, prompt=prompt,
+            max_new_tokens=probe.max_len - probe.page_size,
+        )
+        key, sub = jax.random.split(key)
+        toks, kv, lens = pre.prefill_batch([req], sub)
+        dec.admit(req, kv, toks[0], lens[0])
+
+    def block():
+        out = dec.step_block(dec.decode_block)
+        # step_block syncs on the token readback; nothing more to block on
+        assert out
+
+    t_block = _median_time(block)
+
+    t_chunk: Dict[int, float] = {}
+    for q in chunk_candidates(probe.page_size, probe.max_len, probe.buckets):
+        prompt = [(3 * q + j) % cfg.vocab_size for j in range(q)]
+        req = GenRequest(rid=10_000 + q, prompt=prompt, max_new_tokens=1)
+
+        def chunk(req=req):
+            # prefill_batch syncs on its own first-token readback, so the
+            # call returning bounds the dispatch
+            pre.prefill_batch([req], jax.random.PRNGKey(0))
+
+        t_chunk[q] = _median_time(chunk)
+
+    fits = [q for q, t in t_chunk.items() if t + t_block <= target_s]
+    chosen = max(fits) if fits else probe.page_size
+    if report is not None:
+        report["t_block_s"] = t_block
+        report["t_chunk_s"] = dict(t_chunk)
+        report["tbt_target_ms"] = config.tbt_target_ms
+        report["chosen"] = chosen
+    return chosen

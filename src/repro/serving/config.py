@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 from .faults import FaultPlan
 from .sampling import SamplingParams
@@ -56,7 +56,10 @@ class EngineConfig:
       bucketed       pad prompts to length buckets (bounded jit cache)
       buckets        the bucket ladder
       chunk_tokens   chunked prefill threshold/quantum (requires ``paged``;
-                     must be a multiple of ``page_size``)
+                     must be a multiple of ``page_size``), or the string
+                     ``"auto"``: measure decode-block step time at startup
+                     and pick the largest quantum whose chunk+decode round
+                     fits ``tbt_target_ms`` (``serving.autotune``)
 
     Shared:
       sampling       SamplingParams for both phases (None = greedy)
@@ -72,6 +75,24 @@ class EngineConfig:
                          internally so the config stays hashable
       faults             FaultPlan for seeded chaos injection (None = off)
       audit_every        run the strict KV invariant auditor every N rounds
+
+    Unified batching (decode-maximal rounds; requires ``chunk_tokens``):
+      unified_batching   batch page-aligned chunks of DIFFERENT chunked
+                         requests into one prefill dispatch and coalesce
+                         chunk work with the decode step under the round's
+                         token budget (False keeps the serial one-chunk-
+                         per-round schedule, the bit-exact regression
+                         anchor)
+      token_budget       per-round token budget shared by the decode block
+                         and rider chunks: ``decode_tokens + chunk_tokens
+                         <= token_budget``.  None derives the throughput
+                         default ``max_slots * decode_block +
+                         max_prefill_batch * chunk_tokens`` (the head chunk
+                         never defers and riders fill idle prefill rows); a
+                         TIGHTER budget sheds riders first, then makes
+                         saturated rounds decode-only — the TBT lever.
+      tbt_target_ms      inter-token-latency SLO target used by
+                         ``chunk_tokens="auto"`` to size the chunk quantum
     """
 
     # -- decode engine ------------------------------------------------------
@@ -86,7 +107,7 @@ class EngineConfig:
     # -- prefill engine -----------------------------------------------------
     bucketed: bool = True
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
-    chunk_tokens: Optional[int] = None
+    chunk_tokens: Union[int, str, None] = None
     # -- shared -------------------------------------------------------------
     sampling: Optional[SamplingParams] = None
     seed: int = 0
@@ -96,6 +117,10 @@ class EngineConfig:
     scheduler_kwargs: Tuple[Tuple[str, Any], ...] = ()
     faults: Optional[FaultPlan] = None
     audit_every: Optional[int] = None
+    # -- unified batching ---------------------------------------------------
+    unified_batching: bool = False
+    token_budget: Optional[int] = None
+    tbt_target_ms: Optional[float] = None
 
     def __post_init__(self):
         if isinstance(self.scheduler_kwargs, dict):
@@ -114,7 +139,22 @@ class EngineConfig:
             raise ValueError(
                 f"max_len {self.max_len} not a multiple of page_size {self.page_size}"
             )
-        if self.chunk_tokens is not None:
+        if isinstance(self.chunk_tokens, str):
+            if self.chunk_tokens != "auto":
+                raise ValueError(
+                    f"chunk_tokens must be an int or 'auto', "
+                    f"got {self.chunk_tokens!r}"
+                )
+            if not self.paged:
+                raise ValueError("chunk_tokens requires paged=True (chunks "
+                                 "stream into the paged pool)")
+            if self.tbt_target_ms is None:
+                raise ValueError(
+                    "chunk_tokens='auto' requires tbt_target_ms: the tuner "
+                    "sizes the chunk quantum so one chunk + one decode block "
+                    "fits the inter-token-latency target"
+                )
+        elif self.chunk_tokens is not None:
             if self.chunk_tokens <= 0:
                 raise ValueError(
                     f"chunk_tokens must be positive, got {self.chunk_tokens}"
@@ -127,6 +167,37 @@ class EngineConfig:
                     f"chunk_tokens {self.chunk_tokens} must be a multiple of "
                     f"page_size {self.page_size} (chunk boundaries are "
                     f"page-aligned)"
+                )
+        if self.tbt_target_ms is not None and self.tbt_target_ms <= 0:
+            raise ValueError(
+                f"tbt_target_ms must be positive, got {self.tbt_target_ms}"
+            )
+        if self.unified_batching and self.chunk_tokens is None:
+            raise ValueError(
+                "unified_batching=True requires chunk_tokens: unified rounds "
+                "coalesce CHUNK work with the decode step — without chunked "
+                "prefill there is nothing to batch"
+            )
+        if self.token_budget is not None:
+            if not self.unified_batching:
+                raise ValueError(
+                    "token_budget only applies with unified_batching=True "
+                    "(serial rounds have no chunk/decode budget to share)"
+                )
+            # the budget must fit at least one decode block plus one chunk,
+            # or every saturated round deadlocks: chunks defer forever
+            # waiting for decode headroom that can never appear
+            min_chunk = (
+                self.page_size if self.chunk_tokens == "auto"
+                else self.chunk_tokens
+            )
+            floor = self.decode_block + min_chunk
+            if self.token_budget < floor:
+                raise ValueError(
+                    f"token_budget {self.token_budget} < decode_block + one "
+                    f"chunk = {self.decode_block} + {min_chunk} = {floor}: "
+                    f"a budget that cannot fit one decode block AND one "
+                    f"chunk would starve chunked prefill forever"
                 )
         # late import: scheduler.py never imports config, so this cannot cycle
         from .scheduler import SCHEDULERS

@@ -527,6 +527,39 @@ class PrefillEngine:
         )
         return toks[0], kvb
 
+    def prefill_chunk_group(
+        self, items: List[Tuple[GenRequest, int]], n_tokens: int, key, *,
+        prefix=None, pad_to: Optional[int] = None,
+    ) -> Any:
+        """Prefill ONE ``n_tokens`` chunk for EACH of several chunked
+        requests in a single batched dispatch (unified batching).
+
+        ``items`` = [(req, pos)]: row i runs ``req.prompt[pos, pos +
+        n_tokens)`` at absolute positions against its own streamed-prefix
+        row of ``prefix`` — the per-row ``shared_lens`` machinery
+        ``prefill_batch`` already has for prefix-matched groups.  Every row
+        is a NON-final chunk by contract (the final chunk's first-token
+        sample must replay the serial pad/key schedule bit for bit, so
+        finals never ride), hence the sampled tokens are discarded and the
+        caller passes the fixed dummy chunk key.  Returns the kv pack
+        (batch axis = padded rows; the caller appends row i via
+        ``append_chunk(..., batch_index=i)``)."""
+        subs = [
+            GenRequest(
+                # fastpath: allow[FP001] host prompt slice (numpy in, no device readback)
+                r.rid, np.asarray(r.prompt[: pos + n_tokens], np.int32),
+                r.max_new_tokens,
+            )
+            for r, pos in items
+        ]
+        self.stats["chunk_calls"] += 1
+        self.stats["chunk_rows"] = self.stats.get("chunk_rows", 0) + len(items)
+        _, kvb, _ = self.prefill_batch(
+            subs, key, pad_to=pad_to,
+            prefix=None if prefix is None else (prefix, [pos for _, pos in items]),
+        )
+        return kvb
+
     def prefill(self, req: GenRequest, key) -> Tuple[int, Any, int]:
         """Single-request prefill.  Returns (first_token, kv_pack, true_len).
 
@@ -657,6 +690,18 @@ class DecodeEngine:
             self._growth = [0] * max_slots  # outstanding decode-time allocation allowance
             self._slot_new = [0] * max_slots  # non-shared pages mapped at admit
             self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+            # admits whose page-id readback is deferred to the next natural
+            # host sync: (slot, n_need) pairs plus the synchronous count of
+            # their fresh pages (keeps ``free_pages`` exact without a sync)
+            self._pending_admits: List[Tuple[int, int]] = []
+            self._pending_fresh = 0
+            # device-resident constants for the plain (unshared) admit: the
+            # shared-page plumbing degenerates to fixed arrays there, and
+            # re-uploading them per admit costs more than the admit compute
+            self._plain_shared = jnp.full((self.pages_per_slot,), self.n_pages,
+                                          jnp.int32)
+            self._plain_regmask = jnp.zeros((self.pages_per_slot,), bool)
+            self._zero_i32 = jnp.int32(0)
             self._tail_ok = all(m == "attn" for m, _ in cfg.block_pattern)
             self._is_hybrid = any(m == "mamba" for m, _ in cfg.block_pattern)
             self.prefix: Optional[PrefixIndex] = (
@@ -669,6 +714,9 @@ class DecodeEngine:
             self._gather_fns: Dict[Tuple[int, int], Any] = {}
             self._append_fns: Dict[Tuple[int, int, int], Any] = {}  # (L1, B, n_alloc)
             self._fork_fn = None
+            # flips permanently on the first fork(): from then on decode
+            # blocks must carry the copy-on-write machinery (new jit keys)
+            self._fork_used = False
             # admission stats: per-request entries live only while the
             # request does (pruned at release — a long-running server must
             # not grow without bound); `stats` keeps the cumulative totals
@@ -700,8 +748,25 @@ class DecodeEngine:
         """Deactivate all slots freed this block in one dispatch (keep [S] bool)."""
         return state._replace(active=state.active & keep)
 
-    def _block_fn(self, k: int):
-        if k not in self._block_fns:
+    def _block_fn(self, k: int, n_pg_eff: Optional[int] = None):
+        # paged jit keys are (k, n_pg_eff): k <= decode_block and n_pg_eff is
+        # a power-of-two page bucket (see step_block), so the cache stays
+        # bounded by decode_block * log2(pages_per_slot) entries, never by
+        # exact sequence lengths
+        if self.paged:
+            n_eff = n_pg_eff if n_pg_eff is not None else self.pages_per_slot
+            # COW machinery is only needed when two holders can share a
+            # page a decode step writes: a prefix index, or fork() clones.
+            # Chunk holds never need it (the hold and the slot belong to
+            # the SAME request; an in-place tail write is what it wants),
+            # so plain paged serving compiles a leaner block.
+            cow = self.prefix_cache or self._fork_used
+            fn_key: Any = (k, n_eff, cow)
+        else:
+            n_eff = 0
+            cow = False
+            fn_key = k
+        if fn_key not in self._block_fns:
             cfg, sampling, max_len = self.cfg, self.sampling, self.max_len
 
             if self.paged:
@@ -711,18 +776,23 @@ class DecodeEngine:
                 def blk(params, state: kvcache.PagedDecodeState):
                     pos0 = state.positions
                     active = state.active
-                    bt0 = state.block_tables
                     # Copy-on-write first: any page this block will write
                     # (positions [pos0, pos0+k) of a writing slot) that is
                     # shared (refs > 1) gets a fresh page; the writer's table
-                    # entry is redirected and the shared count decremented.
-                    # The view below still gathers through the OLD tables, so
-                    # the shared page's prefix bytes ride into the view and
-                    # the whole-page writeback lands them on the copy.
+                    # entry is redirected, the shared count decremented, and
+                    # the shared page's BYTES copied onto the fresh page —
+                    # the view-free scan below reads pages directly, so the
+                    # prefix must already live on the copy.
                     will_write = active & (pos0 < max_len)
-                    refs, bt = kvcache.cow_redirect(
-                        state.page_refs, bt0, pos0, will_write, k, ps
-                    )
+                    if cow:
+                        refs, bt, caches = kvcache.cow_redirect(
+                            state.page_refs, state.block_tables, pos0,
+                            will_write, k, ps, caches=state.caches, cfg=cfg,
+                        )
+                    else:
+                        refs, bt, caches = (
+                            state.page_refs, state.block_tables, state.caches
+                        )
                     # On-demand page allocation, hoisted to block granularity:
                     # the k steps of this block write positions [pos, pos+k)
                     # per slot, so each slot crosses at most k // ps + 1 page
@@ -739,21 +809,25 @@ class DecodeEngine:
                         cur = jnp.where(need, b_pos // ps, n_pg)
                         bt = bt.at[rows, cur].set(new_pages, mode="drop")
 
-                    # Gather the slab-layout view of the pools ONCE — through
-                    # the PRE-COW tables (fresh boundary/COW pages hold
-                    # garbage that decode overwrites before attending) — run
-                    # the k steps against it (byte-for-byte the slab scan
-                    # body, so per-step cost and token streams match the slab
-                    # engine), then write the block's fresh positions back to
-                    # the pool through the POST-COW tables.  The view is
-                    # transient within this jitted block.
-                    view = kvcache.paged_gather_view(state.caches, bt0, cfg)
+                    # View-free scan: decode_step reads K/V straight off the
+                    # page pools through the POST-COW tables and scatters the
+                    # fresh token into (page, offset) — no transient
+                    # slab-sized view, no whole-page writeback.  bt_eff
+                    # truncates the attended pages to the longest active
+                    # sequence this block can reach (n_eff from step_block):
+                    # pages past it are either unmapped (trash) or belong to
+                    # positions the mask already excludes, and masked scores
+                    # exp to exactly 0.0, so the bound is bit-invisible while
+                    # the per-step gather shrinks from max_len to n_eff * ps
+                    # positions.
+                    bt_eff = bt[:, :n_eff]
 
                     def one(carry, _):
-                        view, tokens, positions, key = carry
+                        caches, tokens, positions, key = carry
                         key, sub = jax.random.split(key)
-                        logits, view = M.decode_step(
-                            params, tokens, view, positions, cfg
+                        logits, caches = M.decode_step(
+                            params, tokens, caches, positions, cfg,
+                            block_tables=bt_eff,
                         )
                         nxt = sample(logits, sub, sampling)
                         nxt = jnp.where(active, nxt, tokens)
@@ -761,13 +835,10 @@ class DecodeEngine:
                         positions = jnp.where(
                             active & (positions < max_len), positions + 1, positions
                         )
-                        return (view, nxt, positions, key), nxt
+                        return (caches, nxt, positions, key), nxt
 
-                    (view, tokens, positions, key), toks = jax.lax.scan(
-                        one, (view, state.tokens, pos0, state.key), None, length=k
-                    )
-                    caches = kvcache.paged_writeback(
-                        state.caches, view, bt, pos0, k, cfg
+                    (caches, tokens, positions, key), toks = jax.lax.scan(
+                        one, (caches, state.tokens, pos0, state.key), None, length=k
                     )
                     return (
                         kvcache.PagedDecodeState(
@@ -803,8 +874,8 @@ class DecodeEngine:
                     state, toks = jax.lax.scan(one, state, None, length=k)
                     return state, toks  # toks [k, max_slots]
 
-            self._block_fns[k] = self._jit(blk, donate_state_argnum=1)
-        return self._block_fns[k]
+            self._block_fns[fn_key] = self._jit(blk, donate_state_argnum=1)
+        return self._block_fns[fn_key]
 
     def _admit_fn(self, kv_pack):
         B = jax.tree.leaves(kv_pack)[0].shape[1]
@@ -870,7 +941,30 @@ class DecodeEngine:
         if not self.paged:
             return 0
         held = int((self._href > 0).sum())
-        return self.n_pages - held - sum(self._growth)
+        # pending admits hold freshly allocated pages whose ids the host has
+        # not read back yet — they are disjoint from every _href-held page
+        # (the allocator only hands out refs==0 pages), so the count adds
+        # exactly
+        return self.n_pages - held - sum(self._growth) - self._pending_fresh
+
+    def _resolve_pending(self) -> None:
+        """Apply deferred admit-time page-id readbacks (one sync for all).
+
+        ``admit`` defers learning WHICH physical pages the device mapped (the
+        ids are only needed by release/fork/swap/audit, all of which call
+        here first); the page COUNT was accounted synchronously via
+        ``_pending_fresh``, which this zeroes as ids move into ``_href``."""
+        if not self._pending_admits:
+            return
+        # fastpath: allow[FP001] batched resolution of deferred admit readbacks
+        tables = np.asarray(self.state.block_tables)
+        for slot, n_need in self._pending_admits:
+            row = [int(p) for p in tables[slot, :n_need]]
+            self._slot_pages[slot] = row
+            for p in row:
+                self._href[p] += 1
+        self._pending_admits.clear()
+        self._pending_fresh = 0
 
     def _evictable_pages(self) -> int:
         """Prefix-cache pages that could be reclaimed right now: unpinned and
@@ -1152,20 +1246,32 @@ class DecodeEngine:
             return None
         if self.paged:
             n_need = -(-true_len // ps)
-            shared_arr = np.full((pps,), self.n_pages, np.int32)
-            if n_shared:
-                shared_arr[:n_shared] = prefix.pages
-            # which fresh pages the host will register (full prompt chunks
-            # whose chain hash is not yet in the index) — they start at
-            # refs == 2 (slot hold + cache hold) inside the jitted admit
             reg_mask = np.zeros((pps,), bool)
             hashes: List[bytes] = []
-            if self.prefix is not None:
-                hashes = prefix.hashes  # re-match above guarantees a match obj
-                for j in range(n_shared, min(true_len // ps, pps, len(hashes))):
-                    if hashes[j] not in self.prefix:
-                        reg_mask[j] = True
-            pack_page0 = n_shared if (prefix is not None and prefix.tail) else 0
+            if self.prefix is None and n_shared == 0:
+                # plain admit: the shared-page plumbing is all constants —
+                # reuse the cached device arrays instead of re-uploading
+                shared_dev = self._plain_shared
+                reg_dev = self._plain_regmask
+                n_shared_dev = pack0_dev = self._zero_i32
+            else:
+                shared_arr = np.full((pps,), self.n_pages, np.int32)
+                if n_shared:
+                    shared_arr[:n_shared] = prefix.pages
+                # which fresh pages the host will register (full prompt
+                # chunks whose chain hash is not yet in the index) — they
+                # start at refs == 2 (slot hold + cache hold) inside the
+                # jitted admit
+                if self.prefix is not None:
+                    hashes = prefix.hashes  # re-match above guarantees a match
+                    for j in range(n_shared, min(true_len // ps, pps, len(hashes))):
+                        if hashes[j] not in self.prefix:
+                            reg_mask[j] = True
+                pack_page0 = n_shared if (prefix is not None and prefix.tail) else 0
+                shared_dev = jnp.asarray(shared_arr)
+                reg_dev = jnp.asarray(reg_mask)
+                n_shared_dev = jnp.int32(n_shared)
+                pack0_dev = jnp.int32(pack_page0)
             self.state = self._admit_fn(kv_pack)(
                 self.state,
                 kv_pack,
@@ -1173,25 +1279,35 @@ class DecodeEngine:
                 jnp.int32(slot),
                 jnp.int32(first_token),
                 jnp.int32(true_len),
-                jnp.asarray(shared_arr),
-                jnp.int32(n_shared),
-                jnp.asarray(reg_mask),
-                jnp.int32(pack_page0),
+                shared_dev,
+                n_shared_dev,
+                reg_dev,
+                pack0_dev,
             )
-            # admit-time host bookkeeping (one tiny sync, same lifecycle spot
-            # as the first-token readback): learn the physical pages so the
-            # host can mirror holds, register chunks, and route future
-            # prefix matches
-            # fastpath: allow[FP001] admit-cadence readback of the slot's physical pages
-            row = [int(p) for p in np.asarray(self.state.block_tables[slot])[:n_need]]
-            self._slot_pages[slot] = row
-            for p in row:
-                self._href[p] += 1
-            if self.prefix is not None:
-                for j in range(pps):
-                    if reg_mask[j]:
-                        self.prefix.insert(hashes[j], row[j])
-                        self._href[row[j]] += 1
+            # admit-time host bookkeeping: the host must learn the physical
+            # pages to mirror holds, register chunks, and route future prefix
+            # matches.  Reading them back HERE would serialize every admit
+            # against the whole device queue (admit -> sync -> admit -> ...),
+            # so the plain case — no prefix index, no shared pages — defers
+            # the id readback to the next natural host sync (``step_block``'s
+            # token readback / fork / swap / audit), tracking the page COUNT
+            # synchronously so ``free_pages`` stays exact.  Prefix-cache and
+            # shared-page admits keep the synchronous readback: registration
+            # must land in the index before the next request is matched.
+            if self.prefix is None and n_shared == 0:
+                self._pending_admits.append((slot, n_need))
+                self._pending_fresh += n_need
+            else:
+                # fastpath: allow[FP001] admit-cadence readback of the slot's physical pages
+                row = [int(p) for p in np.asarray(self.state.block_tables[slot])[:n_need]]
+                self._slot_pages[slot] = row
+                for p in row:
+                    self._href[p] += 1
+                if self.prefix is not None:
+                    for j in range(pps):
+                        if reg_mask[j]:
+                            self.prefix.insert(hashes[j], row[j])
+                            self._href[row[j]] += 1
             self._growth[slot] = need_total - n_need
             self._slot_new[slot] = n_need - n_shared
             self.admit_new_pages[req.rid] = need
@@ -1232,6 +1348,8 @@ class DecodeEngine:
             raise ValueError("fork() requires the paged KV cache")
         if src_rid not in self.requests:
             raise KeyError(f"request {src_rid} is not decoding here")
+        self._resolve_pending()
+        self._fork_used = True  # decode blocks need COW from here on
         src_slot = self.slots.request_ids.index(src_rid)
         src_req = self.requests[src_rid]
         ps = self.page_size
@@ -1296,6 +1414,7 @@ class DecodeEngine:
             raise ValueError("swap_out requires the paged KV cache")
         if rid not in self.requests:
             raise KeyError(f"request {rid} is not decoding here")
+        self._resolve_pending()
         if self.faults is not None and self.faults.should_fail("swap_out", rid):
             raise TransientFault(
                 f"injected swap_out failure for request {rid} (nothing mutated)"
@@ -1364,6 +1483,7 @@ class DecodeEngine:
         deadlock the blocked request against its own victims' pins."""
         if not self.paged or rid not in self.requests:
             return 0
+        self._resolve_pending()
         slot = self.slots.request_ids.index(rid)
         return self._growth[slot] + sum(
             1 for p in self._slot_pages[slot] if self._href[p] == 1
@@ -1400,11 +1520,47 @@ class DecodeEngine:
         return slot
 
     def _auto_block(self) -> int:
+        """Fused steps for the next block: enough to cover the largest
+        remaining budget, QUANTIZED up to a power of two (capped at
+        ``decode_block``).  The quantization keeps the jit-key set at
+        log2(decode_block) values instead of one per exact remaining count —
+        a drain tail would otherwise mint fresh whole-model compiles right
+        where benchmarks measure.  Running a few extra steps past the
+        largest remainder is free of observable effect: the stream is
+        invariant to block partitioning (the PRNG chain advances per
+        accepted token) and the host loop discards overshoot tokens."""
         rem = [
             req.max_new_tokens - len(req.tokens)
             for req in self.requests.values()
         ]
-        return max(1, min(self.decode_block, max(rem, default=1)))
+        k = max(1, min(self.decode_block, max(rem, default=1)))
+        return min(self.decode_block, 1 << (k - 1).bit_length())
+
+    def _n_pg_eff(self, k: int) -> Optional[int]:
+        """Effective block-table width for a k-step block: the power-of-two
+        page count covering the longest ACTIVE sequence after k more writes.
+
+        The host slot lengths mirror the device write positions at block
+        start (admit sets both to true_len; each accepted token advances
+        both), so ``max(lengths) + k`` bounds every position the block can
+        write or attend.  Rounding up to a power of two keeps the jit-cache
+        key set logarithmic in ``pages_per_slot`` — never a per-exact-length
+        key.  Inactive slots may hold longer (released) tables, but their
+        writes are trash-steered and their outputs host-masked."""
+        if not self.paged:
+            return None
+        lens = [
+            self.slots.lengths[s]
+            for s, rid in enumerate(self.slots.request_ids)
+            if rid is not None
+        ]
+        n_eff = max(1, -(-(max(lens, default=0) + k) // self.page_size))
+        if n_eff < self.pages_per_slot:
+            n_eff = 1 << (n_eff - 1).bit_length()
+        # floor of 4 pages: a narrower window saves nothing measurable, and
+        # the floor halves the (k, n_eff) jit-key product for short traffic
+        n_eff = max(n_eff, 4)
+        return min(n_eff, self.pages_per_slot)
 
     def step_block(self, k: Optional[int] = None) -> List[Tuple[int, int]]:
         """Run ``k`` fused decode steps (default: auto-sized <= decode_block).
@@ -1419,8 +1575,14 @@ class DecodeEngine:
         if self.paged and k > self.decode_block:
             # the page reservation only covers decode_block-1 overshoot steps
             raise ValueError(f"paged step_block k={k} > decode_block={self.decode_block}")
-        self.state, toks = self._block_fn(k)(self.params, self.state)
+        self.state, toks = self._block_fn(k, self._n_pg_eff(k))(self.params, self.state)
         block = np.asarray(toks)  # fastpath: allow[FP001] the one sanctioned host sync per k-step block
+        if self.paged:
+            # the device just synced on the token block, so resolving the
+            # admit-time page-id readbacks deferred by ``admit`` is ~free
+            # here — and it must happen before the release loop below reads
+            # ``_slot_pages`` for finished slots
+            self._resolve_pending()
         out: List[Tuple[int, int]] = []
         freed: List[int] = []
         for slot, rid in enumerate(self.slots.request_ids):
@@ -1481,6 +1643,7 @@ class DecodeEngine:
             return False
         slot = self.slots.request_ids.index(rid)
         if self.paged:
+            self._resolve_pending()
             self._growth[slot] = 0
             self._slot_new[slot] = 0
             for p in self._slot_pages[slot]:
@@ -1544,6 +1707,9 @@ class DecodeEngine:
             self._growth = [0] * self.max_slots
             self._slot_new = [0] * self.max_slots
             self._slot_pages = [[] for _ in range(self.max_slots)]
+            self._pending_admits = []
+            self._pending_fresh = 0
+            self._fork_used = False  # clones died with the pool
             self._chunk_holds = {}
             self._pins = {}
             if self.prefix is not None:
@@ -1566,6 +1732,7 @@ class DecodeEngine:
         refcounted allocator to audit and report trivially clean."""
         if not self.paged:
             return kvcache.AuditReport(ok=True, n_pages=0, discrepancies=[])
+        self._resolve_pending()
         index_pages = self.prefix.pages() if self.prefix is not None else ()
         chunk_holds = [
             p for p, n in self._chunk_holds.items() for _ in range(n)
@@ -1672,6 +1839,19 @@ class DisaggregatedServer:
         self.all_requests: Dict[int, GenRequest] = {}
         self.peak_active = 0  # max concurrent decode requests seen (for benchmarks)
         self._rr = 0
+        # unified batching (opt-in): batch chunk work of DIFFERENT requests
+        # into one prefill dispatch and coalesce it with the decode step
+        # under the round's token budget; off = the serial one-chunk-per-
+        # round schedule every committed baseline was recorded against
+        self.unified_batching = bool(config.unified_batching) if config else False
+        self._token_budget: Optional[int] = config.token_budget if config else None
+        # rounds a deferred chunk head has waited (aging bound: a tight
+        # budget may starve chunk work while decode stays saturated)
+        self._defer_rounds = 0
+        self.unified_stats = {
+            "rounds": 0, "chunk_rows": 0, "deferred_rounds": 0,
+            "budget_tokens": 0, "used_tokens": 0,
+        }
         # in-progress chunked prefills (rid -> cursor); the requests
         # themselves stay in the scheduler queue between chunks
         self.chunks: Dict[int, ChunkPrefillState] = {}
@@ -1711,6 +1891,13 @@ class DisaggregatedServer:
                 f"from_config takes an EngineConfig, got {type(config).__name__}"
             )
         rc = config.replace(seed=config.seed + replica) if replica else config
+        if rc.chunk_tokens == "auto":
+            # resolve the measured-TBT chunk quantum ONCE, before any engine
+            # is built — every replica's engines then share the concrete
+            # config (the tuner itself builds throwaway probe engines)
+            from .autotune import tune_chunk_tokens
+
+            rc = rc.replace(chunk_tokens=tune_chunk_tokens(params, cfg, rc))
         prefills = [
             PrefillEngine(params, cfg, config=rc) for _ in range(n_prefills)
         ]
@@ -2177,6 +2364,176 @@ class DisaggregatedServer:
                 ]
             sched.requeue_partial(head)
 
+    # -- unified batching (decode-maximal rounds) ---------------------------
+
+    #: rounds a deferred chunk head may wait before it runs regardless of
+    #: the budget (starvation bound for tight budgets under saturated decode)
+    UNIFIED_DEFER_LIMIT = 4
+
+    def round_token_budget(self, quantum: int) -> int:
+        """This round's token budget: decode tokens + rider chunk tokens
+        must fit under it.  The configured ``token_budget`` if set; the
+        default — full decode pools plus a full prefill batch of chunks —
+        always fits the head's chunk (never defers) AND leaves rider
+        headroom, so idle decode capacity converts into chunk progress
+        (pure throughput mode).  A TIGHTER budget is the TBT lever:
+        saturated-decode rounds shed riders, then become decode-only, and
+        chunk work waits for drained slots."""
+        if self._token_budget is not None:
+            return self._token_budget
+        return (sum(d.max_slots * d.decode_block for d in self.decodes)
+                + self.max_prefill_batch * quantum)
+
+    def chunk_rider_ok(self, head: GenRequest, r: GenRequest) -> bool:
+        """Mechanism filter for unified-round riders: ``r`` may share the
+        head's batched chunk dispatch iff its chunked prefill is already
+        ROUTED (its first chunk ran as a head round — routing is fixed at
+        start, so only started requests are known to live on the head's
+        pool), on the same engine at the same quantum, and its next chunk is
+        non-final.  The scheduler's ``pick_riders`` ranks among these."""
+        if r.rid == head.rid:
+            return False
+        hst = self.chunks.get(head.rid)
+        st = self.chunks.get(r.rid)
+        if hst is None or st is None:
+            return False
+        if st.engine is not hst.engine or st.chunk_tokens != hst.chunk_tokens:
+            return False
+        return len(r.prompt) - st.pos > st.chunk_tokens
+
+    def _group_chunk_prefix_arg(self, sts: List[ChunkPrefillState], B: int):
+        """Per-row prefix pack for a batched chunk round: row i gets its own
+        streamed pages (one pow2-bucketed gather over the shared pool) and —
+        hybrid models — its own carried conv/SSD state, zero for rows still
+        at position 0 (a fresh mamba scan starts from the zero state, so
+        zero-carry IS the pos-0 semantics)."""
+        d = sts[0].engine
+        if all(st.pos == 0 for st in sts):
+            return None
+        n_pg = [st.pos // d.page_size for st in sts]
+        n_pg_b = 1 << max(max(n_pg) - 1, 0).bit_length()  # pow2 >= max rows
+        n_pg_b = min(max(n_pg_b, 1), d.pages_per_slot)
+        tables = np.full((B, n_pg_b), d.n_pages, np.int32)
+        for i, st in enumerate(sts):
+            if n_pg[i]:
+                tables[i, : n_pg[i]] = st.all_pages
+        pack = d.gather_prefix(tables)
+        if d._is_hybrid:
+            pack = list(pack)
+            for li, (mixer, _) in enumerate(d.cfg.block_pattern):
+                if mixer != "mamba":
+                    continue
+                rows = [
+                    st.carry[li] if st.carry is not None else None for st in sts
+                ]
+                ref = next((c for c in rows if c is not None), None)
+                if ref is None:
+                    continue  # every row at pos 0: the gathered pack row is unused
+                rows = [
+                    c if c is not None else jax.tree.map(jnp.zeros_like, ref)
+                    for c in rows
+                ]
+
+                def cat(*ls):  # leaves [?, 1, ...] -> [?, B, ...] (axis 1 = batch)
+                    out = jnp.concatenate(ls, axis=1)
+                    if out.shape[1] < B:
+                        out = jnp.pad(
+                            out,
+                            [(0, 0), (0, B - out.shape[1])]
+                            + [(0, 0)] * (out.ndim - 2),
+                        )
+                    return out
+
+                pack[li] = jax.tree.map(cat, *rows)
+        return pack
+
+    def _unified_chunk_round(self, eng: PrefillEngine, head: GenRequest) -> None:
+        """One DECODE-MAXIMAL chunk round: batch page-aligned chunks of
+        several chunked requests into one prefill dispatch, sized so the
+        round's chunk work plus the decode pools' planned tokens fit the
+        token budget.  Three outcomes:
+
+        * the budget's chunk allowance covers >= 1 chunk: the head plus up
+          to ``allowance // quantum - 1`` riders (scheduler-ranked, capped
+          by the pool's free pages) run as ONE batched prefill, every row
+          appended to the shared pool and requeued;
+        * the allowance is short (decode pools saturated under a tight
+          budget): the round is DECODE-ONLY — chunk work defers, decoding
+          requests keep their TBT — bounded by ``UNIFIED_DEFER_LIMIT``
+          rounds before the head runs anyway (starvation bound);
+        * the head's next chunk is FINAL: delegate to the serial round —
+          the first-token sample must replay the serial pad/key schedule
+          bit for bit, so finals never batch with riders.
+        """
+        sched = self.scheduler
+        st = self.chunks.get(head.rid) or self._start_chunk(eng, head)
+        d = st.engine
+        if len(head.prompt) - st.pos <= st.chunk_tokens:
+            self._prefill_chunk_round(eng, head)
+            return
+        q = st.chunk_tokens
+        budget = self.round_token_budget(q)
+        decode_tokens = sum(
+            dd.slots.n_active * dd._auto_block()
+            for dd in self.decodes if dd.slots.n_active
+        )
+        allowance = budget - decode_tokens
+        self.unified_stats["rounds"] += 1
+        self.unified_stats["budget_tokens"] += budget
+        self.unified_stats["used_tokens"] += decode_tokens
+        if allowance < q and self._defer_rounds < self.UNIFIED_DEFER_LIMIT:
+            self._defer_rounds += 1
+            self.unified_stats["deferred_rounds"] += 1
+            return  # decode-only round; the head keeps its queue position
+        self._defer_rounds = 0
+        pg_per_row = q // d.page_size
+        cap_rows = (d.free_pages + d._evictable_pages()) // max(pg_per_row, 1)
+        if cap_rows < 1:
+            # the pool cannot take even the head's chunk; hold the head and
+            # let decode drain pages into it (the serial path's contract)
+            return
+        max_rows = min(
+            max(allowance // q, 1),  # aging override still runs the head
+            cap_rows,
+            self.max_prefill_batch,
+        )
+        riders = (
+            sched.pick_riders(self, head, max_rows - 1) if max_rows > 1 else []
+        )
+        rows = [head] + riders
+        taken = {r.rid for r in rows}
+        sched.queue = [r for r in sched.queue if r.rid not in taken]
+        sts = [self.chunks[r.rid] for r in rows]
+        B = len(rows)
+        B_pad = 1 << max(B - 1, 0).bit_length()  # pow2 rows: bounded jit keys
+        kvb = eng.prefill_chunk_group(
+            [(r, self.chunks[r.rid].pos) for r in rows], q, self._chunk_key,
+            prefix=self._group_chunk_prefix_arg(sts, B_pad), pad_to=B_pad,
+        )
+        kvb = self.transfer(kvb)  # per-round KV handoff (page stream)
+        self.unified_stats["chunk_rows"] += B
+        self.unified_stats["used_tokens"] += B * q
+        for i, r in enumerate(rows):
+            rst = self.chunks[r.rid]
+            pages = d.append_chunk(kvb, q, batch_index=i, rid=r.rid)
+            if pages is None:  # capacity raced away or an injected fault
+                if self.faults is not None and self.faults.exhausted(
+                    "chunk_append", r.rid
+                ):
+                    self.cancel(r.rid, status=STATUS_FAILED)
+                    continue
+                sched.queue.insert(0, r)  # retry next round, head position
+                continue
+            rst.pages.extend(pages)
+            rst.pos += q
+            if d._is_hybrid:
+                rst.carry = [
+                    jax.tree.map(lambda a: a[:, i : i + 1], kvb[li])
+                    if mixer == "mamba" else None
+                    for li, (mixer, _) in enumerate(d.cfg.block_pattern)
+                ]
+            sched.requeue_partial(r)
+
     def _finish_chunked(self, rid: int, *, admitted: bool) -> None:
         """Retire a chunked prefill's host state.  ``admitted=True`` (the
         final admit mapped the streamed pages into a block table): register
@@ -2311,7 +2668,10 @@ class DisaggregatedServer:
             self._rr += 1
             ceng = self._chunk_engine(eng, sched.queue[0])
             if ceng is not None:
-                self._prefill_chunk_round(ceng, sched.queue[0])
+                if self.unified_batching:
+                    self._unified_chunk_round(ceng, sched.queue[0])
+                else:
+                    self._prefill_chunk_round(ceng, sched.queue[0])
             else:
                 if eng.bucketed:
                     group, matches = sched.take_group(self, eng.buckets)

@@ -54,10 +54,24 @@ ref), and the host-side prefix index (``prefix_cache.PrefixIndex``) keeps a
 +1 cache hold on registered prompt pages so they survive their original
 request.  Decode writes gain **copy-on-write** (``cow_redirect``): before the
 fused block writes into a page with ``refs > 1``, the writer is redirected to
-a fresh page — the block's gather still reads the old mapping (so the shared
-prefix bytes are carried into the copy by the whole-page writeback) and the
-shared page's count is decremented.  All of it runs inside the donated jitted
-block: no per-token host syncs.
+a fresh page, the shared page's BYTES are copied onto it (one page-granular
+gather + scatter per block boundary), and the shared page's count is
+decremented — the view-free block then reads the copy straight off the pools
+through the new tables.  All of it runs inside the donated jitted block: no
+per-token host syncs.  Engines that can prove no page is ever shared (no
+prefix index, no forks) compile the block WITHOUT the COW machinery — an
+in-place tail write is exactly what an unshared page wants.
+
+View-free decode (the only decode path)
+---------------------------------------
+The fused decode block never materializes a slab-layout view of the pools:
+attention reads K/V per step through the block tables — the Pallas kernel
+(``kernels/decode_attention.py``) streams pages via scalar-prefetched
+tables on TPU, and the XLA fallback gathers rows per step on other
+backends — and each step's fresh K/V is scattered to its page directly.
+``paged_gather_view`` / ``paged_writeback`` (the retired gather-view
+carry) are kept only as the bit-identity reference the view-free tests
+compare against.
 
 Refcounts also make **page-level preemption/swap** safe
 (``paged_swap_out`` / ``paged_swap_in``, built on the tested
@@ -273,21 +287,27 @@ def alloc_decode_pages(page_refs, need):
     return refs, pages.astype(jnp.int32)
 
 
-def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: int):
+def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: int,
+                 caches: Optional[Cache] = None, cfg: Optional[ModelConfig] = None):
     """Copy-on-write for the fused decode block, applied before the k-step scan.
 
     Every logical page the block will write — pages overlapping positions
     [pos0, pos0 + k) of a writing slot — whose physical page is shared
     (``refs > 1``) gets a fresh page: the writer's block-table entry is
-    redirected and the shared page's refcount is decremented.  The caller
-    gathers the block's view through the OLD tables (so the shared page's
-    existing prefix rides into the view) and writes back through the returned
-    tables (so the whole-page writeback lands the prefix + fresh tokens on
-    the copy, leaving the shared page untouched for its other holders).
+    redirected and the shared page's refcount is decremented.
 
-    Returns (new_refs, new_block_tables).  Pure arithmetic inside the donated
-    jitted block — no host syncs; the fork-time page reservation guarantees
-    free pages exist for every possible redirect.
+    With ``caches``/``cfg`` the shared page's BYTES are copied onto the fresh
+    page (one page-granular gather + scatter per boundary, steered to the
+    trash page for non-redirected slots) and (refs, tables, caches) is
+    returned.  The view-free decode block needs this: it reads K/V straight
+    off the pools through the NEW tables, so the copy must already hold the
+    shared prefix when the scan starts.  Without ``caches`` only
+    (refs, tables) is returned — the legacy gather-view path carries the
+    prefix bytes through its whole-page writeback instead.
+
+    Pure arithmetic inside the donated jitted block — no host syncs; the
+    fork-time page reservation guarantees free pages exist for every possible
+    redirect.
     """
     n_pages = page_refs.shape[0]
     S, n_pg = block_tables.shape
@@ -303,6 +323,20 @@ def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: i
         refs, fresh = alloc_decode_pages(refs, shared)
         refs = refs.at[jnp.where(shared, physc, n_pages)].add(-1, mode="drop")
         bt = bt.at[rows, jnp.where(shared, lpc, n_pg)].set(fresh, mode="drop")
+        if caches is not None:
+            # fresh already carries the trash index for non-redirected slots,
+            # so the copy is one unconditional page-granular scatter per leaf
+            new_caches = []
+            for i, (mixer, _) in enumerate(cfg.block_pattern):
+                if mixer == "attn":
+                    def cp(pool):
+                        return pool.at[:, fresh].set(pool[:, physc])
+                    new_caches.append(jax.tree.map(cp, caches[i]))
+                else:
+                    new_caches.append(caches[i])
+            caches = new_caches
+    if caches is not None:
+        return refs, bt, caches
     return refs, bt
 
 

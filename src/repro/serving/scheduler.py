@@ -194,6 +194,25 @@ class Scheduler:
         bit-identical to the pre-refactor anchor."""
         self.queue.append(req)
 
+    def pick_riders(
+        self, server: "DisaggregatedServer", head: "GenRequest",
+        max_riders: int,
+    ) -> List["GenRequest"]:
+        """Unified batching: which OTHER queued chunked requests ride the
+        head's chunk round (one batched prefill dispatch).  Queue order —
+        which the policy already owns via ``order`` — so the KV-aware
+        policy's footprint ranking carries over to rider choice for free.
+        ``server.chunk_rider_ok`` enforces mechanism (same routed pool, same
+        quantum, non-final); this hook only ranks.  Never called with
+        ``unified_batching`` off."""
+        out: List["GenRequest"] = []
+        for r in self.queue[1:]:
+            if len(out) >= max_riders:
+                break
+            if server.chunk_rider_ok(head, r):
+                out.append(r)
+        return out
+
     def _may_resume(self, server: "DisaggregatedServer", sw: SwappedRequest) -> bool:
         """Policy veto for re-admitting a swapped request this round."""
         return True

@@ -24,7 +24,7 @@ def test_serving_bench_smoke(tmp_path):
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_bench", "--smoke",
          "--json", str(json_path)],
-        cwd=REPO, env=env, capture_output=True, text=True, timeout=1200,
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=2400,
     )
     assert out.returncode == 0, f"smoke failed:\n{out.stdout}\n{out.stderr}"
     assert "SMOKE OK" in out.stdout
@@ -41,7 +41,10 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
              high_wait=1, preempt_mism=0, with_sched=True, with_rob=True,
              rob_seed=0, rob_mism=0, rob_audit=0, rob_recovery=4, rob_shed=2,
              with_rt=True, rt_holder=6, rt_recompute=0, rt_imbalance=1.0,
-             rt_mism=0, rt_load=(4, 4)):
+             rt_mism=0, rt_load=(4, 4),
+             with_hbm=True, hbm_speedup=1.2,
+             with_uni=True, uni_mism=0, uni_p99=0.002, uni_serial_p99=0.006,
+             uni_stalls=2, uni_rows=2, uni_util=2.0 / 3.0):
     out = {
         "tokens_per_s": {"slab": 1000.0, "paged": 1000.0 * tps_ratio,
                          "ratio": tps_ratio},
@@ -89,6 +92,24 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
                        "load_imbalance_bound": 1.25},
             "unskewed": {"requests": 6, "stream_mismatches": rt_mism,
                          "per_replica_requests": [3, 3]},
+        }
+    if with_hbm:
+        out["decode_tps_fixed_hbm"] = {
+            "slab": 4000.0, "paged": 4000.0 * hbm_speedup,
+            "speedup": hbm_speedup, "ratios": [hbm_speedup * 0.9, hbm_speedup],
+        }
+    if with_uni:
+        out["unified_batching"] = {
+            "trace": {"slots": 4, "token_budget": 36},
+            "serial": {"tbt_p50_s": 0.004, "tbt_p99_s": uni_serial_p99,
+                       "rounds": 6},
+            "unified": {"tbt_p50_s": 0.0015, "tbt_p99_s": uni_p99,
+                        "rounds": 8, "stall_rounds": uni_stalls,
+                        "chunk_rows": uni_rows,
+                        "budget_utilization": uni_util},
+            "tbt_p99_ratio": uni_p99 / uni_serial_p99,
+            "tbt_p99_improved": uni_p99 < uni_serial_p99,
+            "stream_mismatches": uni_mism,
         }
     return out
 
@@ -242,3 +263,50 @@ def test_regression_compare_fails_on_kv_accounting_drift():
         n: ok for n, ok, _ in compare(_metrics(saving=0.2), _metrics(saving=0.2))
     }
     assert not checks["kv_new_bytes_saving_floor"]
+
+
+def test_regression_compare_fixed_hbm_floor():
+    # the 0.9 floor is HARD: a committed reference cannot lower it
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(hbm_speedup=0.7),
+                                      _metrics(hbm_speedup=0.7))
+    }
+    assert not checks["fixed_hbm_speedup_floor"]
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(hbm_speedup=0.95), _metrics())
+    }
+    assert checks["fixed_hbm_speedup_floor"]
+
+
+def test_regression_compare_skips_fixed_hbm_for_old_baselines():
+    checks = compare(_metrics(), _metrics(with_hbm=False))
+    assert all(ok for _, ok, _ in checks)
+    assert not any(n.startswith("fixed_hbm") for n, _, _ in checks)
+
+
+def test_regression_compare_unified_gates():
+    # unified streams must stay bit-identical to serial chunked
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(uni_mism=1), _metrics())
+    }
+    assert not checks["unified_stream_mismatches"]
+    # unified TBT p99 must beat the serial baseline strictly
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(uni_p99=0.007), _metrics())
+    }
+    assert not checks["unified_tbt_p99_improves"]
+    # the round/budget shape is deterministic: drift fails
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(uni_stalls=0), _metrics())
+    }
+    assert not checks["unified_schedule_committed"]
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(uni_util=0.5), _metrics())
+    }
+    assert not checks["unified_schedule_committed"]
+
+
+def test_regression_compare_skips_unified_for_old_baselines():
+    checks = compare(_metrics(), _metrics(with_uni=False))
+    assert all(ok for _, ok, _ in checks)
+    assert not any(n.startswith("unified_") for n, _, _ in checks)

@@ -21,6 +21,7 @@ from repro.analysis.trace_verify import (
     decode_body_violations,
     donation_violations,
     engine_donation_violations,
+    unified_donation_violations,
 )
 from repro.configs import ARCHS, reduced
 from repro.models import model as M
@@ -81,6 +82,28 @@ def test_every_kv_pool_leaf_is_aliased_in_step_block(paged_setup):
     assert problems == []
 
 
+def test_unified_append_chunk_aliases_every_state_leaf(paged_setup):
+    """The unified round's donated transition — ``append_chunk`` compiled
+    against a B>1 ``prefill_chunk_group`` pack — must alias the full decode
+    state; a silent copy here repeats once per rider row."""
+    pre, dec, _pack = paged_setup
+    assert unified_donation_violations(pre, dec) == []
+
+
+def test_unified_verifier_catches_disabled_donation(paged_setup):
+    """Negative control for the unified check: donate=False must flag every
+    state leaf of the batched append transition."""
+    pre, _dec, _pack = paged_setup
+    eng = DecodeEngine(
+        pre.params, pre.cfg, max_slots=2, max_len=64,
+        sampling=SamplingParams(temperature=0.0),
+        decode_block=2, paged=True, page_size=16, donate=False,
+    )
+    problems = unified_donation_violations(pre, eng)
+    assert len(problems) == len(jax.tree_util.tree_leaves(eng.state))
+    assert all("degraded to a copy" in p for p in problems)
+
+
 def test_verifier_catches_disabled_donation():
     """Negative control: with donate=False nothing is aliased — the verifier
     must flag every state leaf, one finding each."""
@@ -107,7 +130,13 @@ def test_prefill_compile_count_bounded(paged_setup):
 
 
 def test_decode_block_jit_cache_is_k_keyed(paged_setup):
+    """Paged block-fn keys are (k, page-bucket, cow): bounded by
+    decode_block * log2 page buckets * 2, never by exact sequence lengths."""
     _pre, dec, _pack = paged_setup
     for k in (1, dec.decode_block):
-        dec._block_fn(k)
-    assert set(dec._block_fns) <= set(range(dec.decode_block + 1))
+        dec._block_fn(k, dec._n_pg_eff(k))
+    assert all(k_ <= dec.decode_block for k_, _n, _cow in dec._block_fns)
+    import math
+
+    buckets = math.floor(math.log2(dec.pages_per_slot)) + 1
+    assert len(dec._block_fns) <= dec.decode_block * buckets * 2

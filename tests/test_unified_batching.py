@@ -1,0 +1,217 @@
+"""Unified batching: decode-maximal rounds that batch page-aligned chunks of
+DIFFERENT requests into one prefill dispatch and coalesce chunk work with the
+decode step under a per-round token budget.
+
+The acceptance invariant: ``unified_batching=True`` emits token streams
+BIT-IDENTICAL to the serial one-chunk-per-round schedule (the committed
+regression anchor) — riders change WHEN chunk work runs, never what it
+computes.  Plus the budget mechanics: riders join only under budget headroom,
+tight budgets defer chunk work to decode-only rounds (bounded by the aging
+limit), and the config layer rejects unsatisfiable budgets at construction.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving import DisaggregatedServer, EngineConfig, GenRequest
+from repro.serving.autotune import chunk_candidates, tune_chunk_tokens
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    """jamba: per-row conv/SSD carry must survive the batched chunk round."""
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _config(**kw):
+    base = dict(
+        max_slots=4, max_len=160, decode_block=4, paged=True, page_size=PAGE,
+        chunk_tokens=32, max_prefill_batch=4,
+    )
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mixed_requests(cfg, *, long_rids=(0, 3), n=8, long_len=96, max_new=6,
+                    seed=17):
+    """Long (chunked) prompts at ``long_rids`` interleaved with shorts."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        ln = long_len if i in long_rids else int(rng.integers(5, 20))
+        out.append(GenRequest(i, rng.integers(0, cfg.vocab_size, size=ln),
+                              max_new_tokens=max_new))
+    return out
+
+
+def _run(params, cfg, reqs, **cfg_kw):
+    srv = DisaggregatedServer.from_config(params, cfg, _config(**cfg_kw))
+    for r in reqs:
+        srv.submit(r)
+    out = srv.run()
+    return out, srv
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: unified streams == serial streams, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature", [0.0, 20.0])
+def test_unified_matches_serial(setup, temperature):
+    cfg, params = setup
+    from repro.serving import SamplingParams
+
+    kw = dict(sampling=SamplingParams(temperature=temperature))
+    off, _ = _run(params, cfg, _mixed_requests(cfg), **kw)
+    on, srv = _run(params, cfg, _mixed_requests(cfg), unified_batching=True, **kw)
+    assert on == off
+    st = srv.unified_stats
+    assert st["rounds"] > 0 and st["chunk_rows"] >= st["rounds"]
+    assert st["used_tokens"] <= st["budget_tokens"]
+
+
+@pytest.mark.slow
+def test_riders_batch_multiple_requests(setup):
+    """With several chunked prompts in flight the default budget fills idle
+    prefill rows with riders: more chunk rows complete than rounds run."""
+    cfg, params = setup
+    reqs = _mixed_requests(cfg, long_rids=(0, 2, 3), n=6)
+    off, _ = _run(params, cfg, reqs)
+    on, srv = _run(params, cfg, _mixed_requests(cfg, long_rids=(0, 2, 3), n=6),
+                   unified_batching=True)
+    assert on == off
+    assert srv.unified_stats["chunk_rows"] > srv.unified_stats["rounds"]
+
+
+@pytest.mark.slow
+def test_unified_hybrid_matches_serial(hybrid_setup):
+    """Hybrid: each rider row's mamba carry is sliced back out of the batched
+    chunk pack; a wrong slice would corrupt the NEXT chunk, not this one."""
+    cfg, params = hybrid_setup
+    reqs = _mixed_requests(cfg, long_rids=(0, 1), n=5, max_new=4)
+    off, _ = _run(params, cfg, reqs)
+    on, srv = _run(params, cfg,
+                   _mixed_requests(cfg, long_rids=(0, 1), n=5, max_new=4),
+                   unified_batching=True)
+    assert on == off
+    assert srv.unified_stats["chunk_rows"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Budget mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_default_budget_formula(setup):
+    cfg, params = setup
+    srv = DisaggregatedServer.from_config(params, cfg,
+                                          _config(unified_batching=True))
+    q = 32
+    want = (sum(d.max_slots * d.decode_block for d in srv.decodes)
+            + srv.max_prefill_batch * q)
+    assert srv.round_token_budget(q) == want
+    srv._token_budget = 100
+    assert srv.round_token_budget(q) == 100
+
+
+@pytest.mark.slow
+def test_tight_budget_defers_but_completes(setup):
+    """A floor budget (one decode block + one chunk) makes saturated rounds
+    decode-only; the aging bound still finishes the long prompt, and streams
+    stay bit-identical to serial (deferral shifts rounds, not math)."""
+    cfg, params = setup
+    # exactly max_slots shorts ahead of the long prompt: its chunk rounds
+    # run while every decode slot is busy, so the floor budget has no
+    # chunk allowance until the shorts drain
+    reqs = _mixed_requests(cfg, long_rids=(4,), n=5, max_new=10)
+    off, _ = _run(params, cfg, reqs)
+    on, srv = _run(params, cfg,
+                   _mixed_requests(cfg, long_rids=(4,), n=5, max_new=10),
+                   unified_batching=True, token_budget=4 + 32)
+    assert on == off
+    st = srv.unified_stats
+    assert st["deferred_rounds"] > 0
+    # the aging override bounds every deferral run
+    assert st["deferred_rounds"] <= st["rounds"]
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(chunk_tokens=None, unified_batching=True), "requires chunk_tokens"),
+    (dict(token_budget=64), "unified_batching"),
+    (dict(unified_batching=True, token_budget=8), "starve"),
+    (dict(chunk_tokens="auto"), "tbt_target_ms"),
+    (dict(chunk_tokens="auto", tbt_target_ms=-5.0), "positive"),
+    (dict(chunk_tokens=24), "multiple"),
+    (dict(chunk_tokens=32, paged=False), "paged"),
+])
+def test_config_rejects_unsatisfiable(kw, match):
+    base = dict(max_slots=4, max_len=160, decode_block=4, paged=True,
+                page_size=PAGE, chunk_tokens=32)
+    base.update(kw)
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# chunk_tokens="auto": the measured-TBT tuner
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_candidates_page_aligned():
+    assert chunk_candidates(16, 128, (64,)) == [16, 32, 64]
+    assert chunk_candidates(16, 32, ()) == [16, 32]
+    for q in chunk_candidates(8, 200, (128, 64)):
+        assert q % 8 == 0
+
+
+@pytest.mark.slow
+def test_tuner_respects_slo_bounds(setup):
+    """A generous SLO picks the largest candidate; an impossible SLO falls
+    back to one page.  Both are page-aligned by construction."""
+    cfg, params = setup
+    base = _config(max_len=64, chunk_tokens="auto", tbt_target_ms=1.0)
+    report = {}
+    loose = tune_chunk_tokens(params, cfg,
+                              base.replace(tbt_target_ms=60_000.0),
+                              report=report)
+    assert loose == max(report["t_chunk_s"])  # largest candidate fits
+    assert loose % PAGE == 0
+    tight = tune_chunk_tokens(params, cfg,
+                              base.replace(tbt_target_ms=1e-6))
+    assert tight == PAGE
+
+
+@pytest.mark.slow
+def test_auto_resolves_through_from_config(setup):
+    """from_config resolves "auto" to a concrete page-aligned quantum before
+    building engines; the server then runs chunked prefill normally."""
+    cfg, params = setup
+    srv = DisaggregatedServer.from_config(
+        params, cfg,
+        _config(max_len=64, chunk_tokens="auto", tbt_target_ms=60_000.0),
+    )
+    q = srv.config.chunk_tokens
+    assert isinstance(q, int) and q % PAGE == 0
+    srv.submit(GenRequest(0, np.arange(40) % cfg.vocab_size, max_new_tokens=4))
+    out = srv.run()
+    assert len(out[0]) == 4

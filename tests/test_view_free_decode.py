@@ -1,0 +1,181 @@
+"""View-free paged decode: the block-table path runs decode straight off the
+page pools — no gathered slab view, no writeback.  Acceptance bar:
+
+* the gather-free XLA fallback (``gather_pages`` as a one-hot contraction)
+  is bit-identical to fancy-index gathering from the pool;
+* model-level paged decode matches the RETIRED gather-view path
+  (``kvcache.paged_gather_view``, kept as a test reference) bit for bit;
+* end-to-end paged streams match slab streams across attention families
+  {GQA, MLA, hybrid} x {greedy, sampled};
+* the paged Pallas kernel's online-softmax partials accumulate correctly
+  across many pages (interpret mode, runs on CPU in tier-1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_paged_pallas
+from repro.models import model as M
+from repro.models.attention import gather_pages
+from repro.serving import (
+    DecodeEngine,
+    DisaggregatedServer,
+    GenRequest,
+    PrefillEngine,
+    SamplingParams,
+)
+from repro.serving import kvcache
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg = reduced(ARCHS["minicpm3-4b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    cfg = reduced(ARCHS["jamba-1.5-large-398b"])
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=5, lo=5, hi=40):
+    rng = np.random.default_rng(seed)
+    return [
+        GenRequest(i, rng.integers(0, cfg.vocab_size, size=int(rng.integers(lo, hi))),
+                   max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _server(params, cfg, *, paged, temperature=0.0, max_slots=3, max_len=128):
+    sp = SamplingParams(temperature=temperature)
+    return DisaggregatedServer(
+        [PrefillEngine(params, cfg, sp)],
+        [DecodeEngine(params, cfg, max_slots=max_slots, max_len=max_len,
+                      sampling=sp, decode_block=8, paged=paged,
+                      page_size=PAGE, seed=0)],
+        seed=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# gather_pages: the gather-free one-hot contraction IS the gather, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_pages_bitwise_equals_indexing(dtype):
+    rng = np.random.default_rng(0)
+    P, ps, KV, d, B, n_pg = 13, PAGE, 2, 16, 3, 5
+    pool = jnp.asarray(rng.normal(size=(P, ps, KV, d)), dtype)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, n_pg)), jnp.int32)
+    got = gather_pages(pool, bt)
+    want = pool[bt].reshape(B, n_pg * ps, KV, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_pages_trailing_rank_generic():
+    """MLA pools carry a different trailing rank ([P, ps, d]) — the one-hot
+    contraction must be rank-agnostic."""
+    rng = np.random.default_rng(1)
+    P, ps, d, B, n_pg = 7, PAGE, 24, 2, 4
+    pool = jnp.asarray(rng.normal(size=(P, ps, d)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, n_pg)), jnp.int32)
+    got = gather_pages(pool, bt)
+    want = pool[bt].reshape(B, n_pg * ps, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Model-level: view-free decode == retired gather-view reference, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fixture", ["setup", "mla_setup", "hybrid_setup"])
+def test_view_free_matches_retired_gather_view(fixture, request):
+    """decode_step(block_tables=...) straight off the pools produces the
+    exact logits of decoding against the materialized slab view the retired
+    ``paged_gather_view`` path used to build."""
+    cfg, params = request.getfixturevalue(fixture)
+    max_slots, max_len = 3, 64
+    n_pages = max_slots * max_len // PAGE
+    st = kvcache.init_paged_decode_state(
+        cfg, max_slots, max_len, PAGE, n_pages, jax.random.PRNGKey(1)
+    )
+    rng = np.random.default_rng(2)
+    lens = [37, 18]
+    for slot, n in enumerate(lens):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=n))[None]
+        _, single, _ = M.prefill(params, toks, cfg)
+        st = kvcache.paged_admit(st, single, jnp.int32(slot), jnp.int32(5),
+                                 jnp.int32(n), cfg, page_size=PAGE)
+    tok = jnp.array([3, 9, 0], jnp.int32)
+    pos = jnp.array(lens + [0], jnp.int32)
+    lg_free, _ = M.decode_step(params, tok, st.caches, pos, cfg,
+                               block_tables=st.block_tables)
+    view = kvcache.paged_gather_view(st.caches, st.block_tables, cfg)
+    lg_view, _ = M.decode_step(params, tok, view, pos, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(lg_free[:2]), np.asarray(lg_view[:2])
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end streams: paged == slab across {GQA, MLA, hybrid} x {greedy, sampled}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("fixture", ["setup", "mla_setup", "hybrid_setup"])
+def test_view_free_streams_match_slab(fixture, temperature, request):
+    cfg, params = request.getfixturevalue(fixture)
+    outs = []
+    for paged in (False, True):
+        srv = _server(params, cfg, paged=paged, temperature=temperature)
+        for r in _requests(cfg, 5, seed=3, max_new=4):
+            srv.submit(r)
+        outs.append(srv.run())
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel partials: online softmax across many pages (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_pallas_partials_accumulate_across_pages():
+    """Lengths spanning many pages force the kernel through repeated
+    online-softmax rescale steps; the result must still match the reference
+    (and be invariant to padding the table with extra trash entries)."""
+    rng = np.random.default_rng(4)
+    B, H, KV, d, P, n_pg = 2, 4, 2, 16, 17, 12
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, PAGE, KV, d)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, n_pg)), jnp.int32)
+    lengths = jnp.array([n_pg * PAGE - 3, 5 * PAGE + 1], jnp.int32)
+    out = decode_attention_paged_pallas(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.decode_attention_paged_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # widening the table with extra (ignored) columns must not perturb it
+    bt_wide = jnp.concatenate([bt, jnp.zeros((B, 4), jnp.int32)], axis=1)
+    out_w = decode_attention_paged_pallas(q, kp, vp, bt_wide, lengths,
+                                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_w))
