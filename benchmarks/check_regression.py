@@ -74,6 +74,12 @@ SAVING_FLOOR = 0.30
 # floor, not a drift band: the paged path regressing below parity-ish means
 # the decode fast path re-grew per-block materialization or host syncs)
 HBM_SPEEDUP_FLOOR = 0.9
+# int8 KV pages must stack at least this many times the fp32 concurrency at
+# a fixed HBM budget (HARD floor: bf16 pools halve to int8, so ~2x pages —
+# falling under 1.8x means the scale leaves or the allocator re-grew
+# per-request overhead) and keep the per-step decode logit error bounded
+QUANT_CONCURRENCY_FLOOR = 1.8
+QUANT_LOGIT_ERR_GATE = 0.5
 
 
 def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple[str, bool, str]]:
@@ -356,6 +362,86 @@ def compare(fresh: dict, reference: dict, tolerance: float = 0.25) -> List[Tuple
             f"fresh {uni_shape(f_uni)} vs committed {uni_shape(r_uni)} — "
             f"round counts, stall rounds, and budget utilization are "
             f"deterministic scheduling math",
+        )
+
+    # quantized KV pages + batch dedup (when the reference carries the
+    # section): hard floors on fixed-HBM concurrency and the per-step logit
+    # error, unconditional stream/audit gates, and exact comparison of the
+    # deterministic page-capacity math and dedup token accounting
+    r_q = reference.get("quantized_kv")
+    if r_q is not None:
+        f_q = fresh.get("quantized_kv", {})
+        ratio = f_q.get("fixed_hbm_concurrency", {}).get("ratio", -1.0)
+        add(
+            "quant_concurrency_floor",
+            ratio >= QUANT_CONCURRENCY_FLOOR,
+            f"int8/fp32 concurrency {ratio:.2f} at a fixed HBM budget "
+            f"(hard floor {QUANT_CONCURRENCY_FLOOR}; committed "
+            f"{r_q.get('fixed_hbm_concurrency', {}).get('ratio', 0):.2f})",
+        )
+        err = f_q.get("max_logit_err", 1e9)
+        add(
+            "quant_logit_error_gate",
+            err <= QUANT_LOGIT_ERR_GATE,
+            f"per-step decode logit max-abs error {err:.3f} "
+            f"(hard gate {QUANT_LOGIT_ERR_GATE})",
+        )
+        qmm = f_q.get("stream_mismatches", -1)
+        add(
+            "quant_stream_mismatches",
+            qmm == 0,
+            f"{qmm} (acceptance: 0 — reduced-config greedy margins dwarf "
+            f"the bounded quant error)",
+        )
+        f_spt = f_q.get("decode_s_per_token", {}).get("ratio", 1e9)
+        r_spt = r_q.get("decode_s_per_token", {}).get("ratio", 1.0)
+        add(
+            "quant_decode_s_per_token_ratio",
+            f_spt <= r_spt * (1 + tolerance),
+            f"fresh int8/fp32 {f_spt:.3f} vs committed {r_spt:.3f} "
+            f"(ceiling {r_spt * (1 + tolerance):.3f})",
+        )
+        f_dd = f_q.get("dedup", {})
+        r_dd = r_q.get("dedup", {})
+        dmm = f_dd.get("stream_mismatches", -1)
+        add(
+            "dedup_stream_mismatches",
+            dmm == 0,
+            f"{dmm} (acceptance: 0 — dedup is compute-only, streams replay "
+            f"the dedup-free schedule bit for bit)",
+        )
+        daud = f_dd.get("audit_discrepancies", -1)
+        add(
+            "dedup_audit_clean",
+            daud == 0,
+            f"{daud} (acceptance: 0 — fanned-out prefix pages' refcounts "
+            f"conserved after drain)",
+        )
+        pt = f_dd.get("prefill_tokens", {})
+        balanced = (
+            f_dd.get("saved_tokens", -1) > 0
+            and pt.get("dedup", -1) + f_dd.get("saved_tokens", 0)
+            == pt.get("baseline")
+        )
+        add(
+            "dedup_token_accounting",
+            balanced,
+            f"dispatched {pt.get('dedup')} + saved {f_dd.get('saved_tokens')} "
+            f"vs baseline {pt.get('baseline')} (must balance, savings > 0)",
+        )
+
+        def q_shape(d: dict) -> tuple:
+            pg, dd = d.get("pages_at_budget", {}), d.get("dedup", {})
+            return (pg.get("fp32"), pg.get("int8"), d.get("hbm_budget_bytes"),
+                    dd.get("groups"), dd.get("saved_tokens"),
+                    tuple(sorted(dd.get("prefill_tokens", {}).items())))
+
+        add(
+            "quant_capacity_committed",
+            q_shape(f_q) == q_shape(r_q),
+            f"fresh {q_shape(f_q)} vs committed {q_shape(r_q)} — page "
+            f"capacity and dedup token accounting are deterministic "
+            f"reservation math; drift means BENCH_serving.json is stale",
         )
     return checks
 

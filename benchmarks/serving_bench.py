@@ -57,7 +57,7 @@ from repro.serving import (
     Router,
     make_scheduler,
 )
-from repro.serving.kvcache import kv_cache_bytes
+from repro.serving.kvcache import kv_cache_bytes, paged_kv_cache_bytes
 
 from .common import FAST, Bench
 
@@ -105,6 +105,14 @@ UNI_MAX_NEW = 16     # shorts keep decoding across the chunk window
 UNI_DECODE_BLOCK = 4
 UNI_BUDGET = UNI_DECODE_BLOCK + UNI_CHUNK  # floor: chunks defer while saturated
 HBM_PAIRS = 2        # fixed-HBM speedup: best of N interleaved slab/paged pairs
+# quantized-KV section: its OWN constants (same rule as robustness/router) —
+# the page-capacity math, logit-error drive, and dedup schedule are
+# deterministic and check_regression compares them exactly
+QNT_POOL_PAGES = 18  # fixed-HBM budget: the fp32 pool this many pages buys
+QNT_SLOTS = 16       # slots plentiful: pool pages are the binding limit
+QNT_MAX_NEW = 24     # keeps requests in flight across scheduling rounds
+QNT_STEPS = 23       # logit drive: stays inside the one admitted 64-pos page
+QNT_DEDUP_N = 4      # same-batch requests sharing the 2-page system prompt
 
 
 def _requests(cfg, n, max_new=None, seed=0):
@@ -174,12 +182,13 @@ def _end_to_end(params, cfg, fast: bool, *, paged: bool = False):
     return n_tok / dt, dt, streams
 
 
-def _decode_walltime(params, cfg, fast: bool, *, paged: bool = False):
+def _decode_walltime(params, cfg, fast: bool, *, paged: bool = False,
+                     kv_dtype: str = "fp32"):
     """Steady-state decode walltime per token, slots full the whole time."""
     eng = DecodeEngine(
         params, cfg, max_slots=MAX_SLOTS, max_len=MAX_LEN,
         decode_block=DECODE_BLOCK if fast else 1, donate=fast,
-        paged=paged, page_size=PAGE_SIZE,
+        paged=paged, page_size=PAGE_SIZE, kv_dtype=kv_dtype,
     )
     pre = PrefillEngine(params, cfg, bucketed=True)
     key = jax.random.PRNGKey(0)
@@ -310,6 +319,159 @@ def _fixed_hbm_speedup(params, cfg, pairs=HBM_PAIRS):
     i = int(np.argmax(ratios))
     return {"slab": walls[i][0], "paged": walls[i][1],
             "speedup": ratios[i], "ratios": ratios}
+
+
+def _quant_pages_at_budget(cfg):
+    """How many int8 pages the fp32 pool's HBM budget buys.
+
+    The fp32 pool stores the model compute dtype; int8 stores 1-byte payloads
+    plus a tiny [R, n_pages+1] fp32 scale leaf per attention cache tensor, so
+    the same bytes hold ~itemsize× the pages.  Pure reservation math —
+    deterministic, compared exactly by check_regression."""
+    budget = paged_kv_cache_bytes(cfg, QNT_SLOTS, QNT_POOL_PAGES, PAGE_SIZE,
+                                  max_len=MAX_LEN)
+    n = QNT_POOL_PAGES
+    while paged_kv_cache_bytes(cfg, QNT_SLOTS, n + 1, PAGE_SIZE,
+                               max_len=MAX_LEN, kv_dtype="int8") <= budget:
+        n += 1
+    return n, budget
+
+
+def _quant_server(params, cfg, kv_dtype, n_pages=None):
+    pre = PrefillEngine(params, cfg, bucketed=True)
+    dec = DecodeEngine(params, cfg, max_slots=QNT_SLOTS, max_len=MAX_LEN,
+                       decode_block=DECODE_BLOCK, paged=True,
+                       page_size=PAGE_SIZE, n_pages=n_pages, kv_dtype=kv_dtype)
+    return DisaggregatedServer([pre], [dec], max_prefill_batch=QNT_SLOTS)
+
+
+def _quant_concurrency(params, cfg, kv_dtype, n_pages):
+    """Peak concurrent decode requests at the FIXED HBM budget: the fp32
+    engine gets QNT_POOL_PAGES, the int8 engine gets however many pages the
+    same bytes buy.  Pages, not slots, are the binding limit."""
+    srv = _quant_server(params, cfg, kv_dtype, n_pages)
+    rng = np.random.default_rng(9)
+    for i in range(QNT_SLOTS):
+        prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(16, 25)))
+        srv.submit(GenRequest(i, prompt, max_new_tokens=QNT_MAX_NEW))
+    srv.run()
+    assert all(d.audit().ok for d in srv.decodes)
+    return srv.peak_active
+
+
+def _quant_logit_error(params, cfg):
+    """Per-step decode logit max-abs error, int8 vs fp32, on one greedy
+    request driven straight through ``M.decode_step`` (the engine API never
+    exposes logits).  page_size=64 with a 40-token prompt keeps all QNT_STEPS
+    writes inside the already-admitted page."""
+    rng = np.random.default_rng(0)
+    req_prompt = np.asarray(rng.integers(1, cfg.vocab_size, 40), np.int32)
+    runs = {}
+    for kv_dtype in ("fp32", "int8"):
+        pre = PrefillEngine(params, cfg, bucketed=True)
+        eng = DecodeEngine(params, cfg, max_slots=2, max_len=128,
+                           decode_block=1, paged=True, page_size=64,
+                           kv_dtype=kv_dtype)
+        req = GenRequest(0, req_prompt, QNT_STEPS)
+        first, kv, tl = pre.prefill(req, jax.random.PRNGKey(1))
+        assert eng.admit(req, kv, first, tl) is not None
+        st = eng.state
+        caches, scales = st.caches, st.scales
+        tokens, pos, bt = st.tokens, st.positions, st.block_tables
+        logits, toks = [], []
+        for _ in range(QNT_STEPS):
+            if scales is not None:
+                lg, caches, scales = M.decode_step(
+                    params, tokens, caches, pos, cfg, block_tables=bt,
+                    scales=scales)
+            else:
+                lg, caches = M.decode_step(
+                    params, tokens, caches, pos, cfg, block_tables=bt)
+            tokens = jax.numpy.argmax(lg, -1).astype(tokens.dtype)
+            pos = pos + 1
+            logits.append(np.asarray(lg[0], np.float32))
+            toks.append(int(tokens[0]))
+        runs[kv_dtype] = (np.stack(logits), toks)
+    err = float(np.abs(runs["fp32"][0] - runs["int8"][0]).max())
+    return err, int(runs["fp32"][1] != runs["int8"][1])
+
+
+def _quant_dedup_metrics(params, cfg):
+    """Batch-level prefix dedup: QNT_DEDUP_N same-batch requests share the
+    2-page system prompt, so the dedup path prefills it once and fans the
+    pages out — fewer dispatched prefill tokens, streams bit-identical."""
+    ec = EngineConfig(paged=True, prefix_cache=True, max_slots=QNT_DEDUP_N,
+                      max_len=MAX_LEN, page_size=PAGE_SIZE,
+                      max_prefill_batch=QNT_DEDUP_N)
+    runs = {}
+    for dedup in (False, True):
+        srv = DisaggregatedServer.from_config(
+            params, cfg, ec.replace(batch_dedup=dedup))
+        reqs = _shared_requests(cfg, QNT_DEDUP_N, max_new=MAX_NEW, seed=11)
+        for r in reqs:
+            srv.submit(r)
+        streams = srv.run()
+        audit = int(sum(len(rep.discrepancies) for rep in srv.audit()))
+        runs[dedup] = (streams, dict(srv.unified_stats), audit)
+    base_streams, base_stats, base_audit = runs[False]
+    dd_streams, dd_stats, dd_audit = runs[True]
+    mism = int(sum(base_streams[r] != dd_streams[r] for r in base_streams))
+    return {
+        "requests": QNT_DEDUP_N,
+        "prefill_tokens": {"baseline": int(base_stats["prefill_tokens"]),
+                           "dedup": int(dd_stats["prefill_tokens"])},
+        "groups": int(dd_stats["dedup_groups"]),
+        "saved_tokens": int(dd_stats["dedup_saved_tokens"]),
+        "stream_mismatches": mism,
+        "audit_discrepancies": int(base_audit + dd_audit),
+    }
+
+
+def _quantized_kv_metrics(params, cfg):
+    """Int8 KV pages under the bounded-error contract: capacity/concurrency
+    at a fixed HBM budget, decode walltime overhead of the dequantizing
+    gather, the hard per-step logit-error gate, greedy stream equivalence at
+    reduced scale, and the batch-dedup prefill savings."""
+    int8_pages, budget = _quant_pages_at_budget(cfg)
+    capacity_ratio = int8_pages / QNT_POOL_PAGES
+    conc_f32 = _quant_concurrency(params, cfg, "fp32", QNT_POOL_PAGES)
+    conc_i8 = _quant_concurrency(params, cfg, "int8", int8_pages)
+    spt_f32, _ = _decode_walltime(params, cfg, fast=True, paged=True)
+    spt_i8, _ = _decode_walltime(params, cfg, fast=True, paged=True,
+                                 kv_dtype="int8")
+    max_err, drive_mism = _quant_logit_error(params, cfg)
+    # end-to-end greedy stream equivalence at identical topology: on the
+    # reduced config the top-1/top-2 margins dwarf the bounded quant error
+    f32_streams, _, _, _ = _shared_prefix_workload(
+        params, cfg, prefix=True, max_new=MAX_NEW, n=N_REQUESTS)
+    i8_streams = {}
+    i8_srv = DisaggregatedServer(
+        [PrefillEngine(params, cfg, bucketed=True)],
+        [DecodeEngine(params, cfg, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                      decode_block=DECODE_BLOCK, paged=True,
+                      page_size=PAGE_SIZE, prefix_cache=True,
+                      kv_dtype="int8")],
+        max_prefill_batch=MAX_SLOTS)
+    for w in range(2):
+        for r in _shared_requests(cfg, N_REQUESTS, base=w * 100,
+                                  max_new=MAX_NEW):
+            i8_srv.submit(r)
+        i8_streams.update(i8_srv.run())
+    mism = int(sum(f32_streams[r] != i8_streams[r] for r in f32_streams))
+    return {
+        "page_size": PAGE_SIZE,
+        "hbm_budget_bytes": int(budget),
+        "pages_at_budget": {"fp32": QNT_POOL_PAGES, "int8": int8_pages,
+                            "capacity_ratio": capacity_ratio},
+        "fixed_hbm_concurrency": {"fp32": int(conc_f32), "int8": int(conc_i8),
+                                  "ratio": conc_i8 / conc_f32},
+        "decode_s_per_token": {"fp32": spt_f32, "int8": spt_i8,
+                               "ratio": spt_i8 / spt_f32},
+        "max_logit_err": max_err,
+        "logit_drive_mismatches": int(drive_mism),
+        "stream_mismatches": mism,
+        "dedup": _quant_dedup_metrics(params, cfg),
+    }
 
 
 def _unified_trace(cfg, base=0):
@@ -889,6 +1051,7 @@ def _smoke_metrics(params, cfg, rob_seed=0):
         "router": _router_metrics(params, cfg),
         "decode_tps_fixed_hbm": _fixed_hbm_speedup(params, cfg),
         "unified_batching": _unified_metrics(params, cfg),
+        "quantized_kv": _quantized_kv_metrics(params, cfg),
     }
 
 
@@ -993,6 +1156,30 @@ def main(argv=None) -> None:
         b.row("smoke_unified_budget_utilization",
               ub["unified"]["budget_utilization"],
               f"of {ub['trace']['token_budget']} tokens/round")
+        qk = sm["quantized_kv"]
+        b.row("smoke_quant_concurrency_ratio",
+              qk["fixed_hbm_concurrency"]["ratio"],
+              f"int8 {qk['fixed_hbm_concurrency']['int8']} vs fp32 "
+              f"{qk['fixed_hbm_concurrency']['fp32']} requests at the same "
+              f"HBM (acceptance: >= 1.8)")
+        b.row("smoke_quant_capacity_ratio",
+              qk["pages_at_budget"]["capacity_ratio"],
+              f"{qk['pages_at_budget']['int8']} int8 pages in "
+              f"{qk['pages_at_budget']['fp32']} fp32 pages' bytes")
+        b.row("smoke_quant_max_logit_err", qk["max_logit_err"],
+              "acceptance: <= 0.5 (per-step decode logit max-abs error)")
+        b.row("smoke_quant_stream_mismatches", qk["stream_mismatches"],
+              "acceptance: 0 (reduced-config greedy margins dwarf the "
+              "bounded quant error)")
+        b.row("smoke_quant_decode_s_per_token_ratio",
+              qk["decode_s_per_token"]["ratio"],
+              "int8/fp32: the dequantizing gather's overhead")
+        b.row("smoke_dedup_saved_tokens", qk["dedup"]["saved_tokens"],
+              f"shared prefix prefilled once across "
+              f"{qk['dedup']['requests']} same-batch requests")
+        b.row("smoke_dedup_stream_mismatches",
+              qk["dedup"]["stream_mismatches"],
+              "acceptance: 0 (dedup is compute-only)")
         b.dump()
         if args.json:
             with open(args.json, "w") as f:
@@ -1037,6 +1224,22 @@ def main(argv=None) -> None:
         assert ub["tbt_p99_improved"], \
             f"unified TBT p99 {ub['unified']['tbt_p99_s']:.4f}s not better " \
             f"than serial {ub['serial']['tbt_p99_s']:.4f}s"
+        assert qk["fixed_hbm_concurrency"]["ratio"] >= 1.8, \
+            f"int8 fixed-HBM concurrency ratio " \
+            f"{qk['fixed_hbm_concurrency']['ratio']:.2f} < 1.8"
+        assert qk["max_logit_err"] <= 0.5, \
+            f"int8 per-step logit error {qk['max_logit_err']:.3f} > 0.5"
+        assert qk["stream_mismatches"] == 0, \
+            "int8 greedy streams diverged from fp32 on the reduced config"
+        assert qk["dedup"]["stream_mismatches"] == 0, \
+            "batch-dedup streams diverged from the dedup-free schedule"
+        assert qk["dedup"]["saved_tokens"] > 0, "batch dedup never fired"
+        assert qk["dedup"]["audit_discrepancies"] == 0, \
+            "KV audit found discrepancies after the dedup drain"
+        assert qk["dedup"]["prefill_tokens"]["dedup"] \
+            + qk["dedup"]["saved_tokens"] \
+            == qk["dedup"]["prefill_tokens"]["baseline"], \
+            "dedup prefill-token accounting does not balance"
         print("SMOKE OK")
         return
 
@@ -1214,6 +1417,34 @@ def main(argv=None) -> None:
     assert rt["skewed"]["load_imbalance"] <= rt["skewed"]["load_imbalance_bound"]
     assert rt["unskewed"]["stream_mismatches"] == 0
 
+    # -- quantized KV pages + batch dedup (smoke-scale: the section is pure
+    # reservation math, a deterministic logit drive, and deterministic
+    # schedules — the full-scale workload adds nothing but wall time) -------
+    qk = smoke_reference["quantized_kv"]
+    b.row("quant_pages_at_budget_int8", qk["pages_at_budget"]["int8"],
+          f"vs {qk['pages_at_budget']['fp32']} fp32 pages in the same HBM "
+          f"(capacity ratio {qk['pages_at_budget']['capacity_ratio']:.2f})")
+    b.row("quant_concurrency_ratio", qk["fixed_hbm_concurrency"]["ratio"],
+          f"int8 {qk['fixed_hbm_concurrency']['int8']} vs fp32 "
+          f"{qk['fixed_hbm_concurrency']['fp32']} (acceptance: >= 1.8)")
+    b.row("quant_max_logit_err", qk["max_logit_err"],
+          "acceptance: <= 0.5 per decode step (reduced granite-8b)")
+    b.row("quant_decode_s_per_token_ratio", qk["decode_s_per_token"]["ratio"],
+          "int8/fp32 decode walltime (dequantizing gather overhead)")
+    b.row("quant_stream_mismatches", qk["stream_mismatches"],
+          "acceptance: 0 (int8 == fp32 greedy at reduced scale)")
+    b.row("dedup_saved_prefill_tokens", qk["dedup"]["saved_tokens"],
+          f"of {qk['dedup']['prefill_tokens']['baseline']} baseline tokens "
+          f"({qk['dedup']['groups']} group(s))")
+    b.row("dedup_stream_mismatches", qk["dedup"]["stream_mismatches"],
+          "acceptance: 0 (dedup is compute-only)")
+    b.dump()
+    assert qk["fixed_hbm_concurrency"]["ratio"] >= 1.8
+    assert qk["max_logit_err"] <= 0.5
+    assert qk["stream_mismatches"] == 0
+    assert qk["dedup"]["stream_mismatches"] == 0
+    assert qk["dedup"]["saved_tokens"] > 0
+
     results = {
         "arch": cfg.name,
         "e2e_tokens_per_s": {"seed": seed_tps, "fast": fast_tps,
@@ -1260,6 +1491,7 @@ def main(argv=None) -> None:
         "chunked_prefill": ck,
         "robustness": rb,
         "router": rt,
+        "quantized_kv": qk,
         "smoke_reference": smoke_reference,
         "config": {"decode_block": DECODE_BLOCK, "max_slots": MAX_SLOTS,
                    "max_len": MAX_LEN, "max_new": MAX_NEW, "n_requests": N_REQUESTS},

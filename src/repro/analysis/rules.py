@@ -31,7 +31,7 @@ SYNC_METHODS = {"item", "block_until_ready"}
 BOUNDER_NAMES = {"_bucket", "_pad_len", "bucket"}
 JIT_CACHE_ATTR_SUFFIX = "fns"
 # FP004 -----------------------------------------------------------------
-HOLD_COUNTERS = {"_href", "_chunk_holds"}  # incremented hold structures
+HOLD_COUNTERS = {"_href", "_chunk_holds", "_scale_refs"}  # incremented hold structures
 PIN_ACQUIRES = {"pin", "pin_prefix", "swap_pin"}
 PIN_RELEASES = {"unpin", "release_prefix_pin", "swap_unpin"}
 RELEASE_FUNNEL = "_forget"

@@ -365,3 +365,162 @@ def decode_attention_paged_pallas(
         interpret=interpret,
     )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qt, kt, vt)
     return out.reshape(B, H, d)
+
+
+# ---------------------------------------------------------------------------
+# Quantized paged decode attention: int8 pages + scalar-prefetched scales
+# ---------------------------------------------------------------------------
+
+
+def _paged_dec_quant_partials_kernel(
+    lengths_ref,  # [B] int32 (scalar prefetch, SMEM)
+    bt_ref,  # [B, n_pg] int32 (scalar prefetch, SMEM)
+    ks_ref,  # [P+1] f32 per-page K scales (scalar prefetch, SMEM)
+    vs_ref,  # [P+1] f32 per-page V scales (scalar prefetch, SMEM)
+    q_ref,  # [1, 1, G, d]
+    k_ref,  # [1, 1, ps, d] int8 — the page bt_ref[b, si], DMA'd via the index map
+    v_ref,  # [1, 1, ps, d] int8
+    acc_ref,  # [1, 1, G, d] f32 — UNNORMALIZED numerator
+    m_ref,  # [1, 1, G, 1] f32
+    l_ref,  # [1, 1, G, 1] f32
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    page_size: int,
+    ns: int,
+):
+    """Int8 twin of ``_paged_dec_partials_kernel``: the K/V pages stream as
+    int8 payloads (quarter the HBM traffic of fp32 — the whole point on a
+    bandwidth-bound Decode Chip) and dequantize in-register against the
+    per-PAGE scales riding in scalar-prefetch SMEM, looked up through the
+    same block table that steered the page DMA.  Past the dequant multiply
+    the online-softmax body is identical to the fp32 kernel."""
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    @pl.when(si * page_size < length)
+    def _body():
+        phys = bt_ref[b, si]
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[phys]  # [ps, d] dequant
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[phys]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [G, ps]
+        k_pos = si * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        acc_ref[0, 0] = acc_scr[...]
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_length", "interpret", "return_partials")
+)
+def decode_attention_paged_pallas_quant(
+    q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths,
+    *,
+    max_length: int = None,
+    interpret: bool = False,
+    return_partials: bool = False,
+):
+    """Int8 variant of ``decode_attention_paged_pallas``.
+
+    q [B,H,d]; k_pool/v_pool [P, ps, KV, d] int8; k_scales/v_scales [P] f32
+    (one symmetric-absmax scale per physical page, trash page included);
+    block_tables [B, n_pg] int32; lengths [B].
+
+    The per-page scales ride in scalar-prefetch SMEM next to the block table:
+    the index map steers the int8 page DMA exactly as the fp32 kernel, and
+    the body dequantizes in-register (``payload * scales[bt[b, si]]``) before
+    the score matmul — bit-identical to gathering a dequantized fp32 pool
+    through the same table (one multiply per element, then the same fp32
+    online-softmax).  NOTE: on real TPU hardware int8 VMEM tiles want
+    (32, 128) min granularity; the repo's page sizes target interpret-mode
+    validation, production shapes would pad ``ps``/``d`` up accordingly.
+
+    ``return_partials=True`` returns (acc [B,H,d], m [B,H], l [B,H]), all
+    f32, exactly as the fp32 kernel; ``False`` normalizes outside the kernel
+    (``acc / l`` with the l == 0 guard), matching the fp32 kernel's
+    finalize."""
+    B, H, d = q.shape
+    P, ps, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    n_pg = block_tables.shape[1]
+    G = H // KV
+    scale = d ** -0.5
+
+    # fastpath: allow[FP001] int() of a static Python scalar at trace time, not a traced value
+    ns = n_pg if max_length is None else max(1, min(n_pg, -(-int(max_length) // ps)))
+    qt = q.reshape(B, KV, G, d)
+    kt = jnp.moveaxis(k_pool, 2, 1)  # [P, KV, ps, d]
+    vt = jnp.moveaxis(v_pool, 2, 1)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+        pl.BlockSpec(
+            (1, 1, ps, d), lambda b, kv, si, lens, bt, ks, vs: (bt[b, si], kv, 0, 0)
+        ),
+        pl.BlockSpec(
+            (1, 1, ps, d), lambda b, kv, si, lens, bt, ks, vs: (bt[b, si], kv, 0, 0)
+        ),
+    ]
+    kernel = functools.partial(
+        _paged_dec_quant_partials_kernel, scale=scale, page_size=ps, ns=ns
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, KV, ns),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, kv, si, *_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, kv, si, *_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, kv, si, *_: (b, kv, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        lengths.astype(jnp.int32),
+        block_tables.astype(jnp.int32),
+        k_scales.astype(jnp.float32),
+        v_scales.astype(jnp.float32),
+        qt, kt, vt,
+    )
+    if return_partials:
+        return acc.reshape(B, H, d), m.reshape(B, H), l.reshape(B, H)
+    ln = jnp.where(l == 0.0, 1.0, l)
+    return (acc / ln).astype(q.dtype).reshape(B, H, d)

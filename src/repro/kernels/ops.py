@@ -97,6 +97,43 @@ def decode_attention_paged_partials(q, k_pool, v_pool, block_tables, lengths):
     )
 
 
+@jax.jit
+def decode_attention_paged_quant(
+    q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths
+):
+    """Int8 paged decode attention: int8 page pools dequantized against
+    per-page scales (``[P] f32``, scalar-prefetched on the Pallas path,
+    broadcast-multiplied on the reference path).
+
+    q [B,H,d]; k_pool/v_pool [P, page_size, KV, d] int8; block_tables
+    [B, n_pg] int32; lengths [B]."""
+    if _use_pallas():
+        from .decode_attention import decode_attention_paged_pallas_quant
+
+        return decode_attention_paged_pallas_quant(
+            q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths,
+            interpret=_interpret(),
+        )
+    return _ref.decode_attention_paged_quant_ref(
+        q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths
+    )
+
+
+def decode_attention_paged_partials_quant(
+    q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths
+):
+    """Int8 twin of ``decode_attention_paged_partials``: unnormalized
+    (acc, m, l) over int8 pages dequantized in-kernel via scalar-prefetched
+    per-page scales.  Pallas-only — callers must gate on
+    ``paged_decode_via_pallas()``."""
+    from .decode_attention import decode_attention_paged_pallas_quant
+
+    return decode_attention_paged_pallas_quant(
+        q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths,
+        interpret=_interpret(), return_partials=True,
+    )
+
+
 def ssd(x, dt, A, B, C, *, chunk: int = 128, initial_state=None):
     """Dispatched inside model code (already under jit)."""
     if _use_pallas() and _IMPL in ("pallas", "interpret"):

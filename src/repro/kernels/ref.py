@@ -80,6 +80,19 @@ def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, lengths):
     return decode_attention_ref(q, gather(k_pool), gather(v_pool), lengths)
 
 
+def decode_attention_paged_quant_ref(
+    q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths
+):
+    """Int8 paged decode oracle: dequantize the whole pools against their
+    per-page scales, then the fp32 paged reference — the dequantize-then-
+    gather ground truth the in-kernel dequant path is validated against.
+
+    k_pool/v_pool [P, ps, KV, d] int8; k_scales/v_scales [P] f32."""
+    kf = k_pool.astype(jnp.float32) * k_scales.astype(jnp.float32)[:, None, None, None]
+    vf = v_pool.astype(jnp.float32) * v_scales.astype(jnp.float32)[:, None, None, None]
+    return decode_attention_paged_ref(q, kf, vf, block_tables, lengths)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD oracle (chunked scan, f32 internals, memory-bounded)
 # ---------------------------------------------------------------------------

@@ -97,6 +97,16 @@ def main():
                          "mode): requests whose prompts share a page-aligned "
                          "prefix map the cached pages instead of recomputing "
                          "them; prefill runs only the uncached tail")
+    ap.add_argument("--kv-dtype", default="fp32", choices=["fp32", "int8"],
+                    help="attention KV page pool storage: int8 stores 1-byte "
+                         "payloads + one fp32 absmax scale per page (~2x "
+                         "pages per HBM byte, bounded-error decode; see "
+                         "docs/serving.md §9); requires --paged")
+    ap.add_argument("--batch-dedup", action="store_true",
+                    help="batch-level prefix dedup: requests in the SAME "
+                         "bucketed prefill dispatch sharing a page-aligned "
+                         "prefix with each other prefill it once; requires "
+                         "--prefix-cache")
     ap.add_argument("--scheduler", default="fcfs",
                     choices=sorted(SCHEDULERS),
                     help="admission policy: fcfs (oldest first, the seed "
@@ -145,6 +155,12 @@ def main():
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged")
+    if args.kv_dtype != "fp32" and not args.paged:
+        ap.error("--kv-dtype int8 requires --paged (per-page scales live in "
+                 "the page pools)")
+    if args.batch_dedup and not args.prefix_cache:
+        ap.error("--batch-dedup requires --prefix-cache (deduped prefixes "
+                 "fan out through the prefix index)")
     if args.chunk_tokens is not None:
         if not args.paged:
             ap.error("--chunk-tokens requires --paged (chunks stream into the "
@@ -193,7 +209,8 @@ def main():
         max_slots=args.max_slots, max_len=args.max_len,
         decode_block=args.decode_block, donate=not args.no_donate,
         paged=args.paged, page_size=args.page_size, n_pages=args.pages,
-        prefix_cache=args.prefix_cache,
+        prefix_cache=args.prefix_cache, kv_dtype=args.kv_dtype,
+        batch_dedup=args.batch_dedup,
         chunk_tokens=args.chunk_tokens,
         tbt_target_ms=args.tbt_target_ms,
         unified_batching=args.unified_batching,

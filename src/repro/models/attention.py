@@ -76,6 +76,37 @@ def _cache_write(cache_arr, new, pos, scalar: bool):
     return jnp.where(mask, new.astype(cache_arr.dtype), cache_arr)
 
 
+def quantize_pages(pages):
+    """Symmetric absmax int8 quantization, one scale per leading-2-dim slice.
+
+    ``pages`` [A, N, page_size, ...] float -> (payload int8 same shape,
+    scales [A, N] float32) with ``scale = absmax / 127`` over each [A, N]
+    slice's trailing dims.  An all-zero page gets scale 0 and an all-zero
+    payload (the safe-divide below), so dequant reproduces it exactly.
+    Roundtrip error is <= scale / 2 elementwise (round-to-nearest of
+    ``x / scale``; the absmax element maps to exactly +/-127)."""
+    f = pages.astype(jnp.float32)
+    red = tuple(range(2, f.ndim))
+    absmax = jnp.max(jnp.abs(f), axis=red)
+    scale = absmax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(
+        jnp.round(f / safe.reshape(safe.shape + (1,) * (f.ndim - 2))), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_pages(q, scale):
+    """Inverse of ``quantize_pages``: int8 payload * broadcast scale -> f32.
+
+    ``scale``'s dims must be a leading prefix of ``q``'s (trailing page-content
+    dims broadcast), so the same helper serves pool-shaped [R, N, ps, ...] and
+    gathered [R, B, n_pg, ps, ...] payloads."""
+    return q.astype(jnp.float32) * scale.reshape(
+        scale.shape + (1,) * (q.ndim - scale.ndim)
+    )
+
+
 def gather_pages(pool, block_tables):
     """Paged-KV view: pool [P, ps, ...] + block_tables [B, n_pg] -> [B, n_pg*ps, ...].
 
@@ -92,6 +123,23 @@ def gather_pages(pool, block_tables):
     P = pool.shape[0]
     oh = jax.nn.one_hot(block_tables, P, dtype=pool.dtype)  # [B, n_pg, P]
     rows = jnp.einsum("bnp,p...->bn...", oh, pool)  # [B, n_pg, ps, ...]
+    B, n_pg, ps = rows.shape[:3]
+    return rows.reshape((B, n_pg * ps) + rows.shape[3:])
+
+
+def gather_pages_dequant(pool, scales, block_tables):
+    """``gather_pages`` for int8 pools: pool [P, ps, ...] int8 + per-page
+    ``scales`` [P] f32 + block_tables [B, n_pg] -> [B, n_pg*ps, ...] f32.
+
+    Same gather-free one-hot contraction; the per-page scale is gathered by
+    the SAME one-hot and multiplied onto the page rows, which equals
+    dequantize-then-gather exactly (each output row sums one nonzero term,
+    and that term is ``payload * scale``)."""
+    P = pool.shape[0]
+    oh = jax.nn.one_hot(block_tables, P, dtype=jnp.float32)  # [B, n_pg, P]
+    rows = jnp.einsum("bnp,p...->bn...", oh, pool.astype(jnp.float32))
+    srow = jnp.einsum("bnp,p->bn", oh, scales.astype(jnp.float32))  # [B, n_pg]
+    rows = rows * srow.reshape(srow.shape + (1,) * (rows.ndim - 2))
     B, n_pg, ps = rows.shape[:3]
     return rows.reshape((B, n_pg * ps) + rows.shape[3:])
 
@@ -365,7 +413,8 @@ def gqa_prefill(p, x, cfg: ModelConfig, *, slopes=None, want_cache: bool, true_l
     return out, cache
 
 
-def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=None):
+def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=None,
+               cache_scales=None):
     """x [B,1,D]; cache {k,v:[B,L,KV,dh]}; pos scalar or [B] -> (out, delta).
 
     The cache is consumed READ-ONLY: the fresh token's K/V contribute via a
@@ -380,6 +429,11 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=
     kernels/decode_attention.py streams pages without materializing the
     gather).  The attention math past the gather is byte-for-byte the slab
     path, so paged and slab decode emit bit-identical streams.
+
+    ``cache_scales`` {k,v: [P] f32} (with ``block_tables``) switches the
+    pools to int8 payloads with per-page absmax scales: the gather dequantizes
+    (``gather_pages_dequant``, or scalar-prefetched scales in the int8 Pallas
+    kernel variant) and everything past it is the same fp32 math.
     """
     B = x.shape[0]
     pos_b, scalar = _norm_pos(pos, B)
@@ -399,10 +453,18 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=
         from ..kernels import ops as kops
 
         if kops.paged_decode_via_pallas():
-            out = _paged_decode_pallas(p, q, k, v, cfg, pos_b, cache, block_tables)
+            out = _paged_decode_pallas(
+                p, q, k, v, cfg, pos_b, cache, block_tables, cache_scales
+            )
             return out, {"k": k[:, 0], "v": v[:, 0]}
-    ck = cache["k"] if block_tables is None else gather_pages(cache["k"], block_tables)
-    cv = cache["v"] if block_tables is None else gather_pages(cache["v"], block_tables)
+    if cache_scales is not None:
+        # cast to the fresh K/V dtype: the fp32 cache stores exactly this, so
+        # everything past the gather is dtype-identical to the unquantized path
+        ck = gather_pages_dequant(cache["k"], cache_scales["k"], block_tables).astype(k.dtype)
+        cv = gather_pages_dequant(cache["v"], cache_scales["v"], block_tables).astype(v.dtype)
+    else:
+        ck = cache["k"] if block_tables is None else gather_pages(cache["k"], block_tables)
+        cv = cache["v"] if block_tables is None else gather_pages(cache["v"], block_tables)
     ck = constrain(ck, ("batch", "kv_seq", "kv_heads", "head_dim"))
     cv = constrain(cv, ("batch", "kv_seq", "kv_heads", "head_dim"))
     L = ck.shape[1]
@@ -434,7 +496,8 @@ def gqa_decode(p, x, cfg: ModelConfig, cache, pos, *, slopes=None, block_tables=
     return out, {"k": k[:, 0], "v": v[:, 0]}
 
 
-def _paged_decode_pallas(p, q, k, v, cfg: ModelConfig, pos_b, cache, block_tables):
+def _paged_decode_pallas(p, q, k, v, cfg: ModelConfig, pos_b, cache, block_tables,
+                         cache_scales=None):
     """Paged GQA decode via the block-table Pallas kernel (view-free).
 
     The kernel streams K/V pages through scalar-prefetched block tables and
@@ -443,6 +506,8 @@ def _paged_decode_pallas(p, q, k, v, cfg: ModelConfig, pos_b, cache, block_table
     fresh token's rank-1 term is merged here, mirroring the XLA path's
     separate ``s_new`` term.  A request at position 0 has m = -inf partials
     whose exp-weight underflows to exactly 0, so it attends only to itself.
+    With ``cache_scales`` the int8 kernel variant streams int8 pages and
+    dequantizes in-kernel via scalar-prefetched per-page scales.
     """
     from ..kernels import ops as kops
 
@@ -451,9 +516,15 @@ def _paged_decode_pallas(p, q, k, v, cfg: ModelConfig, pos_b, cache, block_table
     G = H // KV
     scale = cfg.d_head ** -0.5
     # kernel head order is KV-major (h = kv*G + g), matching q.reshape below
-    acc, m, l = kops.decode_attention_paged_partials(
-        q[:, 0], cache["k"], cache["v"], block_tables, pos_b
-    )
+    if cache_scales is not None:
+        acc, m, l = kops.decode_attention_paged_partials_quant(
+            q[:, 0], cache["k"], cache["v"], cache_scales["k"],
+            cache_scales["v"], block_tables, pos_b
+        )
+    else:
+        acc, m, l = kops.decode_attention_paged_partials(
+            q[:, 0], cache["k"], cache["v"], block_tables, pos_b
+        )
     acc = acc.reshape(B, KV, G, cfg.d_head)
     m = m.reshape(B, KV, G)
     l = l.reshape(B, KV, G)
@@ -612,7 +683,8 @@ def mla_prefill(p, x, cfg: ModelConfig, *, want_cache: bool, true_len=None,
     return out, cache
 
 
-def mla_decode(p, x, cfg: ModelConfig, cache, pos, *, block_tables=None):
+def mla_decode(p, x, cfg: ModelConfig, cache, pos, *, block_tables=None,
+               cache_scales=None):
     """Matmul-absorbed MLA decode over the compressed cache (TPU-native path).
 
     Mathematically identical to expanding K/V (unit-tested); per-step cost is
@@ -620,6 +692,8 @@ def mla_decode(p, x, cfg: ModelConfig, cache, pos, *, block_tables=None):
     Cache is read-only; returns delta {ckv, k_rope: [B, r]} (see gqa_decode).
     ``block_tables`` gathers the compressed cache through page tables (paged
     layout {ckv, k_rope: [P, ps, r]}), same contract as gqa_decode.
+    ``cache_scales`` {ckv, k_rope: [P] f32} dequantizes int8 pools in the
+    gather (per-page absmax scales, see gather_pages_dequant).
     """
     a = cfg.mla
     B = x.shape[0]
@@ -636,10 +710,19 @@ def mla_decode(p, x, cfg: ModelConfig, cache, pos, *, block_tables=None):
     ckv_new = _rms_head(ckv_full[..., : a.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
     krope_new = apply_rope_vec(ckv_full[..., a.kv_lora_rank :][:, :, None, :], cos, sin)[:, :, 0, :]
 
-    ckv = cache["ckv"] if block_tables is None else gather_pages(cache["ckv"], block_tables)
-    krope = (
-        cache["k_rope"] if block_tables is None else gather_pages(cache["k_rope"], block_tables)
-    )
+    if cache_scales is not None:
+        # cast to the fresh compressed-KV dtype (what the fp32 cache stores)
+        ckv = gather_pages_dequant(
+            cache["ckv"], cache_scales["ckv"], block_tables
+        ).astype(ckv_new.dtype)
+        krope = gather_pages_dequant(
+            cache["k_rope"], cache_scales["k_rope"], block_tables
+        ).astype(krope_new.dtype)
+    else:
+        ckv = cache["ckv"] if block_tables is None else gather_pages(cache["ckv"], block_tables)
+        krope = (
+            cache["k_rope"] if block_tables is None else gather_pages(cache["k_rope"], block_tables)
+        )
     ckv = constrain(ckv, ("batch", "kv_seq", "kv_lora"))
     krope = constrain(krope, ("batch", "kv_seq", None))
     wk_b = p["wkv_b"][..., : a.qk_nope_head_dim]  # [r, H, nope]

@@ -253,6 +253,7 @@ def _block_apply(
     block_tables=None,
     prefix_kv=None,
     prefix_len=None,
+    cache_scales=None,
 ):
     """One (mixer, ffn) block. Returns (x, new_cache, aux)."""
     aux = {}
@@ -261,12 +262,13 @@ def _block_apply(
         if mode == "decode":
             if cfg.attn_type == "mla":
                 a_out, new_cache = attn.mla_decode(
-                    bp["mixer"], h, cfg, cache, pos, block_tables=block_tables
+                    bp["mixer"], h, cfg, cache, pos, block_tables=block_tables,
+                    cache_scales=cache_scales,
                 )
             else:
                 a_out, new_cache = attn.gqa_decode(
                     bp["mixer"], h, cfg, cache, pos, slopes=slopes,
-                    block_tables=block_tables,
+                    block_tables=block_tables, cache_scales=cache_scales,
                 )
         else:
             want = mode == "prefill"
@@ -319,23 +321,24 @@ def _zero_aux():
 
 def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_groups=1,
                remat: bool = False, true_len=None, block_tables=None,
-               prefix_kv=None, prefix_len=None):
+               prefix_kv=None, prefix_len=None, cache_scales=None):
     """Scan over n_repeats; pattern positions applied sequentially in the body."""
     slopes = _slopes(cfg)
     P = len(cfg.block_pattern)
 
-    def body(x, xs, prefix_reps=None):
+    def body(x, xs, prefix_reps=None, scale_reps=None):
         reps, cache_reps = xs
         new_caches = []
         aux_sum = _zero_aux()
         for i, (mixer, ffn) in enumerate(cfg.block_pattern):
             c = None if cache_reps is None else cache_reps[i]
             pk = None if prefix_reps is None else prefix_reps[i]
+            cs = None if scale_reps is None else scale_reps[i]
             x_new, nc, aux = _block_apply(
                 reps[i], x, cfg, mixer, ffn,
                 mode=mode, cache=c, pos=pos, slopes=slopes, n_groups=n_groups,
                 true_len=true_len, block_tables=block_tables,
-                prefix_kv=pk, prefix_len=prefix_len,
+                prefix_kv=pk, prefix_len=prefix_len, cache_scales=cs,
             )
             x = x_new
             new_caches.append(nc)
@@ -371,11 +374,22 @@ def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None, n_gr
         # Writing the cache inside the loop — whether as xs/ys or as a
         # DUS-updated carry — makes XLA materialize per-iteration copies of
         # the whole stacked cache (measured: ~700x the useful HBM traffic).
-        def sc(carry, xs_t):
-            reps, cache_reps = xs_t
-            return body(carry, (reps, cache_reps))
+        # Quant scales ([R, P+1] per attn leaf) ride as extra read-only xs,
+        # sliced to [P+1] per layer alongside the int8 pools.
+        if cache_scales is not None:
+            def scq(carry, xs_t):
+                reps, cache_reps, scale_reps = xs_t
+                return body(carry, (reps, cache_reps), scale_reps=scale_reps)
 
-        x, (stacked_caches, aux_seq) = jax.lax.scan(sc, x, (params["blocks"], caches))
+            x, (stacked_caches, aux_seq) = jax.lax.scan(
+                scq, x, (params["blocks"], caches, cache_scales)
+            )
+        else:
+            def sc(carry, xs_t):
+                reps, cache_reps = xs_t
+                return body(carry, (reps, cache_reps))
+
+            x, (stacked_caches, aux_seq) = jax.lax.scan(sc, x, (params["blocks"], caches))
 
     aux = jax.tree.map(lambda a: jnp.sum(a), aux_seq)
     return x, stacked_caches, aux
@@ -458,7 +472,8 @@ def prefill(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
     return logits, caches, aux
 
 
-def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int, *, block_tables=None):
+def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int, *, block_tables=None,
+                       scales=None):
     """Write every layer's fresh-token K/V into the caches in one pass.
 
     Attention deltas are [R, B, ...] (one token per row).  Slab caches are
@@ -471,9 +486,18 @@ def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int, *, block_t
     (block_tables[b, pos // ps], pos % ps); rows whose position is out of
     range — released slots (trash-mapped tables) or positions past max_len —
     land on the trash page.  Mamba deltas are the full (fixed-size) new
-    states and simply replace the old cache."""
+    states and simply replace the old cache.
+
+    With ``scales`` (int8 pools, requires ``block_tables``) the write is a
+    whole-page read-modify-write: dequantize the touched page, splice the
+    fresh token at its offset, zero the garbage positions PAST the write head
+    (they are overwritten before ever being attended, and masking them keeps
+    bucket-pad garbage from inflating the absmax), and requantize the page
+    with a FRESH absmax — so quant error never compounds across blocks.
+    Returns (caches, scales) in that case, plain caches otherwise."""
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
     out = []
+    out_scales = None if scales is None else []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer == "attn":
             if block_tables is None:
@@ -494,14 +518,51 @@ def merge_cache_deltas(cfg: ModelConfig, caches, deltas, pos, B: int, *, block_t
                     pg = jnp.where(pos_b < n_pg * ps, pg, trash)
                     return cache.at[:, pg, pos_b % ps].set(d.astype(cache.dtype))
 
-            out.append(jax.tree.map(wr, caches[i], deltas[i]))
+            if scales is not None:
+                n_pg = block_tables.shape[1]
+
+                def wr_q(cache, d, sc):
+                    ps = cache.shape[2]
+                    trash = cache.shape[1] - 1
+                    pg = block_tables[
+                        jnp.arange(B), jnp.clip(pos_b // ps, 0, n_pg - 1)
+                    ]
+                    pg = jnp.where(pos_b < n_pg * ps, pg, trash)
+                    off = pos_b % ps
+                    # page [R, B, ps, ...] — gather, dequant, splice, requant
+                    page = attn.dequantize_pages(cache[:, pg], sc[:, pg])
+                    idx = jnp.arange(ps)[None, :]  # [1, ps]
+                    is_new = idx == off[:, None]  # [B, ps]
+                    is_old = idx < off[:, None]
+                    shp = (1, B, ps) + (1,) * (page.ndim - 3)
+                    page = jnp.where(
+                        is_new.reshape(shp),
+                        d[:, :, None].astype(jnp.float32),
+                        jnp.where(is_old.reshape(shp), page, 0.0),
+                    )
+                    qv, s = attn.quantize_pages(page)  # [R, B, ps, ...], [R, B]
+                    return cache.at[:, pg].set(qv), sc.at[:, pg].set(s)
+
+                leaf, sc_leaf = {}, {}
+                for kk in caches[i]:
+                    leaf[kk], sc_leaf[kk] = wr_q(
+                        caches[i][kk], deltas[i][kk], scales[i][kk]
+                    )
+                out.append(leaf)
+                out_scales.append(sc_leaf)
+            else:
+                out.append(jax.tree.map(wr, caches[i], deltas[i]))
         else:
             out.append(deltas[i])
+            if out_scales is not None:
+                out_scales.append(None)
+    if scales is not None:
+        return out, out_scales
     return out
 
 
 def decode_step(params, tok, caches, pos, cfg: ModelConfig, *, n_groups: int = 1,
-                block_tables=None):
+                block_tables=None, scales=None):
     """One decode step.  tok [B] int32 (or [B,1,D] embeds); pos scalar or [B].
 
     ``block_tables`` [B, n_pg] switches attention caches to the paged layout
@@ -509,7 +570,13 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig, *, n_groups: int = 1
     attention mixers gather K/V pages through the table and the fresh-token
     write scatters into (page, offset).
 
-    Returns (logits [B,V], new caches)."""
+    ``scales`` (the PagedDecodeState scale tree, requires ``block_tables``)
+    switches the attention pools to int8 payloads: attention dequantizes in
+    the gather and the fresh-token write requantizes its whole page with a
+    fresh absmax (see merge_cache_deltas).
+
+    Returns (logits [B,V], new caches), plus the updated scales as a third
+    element when ``scales`` is given."""
     if jnp.issubdtype(tok.dtype, jnp.integer):
         x = L.embed_apply(params["embed"], tok[:, None], cfg)
     else:
@@ -521,11 +588,19 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig, *, n_groups: int = 1
         x = x + jnp.take(params["embed"]["pos"], pos_v, axis=0)[:, None]
     x = constrain(x, ("batch", None, None))
     x, deltas, _ = _run_stack(params, x, cfg, mode="decode", caches=caches, pos=pos,
-                              n_groups=n_groups, block_tables=block_tables)
-    new_caches = merge_cache_deltas(cfg, caches, deltas, pos, B, block_tables=block_tables)
+                              n_groups=n_groups, block_tables=block_tables,
+                              cache_scales=scales)
+    if scales is not None:
+        new_caches, new_scales = merge_cache_deltas(
+            cfg, caches, deltas, pos, B, block_tables=block_tables, scales=scales
+        )
+    else:
+        new_caches = merge_cache_deltas(cfg, caches, deltas, pos, B, block_tables=block_tables)
     x = L.norm_apply(params["final_norm"], x, cfg)
     logits = L.unembed_apply(params["embed"], x[:, 0], cfg)
     logits = constrain(logits, ("batch", "vocab"))
+    if scales is not None:
+        return logits, new_caches, new_scales
     return logits, new_caches
 
 

@@ -51,6 +51,11 @@ class EngineConfig:
       page_size      KV positions per page (paged mode)
       n_pages        pool size in pages (None = slab-equivalent HBM)
       prefix_cache   refcounted prefix sharing + COW (requires ``paged``)
+      kv_dtype       attention K/V page-pool storage dtype: "fp32" (bit-exact
+                     reference) or "int8" (symmetric absmax per-page quant
+                     with a parallel fp32 scale leaf; requires ``paged``).
+                     fp32 configs are bit-identical everywhere; int8 configs
+                     trade a bounded logit error for ~4x pages per HBM byte.
 
     Prefill engine:
       bucketed       pad prompts to length buckets (bounded jit cache)
@@ -68,6 +73,12 @@ class EngineConfig:
 
     Server:
       max_prefill_batch  max same-bucket prompts stacked per prefill call
+      batch_dedup        dedup shared chained-chunk-hash prefixes WITHIN one
+                         prefill group (requires ``prefix_cache``): the
+                         shared prefix rows run once through the chunked
+                         prefill path and the resulting pages fan out to
+                         every group member's block table, so best-of-n and
+                         system-prompt floods prefill the common prefix once
       scheduler          policy name for ``make_scheduler`` ("fcfs" is the
                          bit-exact regression anchor)
       scheduler_kwargs   extra policy kwargs (e.g. swap=True,
@@ -104,6 +115,7 @@ class EngineConfig:
     page_size: int = 16
     n_pages: Optional[int] = None
     prefix_cache: bool = False
+    kv_dtype: str = "fp32"
     # -- prefill engine -----------------------------------------------------
     bucketed: bool = True
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
@@ -113,6 +125,7 @@ class EngineConfig:
     seed: int = 0
     # -- server -------------------------------------------------------------
     max_prefill_batch: int = 8
+    batch_dedup: bool = False
     scheduler: str = "fcfs"
     scheduler_kwargs: Tuple[Tuple[str, Any], ...] = ()
     faults: Optional[FaultPlan] = None
@@ -135,6 +148,18 @@ class EngineConfig:
         if self.prefix_cache and not self.paged:
             raise ValueError("prefix_cache=True requires paged=True "
                              "(prefix sharing lives in the page pool)")
+        if self.kv_dtype not in ("fp32", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'fp32' or 'int8', got {self.kv_dtype!r}"
+            )
+        if self.kv_dtype != "fp32" and not self.paged:
+            raise ValueError("kv_dtype='int8' requires paged=True (the quant "
+                             "scale leaf rides the refcounted page pool)")
+        if self.batch_dedup and not self.prefix_cache:
+            raise ValueError(
+                "batch_dedup=True requires prefix_cache=True: deduped prefix "
+                "pages are registered/pinned through the prefix index"
+            )
         if self.paged and self.max_len % self.page_size:
             raise ValueError(
                 f"max_len {self.max_len} not a multiple of page_size {self.page_size}"
@@ -236,6 +261,7 @@ class EngineConfig:
             "page_size": self.page_size,
             "n_pages": self.n_pages,
             "prefix_cache": self.prefix_cache,
+            "kv_dtype": self.kv_dtype,
         }
 
     def build_scheduler(self):

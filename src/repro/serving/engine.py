@@ -648,6 +648,7 @@ class DecodeEngine:
         page_size: int = 16,
         n_pages: Optional[int] = None,
         prefix_cache: bool = False,
+        kv_dtype: str = "fp32",
     ):
         # ``config`` is the canonical constructor path; the loose kwargs are
         # a compatibility shim (deprecated — new call sites should pass an
@@ -659,6 +660,7 @@ class DecodeEngine:
             donate, seed, paged = da["donate"], da["seed"], da["paged"]
             page_size, n_pages = da["page_size"], da["n_pages"]
             prefix_cache = da["prefix_cache"]
+            kv_dtype = da["kv_dtype"]
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
@@ -668,6 +670,11 @@ class DecodeEngine:
         self.donate = donate
         self.paged = paged
         self.prefix_cache = bool(paged and prefix_cache)
+        if kv_dtype not in kvcache.KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {kvcache.KV_DTYPES}, got {kv_dtype!r}")
+        if kv_dtype != "fp32" and not paged:
+            raise ValueError("kv_dtype='int8' requires paged=True")
+        self.kv_dtype = kv_dtype
         # fault injection (tests/chaos benches): the owning server shares its
         # FaultInjector here; None = every lifecycle seam succeeds normally
         self.faults: Optional[FaultInjector] = None
@@ -725,7 +732,8 @@ class DecodeEngine:
             self.admit_shared_pages: Dict[int, int] = {}
             self.stats = {"admits": 0, "new_pages": 0, "shared_pages": 0}
             self.state: Any = kvcache.init_paged_decode_state(
-                cfg, max_slots, max_len, page_size, self.n_pages, key
+                cfg, max_slots, max_len, page_size, self.n_pages, key,
+                kv_dtype=kv_dtype,
             )
         else:
             self.state = kvcache.init_decode_state(cfg, max_slots, max_len, key)
@@ -784,11 +792,19 @@ class DecodeEngine:
                     # the view-free scan below reads pages directly, so the
                     # prefix must already live on the copy.
                     will_write = active & (pos0 < max_len)
+                    scales = state.scales
                     if cow:
-                        refs, bt, caches = kvcache.cow_redirect(
-                            state.page_refs, state.block_tables, pos0,
-                            will_write, k, ps, caches=state.caches, cfg=cfg,
-                        )
+                        if scales is not None:
+                            refs, bt, caches, scales = kvcache.cow_redirect(
+                                state.page_refs, state.block_tables, pos0,
+                                will_write, k, ps, caches=state.caches, cfg=cfg,
+                                scales=scales,
+                            )
+                        else:
+                            refs, bt, caches = kvcache.cow_redirect(
+                                state.page_refs, state.block_tables, pos0,
+                                will_write, k, ps, caches=state.caches, cfg=cfg,
+                            )
                     else:
                         refs, bt, caches = (
                             state.page_refs, state.block_tables, state.caches
@@ -823,26 +839,34 @@ class DecodeEngine:
                     bt_eff = bt[:, :n_eff]
 
                     def one(carry, _):
-                        caches, tokens, positions, key = carry
+                        caches, scales, tokens, positions, key = carry
                         key, sub = jax.random.split(key)
-                        logits, caches = M.decode_step(
-                            params, tokens, caches, positions, cfg,
-                            block_tables=bt_eff,
-                        )
+                        if scales is not None:
+                            logits, caches, scales = M.decode_step(
+                                params, tokens, caches, positions, cfg,
+                                block_tables=bt_eff, scales=scales,
+                            )
+                        else:
+                            logits, caches = M.decode_step(
+                                params, tokens, caches, positions, cfg,
+                                block_tables=bt_eff,
+                            )
                         nxt = sample(logits, sub, sampling)
                         nxt = jnp.where(active, nxt, tokens)
                         # overshoot guard: stop advancing at max_len (see slab path)
                         positions = jnp.where(
                             active & (positions < max_len), positions + 1, positions
                         )
-                        return (caches, nxt, positions, key), nxt
+                        return (caches, scales, nxt, positions, key), nxt
 
-                    (caches, tokens, positions, key), toks = jax.lax.scan(
-                        one, (caches, state.tokens, pos0, state.key), None, length=k
+                    (caches, scales, tokens, positions, key), toks = jax.lax.scan(
+                        one, (caches, scales, state.tokens, pos0, state.key),
+                        None, length=k,
                     )
                     return (
                         kvcache.PagedDecodeState(
-                            caches, bt, refs, tokens, positions, active, key
+                            caches, bt, refs, tokens, positions, active, key,
+                            scales=scales,
                         ),
                         toks,  # [k, max_slots]
                     )
@@ -1063,8 +1087,19 @@ class DecodeEngine:
         key = tables.shape
         if key not in self._gather_fns:
             cfg = self.cfg
-            self._gather_fns[key] = jax.jit(
-                lambda caches, t: kvcache.gather_prefix_pack(caches, t, cfg)
+            if self.kv_dtype == "int8":
+                self._gather_fns[key] = jax.jit(
+                    lambda caches, sc, t: kvcache.gather_prefix_pack(
+                        caches, t, cfg, scales=sc
+                    )
+                )
+            else:
+                self._gather_fns[key] = jax.jit(
+                    lambda caches, t: kvcache.gather_prefix_pack(caches, t, cfg)
+                )
+        if self.kv_dtype == "int8":
+            return self._gather_fns[key](
+                self.state.caches, self.state.scales, jnp.asarray(tables)
             )
         return self._gather_fns[key](self.state.caches, jnp.asarray(tables))
 
@@ -1701,7 +1736,7 @@ class DecodeEngine:
         if self.paged:
             self.state = kvcache.init_paged_decode_state(
                 self.cfg, self.max_slots, self.max_len, self.page_size,
-                self.n_pages, key,
+                self.n_pages, key, kv_dtype=self.kv_dtype,
             )
             self._href = np.zeros(self.n_pages, np.int64)
             self._growth = [0] * self.max_slots
@@ -1851,7 +1886,15 @@ class DisaggregatedServer:
         self.unified_stats = {
             "rounds": 0, "chunk_rows": 0, "deferred_rounds": 0,
             "budget_tokens": 0, "used_tokens": 0,
+            # prefill accounting (batch dedup observability): tokens actually
+            # DISPATCHED through monolithic prefill groups, and tokens a
+            # same-batch shared-prefix dedup kept out of those dispatches
+            "prefill_tokens": 0, "dedup_groups": 0, "dedup_saved_tokens": 0,
         }
+        # batch-level prefix dedup (opt-in, requires prefix_cache): requests
+        # in the SAME bucketed prefill dispatch that share a page-aligned
+        # prefix with each other run that prefix once (see _dedup_group)
+        self.batch_dedup = bool(config.batch_dedup) if config else False
         # in-progress chunked prefills (rid -> cursor); the requests
         # themselves stay in the scheduler queue between chunks
         self.chunks: Dict[int, ChunkPrefillState] = {}
@@ -2551,6 +2594,76 @@ class DisaggregatedServer:
         if not admitted:
             d.release_prefix_pin(rid)
 
+    def _dedup_group(self, eng: PrefillEngine, group, matches):
+        """Batch-level prefix dedup (``EngineConfig.batch_dedup``).
+
+        Requests landing in the SAME bucketed prefill dispatch that share a
+        page-aligned token prefix with EACH OTHER — but match nothing already
+        cached — would each prefill that prefix redundantly: the admit-time
+        re-match only shares the PAGES, after the compute is already spent.
+        This pre-pass clusters group members by chained chunk hash, streams
+        each cluster's common prefix through the chunked-prefill machinery
+        ONCE (B=1, the fixed dummy chunk key — the server PRNG chain is
+        untouched, so every later draw replays the non-dedup schedule bit for
+        bit), registers the pages in the routed engine's prefix index, and
+        synthesizes a ``PrefixMatch`` per member; the group then takes the
+        ordinary tail-only prefill path.  Returns the updated ``matches``;
+        any capacity shortfall leaves the affected cluster unmatched — dedup
+        is an optimization, never an admission requirement."""
+        cands = [d for d in self.decodes if d.prefix is not None and d._tail_ok]
+        if not cands:
+            return matches
+        d = max(cands, key=lambda dd: dd.max_slots - dd.slots.n_active)
+        ps = d.page_size
+        hs = [chunk_hashes(r.prompt, ps, d.pages_per_slot) for r in group]
+        # same cap rule as match_prefix: >= 1 tail token is always recomputed
+        caps = [
+            min((len(r.prompt) - 1) // ps, d.pages_per_slot) for r in group
+        ]
+        by_head: Dict[bytes, List[int]] = {}
+        for i, h in enumerate(hs):
+            if caps[i] >= 1 and h:
+                by_head.setdefault(h[0], []).append(i)
+        out = list(matches)
+        for members in by_head.values():
+            if len(members) < 2:
+                continue
+            lead = members[0]
+            # chained hashes are prefix-complete: equality at chunk j means
+            # the whole j-page prefix matches across the cluster
+            n_shared = min(caps[i] for i in members)
+            for j in range(n_shared):
+                if any(hs[i][j] != hs[lead][j] for i in members[1:]):
+                    n_shared = j
+                    break
+            if n_shared < 1:
+                continue
+            _, kvb = eng.prefill_chunk(
+                group[lead], self._chunk_key, pos=0, n_tokens=n_shared * ps
+            )
+            kvb = self.transfer(kvb)  # KV handoff, same as any prefill
+            pages = d.append_chunk(
+                kvb, n_shared * ps, rid=group[lead].rid
+            )
+            if pages is None:  # pool can't take the prefix right now
+                continue
+            d.register_chunk_pages(hs[lead][:n_shared], pages, start=0)
+            for i in members:
+                m = d.match_prefix(group[i].prompt, hashes=hs[i])
+                if m is not None and m.n_shared:
+                    d.pin_prefix(group[i].rid, m)
+                    out[i] = (m, d)
+            d.release_chunk_holds(pages)
+            # the shared chunk is a real prefill dispatch: count it, so
+            # prefill_tokens + dedup_saved_tokens always equals the tokens a
+            # dedup-free schedule would have dispatched
+            self.unified_stats["prefill_tokens"] += n_shared * ps
+            self.unified_stats["dedup_groups"] += 1
+            self.unified_stats["dedup_saved_tokens"] += (
+                (len(members) - 1) * n_shared * ps
+            )
+        return out
+
     def _prefill_group(self, eng: PrefillEngine, group, matches) -> None:
         """Prefill one compatible group and hand the KV off: prefix-matched
         requests prefill only their uncached tails (attention-only engines),
@@ -2558,6 +2671,13 @@ class DisaggregatedServer:
         scheduler's waiting list."""
         sched = self.scheduler
         pad_to = self.max_prefill_batch if eng.bucketed else None
+        # batch-level prefix dedup: members of THIS dispatch sharing a
+        # page-aligned prefix with each other (but matching nothing cached)
+        # get synthesized PrefixMatches so the shared prefix runs once
+        if self.batch_dedup and len(group) > 1 and all(
+            m is None for m, _ in matches
+        ):
+            matches = self._dedup_group(eng, group, matches)
         # prefix sharing: gather the matched pages from the routed decode
         # engine's pool and prefill only the uncached tails (attention-
         # only engines; hybrids recompute in full but still map the
@@ -2581,6 +2701,13 @@ class DisaggregatedServer:
             for m, _ in matches:
                 if m is not None:
                     m.tail = True  # the pack below holds only the tails
+        self.unified_stats["prefill_tokens"] += (
+            sum(len(r.prompt) for r in group) if prefix_arg is None
+            else sum(
+                len(r.prompt) - s
+                for r, s in zip(group, prefix_arg[1], strict=False)
+            )
+        )
         toks, kvb, tls = eng.prefill_batch(
             group, self._next_key(), pad_to=pad_to, prefix=prefix_arg
         )

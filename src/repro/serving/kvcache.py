@@ -87,6 +87,23 @@ Mamba/conv state is fixed-size per request and stays per-slot
 (``[R, max_slots, ...]``); only attention leaves page (and only attention
 prefixes are shareable — SSM state is a function of the whole prompt).
 
+Quantized KV pages (``kv_dtype="int8"``)
+----------------------------------------
+With ``kv_dtype="int8"`` every attention pool leaf stores int8 payloads and
+gains a parallel per-page fp32 scale array ``[R, n_pages + 1]`` (symmetric
+absmax: ``scale = absmax / 127``), kept as the ``scales`` leaf of the SAME
+donated state pytree — so quant state is allocated, released, COW-redirected,
+swapped and audited by the refcounted page machinery with no extra
+bookkeeping (the trash page has a trash scale that is written freely and
+never read).  Quantization happens only at page-granular writeback — admit
+packs, chunk appends, and the fused block's whole-page read-modify-write —
+and every writeback requantizes the page with a FRESH absmax, so error never
+compounds across decode blocks.  Dequantization lives in the gather paths
+(``models.attention.gather_pages_dequant``, ``gather_prefix_pack``,
+``paged_extract_request``) and the int8 Pallas kernel variant; Mamba/conv
+state stays fp32 per-slot.  ``kv_dtype="fp32"`` keeps ``scales=None`` and is
+bit-identical to the pre-quant engine everywhere (the negative control).
+
 The bucketed-prefill garbage contract carries over per page: admit copies
 whole prompt pages (including bucket garbage in the last partial page), and
 decode overwrites position ``pos`` before any step attends it.
@@ -104,6 +121,15 @@ from ..configs.base import ModelConfig
 from ..models import model as M
 
 Cache = Any
+
+# attention page-pool storage dtypes (EngineConfig.kv_dtype).  The quant
+# helpers live next to the attention gather paths (models/attention.py) so
+# the model layer can requantize at writeback without importing serving code;
+# they are re-exported here because the page-pool quant CONTRACT (absmax
+# symmetric, scale = absmax/127, error <= scale/2) is part of this module's
+# refcounted-page design.
+KV_DTYPES = ("fp32", "int8")
+from ..models.attention import dequantize_pages, quantize_pages  # noqa: E402
 
 
 @dataclass
@@ -240,6 +266,11 @@ class PagedDecodeState(NamedTuple):
     positions     [max_slots] int32   next cache write position per slot
     active        [max_slots] bool    slot currently owns a live request
     key           PRNG key consumed one split per decode step
+    scales        None (fp32 pools), or the per-page quant scales for
+                  ``kv_dtype="int8"``: a list per pattern position — attn
+                  positions hold a dict mirroring the cache leaf keys with
+                  ``[R, n_pages + 1]`` float32 arrays (index n_pages = the
+                  trash page's freely-scribbled scale), mamba positions None
     """
 
     caches: Cache
@@ -249,21 +280,45 @@ class PagedDecodeState(NamedTuple):
     positions: jnp.ndarray
     active: jnp.ndarray
     key: jnp.ndarray
+    scales: Any = None
 
 
 def init_paged_decode_state(
-    cfg: ModelConfig, max_slots: int, max_len: int, page_size: int, n_pages: int, key
+    cfg: ModelConfig, max_slots: int, max_len: int, page_size: int, n_pages: int, key,
+    kv_dtype: str = "fp32",
 ) -> PagedDecodeState:
     assert max_len % page_size == 0, (max_len, page_size)
+    assert kv_dtype in KV_DTYPES, kv_dtype
     pages_per_slot = max_len // page_size
+    caches = M.zeros_paged_cache(cfg, max_slots, n_pages + 1, page_size)
+    scales = None
+    if kv_dtype == "int8":
+        R = cfg.n_repeats
+        qcaches, scales = [], []
+        for i, (mixer, _) in enumerate(cfg.block_pattern):
+            if mixer == "attn":
+                qcaches.append(
+                    jax.tree.map(lambda a: a.astype(jnp.int8), caches[i])
+                )
+                scales.append(
+                    jax.tree.map(
+                        lambda a: jnp.zeros((R, n_pages + 1), jnp.float32),
+                        caches[i],
+                    )
+                )
+            else:
+                qcaches.append(caches[i])
+                scales.append(None)
+        caches = qcaches
     return PagedDecodeState(
-        caches=M.zeros_paged_cache(cfg, max_slots, n_pages + 1, page_size),
+        caches=caches,
         block_tables=jnp.full((max_slots, pages_per_slot), n_pages, jnp.int32),
         page_refs=jnp.zeros((n_pages,), jnp.int32),
         tokens=jnp.zeros((max_slots,), jnp.int32),
         positions=jnp.zeros((max_slots,), jnp.int32),
         active=jnp.zeros((max_slots,), bool),
         key=key,
+        scales=scales,
     )
 
 
@@ -288,7 +343,8 @@ def alloc_decode_pages(page_refs, need):
 
 
 def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: int,
-                 caches: Optional[Cache] = None, cfg: Optional[ModelConfig] = None):
+                 caches: Optional[Cache] = None, cfg: Optional[ModelConfig] = None,
+                 scales=None):
     """Copy-on-write for the fused decode block, applied before the k-step scan.
 
     Every logical page the block will write — pages overlapping positions
@@ -304,6 +360,11 @@ def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: i
     shared prefix when the scan starts.  Without ``caches`` only
     (refs, tables) is returned — the legacy gather-view path carries the
     prefix bytes through its whole-page writeback instead.
+
+    With ``scales`` (int8 pools) each redirected page's quant scale is copied
+    alongside its bytes — the copy carries bit-identical int8 payloads AND
+    scales, so a COW'd shared prefix dequantizes to exactly the original
+    values — and (refs, tables, caches, scales) is returned.
 
     Pure arithmetic inside the donated jitted block — no host syncs; the
     fork-time page reservation guarantees free pages exist for every possible
@@ -327,15 +388,24 @@ def cow_redirect(page_refs, block_tables, pos0, will_write, k: int, page_size: i
             # fresh already carries the trash index for non-redirected slots,
             # so the copy is one unconditional page-granular scatter per leaf
             new_caches = []
+            new_scales = [] if scales is not None else None
             for i, (mixer, _) in enumerate(cfg.block_pattern):
                 if mixer == "attn":
                     def cp(pool):
                         return pool.at[:, fresh].set(pool[:, physc])
                     new_caches.append(jax.tree.map(cp, caches[i]))
+                    if scales is not None:
+                        new_scales.append(jax.tree.map(cp, scales[i]))
                 else:
                     new_caches.append(caches[i])
+                    if scales is not None:
+                        new_scales.append(scales[i])
             caches = new_caches
+            if scales is not None:
+                scales = new_scales
     if caches is not None:
+        if scales is not None:
+            return refs, bt, caches, scales
         return refs, bt, caches
     return refs, bt
 
@@ -394,34 +464,56 @@ def paged_admit(
     refs = refs.at[reg].add(1, mode="drop")
     block_tables = state.block_tables.at[slot].set(page_ids)
 
+    def pack_pages(src):
+        # src [R, 1, L1, ...] -> (pages [R, n_src, ps, ...], tgt [n_src]).
+        # Pack page m holds logical page pack_page0 + m; targets outside
+        # [n_shared, n_need) — shared prefix pages and bucket garbage — carry
+        # the trash index.
+        L1 = src.shape[2]
+        n_src = min(-(-L1 // ps), pages_per_slot)
+        pad = n_src * ps - L1
+        row = src[:, 0]
+        if pad > 0:
+            row = jnp.pad(row, [(0, 0), (0, pad)] + [(0, 0)] * (row.ndim - 2))
+        pages = row[:, : n_src * ps].reshape(
+            (row.shape[0], n_src, ps) + row.shape[2:]
+        )
+        tgt_logical = pack_page0 + jnp.arange(n_src)
+        tgt = jnp.where(
+            (tgt_logical >= n_shared) & (tgt_logical < n_need),
+            page_ids[jnp.clip(tgt_logical, 0, pages_per_slot - 1)],
+            n_pages,
+        )
+        return pages, tgt
+
     caches = []
+    new_scales = None if state.scales is None else []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer == "attn":
-            def ins(dst, src):
-                # dst [R, P+1, ps, ...], src [R, 1, L1, ...] -> ONE scatter of
-                # the pack's pages.  Pack page m holds logical page
-                # pack_page0 + m; targets outside [n_shared, n_need) — shared
-                # prefix pages and bucket garbage — carry the trash index.
-                L1 = src.shape[2]
-                n_src = min(-(-L1 // ps), pages_per_slot)
-                pad = n_src * ps - L1
-                row = src[:, 0]
-                if pad > 0:
-                    row = jnp.pad(row, [(0, 0), (0, pad)] + [(0, 0)] * (row.ndim - 2))
-                pages = row[:, : n_src * ps].reshape(
-                    (row.shape[0], n_src, ps) + row.shape[2:]
-                )
-                tgt_logical = pack_page0 + jnp.arange(n_src)
-                tgt = jnp.where(
-                    (tgt_logical >= n_shared) & (tgt_logical < n_need),
-                    page_ids[jnp.clip(tgt_logical, 0, pages_per_slot - 1)],
-                    n_pages,
-                )
-                return dst.at[:, tgt].set(pages.astype(dst.dtype))
+            if state.scales is None:
+                def ins(dst, src):
+                    # dst [R, P+1, ps, ...]: ONE scatter of the pack's pages
+                    pages, tgt = pack_pages(src)
+                    return dst.at[:, tgt].set(pages.astype(dst.dtype))
+
+                caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+            else:
+                # int8 pools: quantize each pack page (fresh absmax) and
+                # scatter payload + scale with the SAME trash-steered targets
+                leaf, sc = {}, {}
+                for kk in state.caches[i]:
+                    pages, tgt = pack_pages(single[i][kk])
+                    qv, s = quantize_pages(pages)
+                    leaf[kk] = state.caches[i][kk].at[:, tgt].set(qv)
+                    sc[kk] = state.scales[i][kk].at[:, tgt].set(s)
+                caches.append(leaf)
+                new_scales.append(sc)
         else:
             def ins(dst, src):
                 return jax.lax.dynamic_update_index_in_dim(dst, src[:, 0].astype(dst.dtype), slot, 1)
-        caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+            caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+            if new_scales is not None:
+                new_scales.append(None)
 
     return PagedDecodeState(
         caches=caches,
@@ -431,6 +523,7 @@ def paged_admit(
         positions=state.positions.at[slot].set(true_len),
         active=state.active.at[slot].set(True),
         key=state.key,
+        scales=new_scales,
     )
 
 
@@ -461,29 +554,52 @@ def paged_append_chunk(
     (free_idx,) = jnp.nonzero(state.page_refs == 0, size=n_alloc, fill_value=n_pages)
     refs = state.page_refs.at[free_idx].set(1, mode="drop")
     ps = page_size
+
+    def pack_pages(src):
+        # src [R, 1, L1, ...]: pack page m maps to free_idx[m] for
+        # m < n_alloc, trash beyond (bucket pad)
+        L1 = src.shape[2]
+        n_src = -(-L1 // ps)
+        pad = n_src * ps - L1
+        row = src[:, 0]
+        if pad > 0:
+            row = jnp.pad(row, [(0, 0), (0, pad)] + [(0, 0)] * (row.ndim - 2))
+        pages = row.reshape((row.shape[0], n_src, ps) + row.shape[2:])
+        m = jnp.arange(n_src)
+        tgt = jnp.where(
+            m < n_alloc, free_idx[jnp.clip(m, 0, n_alloc - 1)], n_pages
+        )
+        return pages, tgt
+
     caches = []
+    new_scales = None if state.scales is None else []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer == "attn":
-            def ins(dst, src):
-                # dst [R, P+1, ps, ...], src [R, 1, L1, ...]: pack page m maps
-                # to free_idx[m] for m < n_alloc, trash beyond (bucket pad)
-                L1 = src.shape[2]
-                n_src = -(-L1 // ps)
-                pad = n_src * ps - L1
-                row = src[:, 0]
-                if pad > 0:
-                    row = jnp.pad(row, [(0, 0), (0, pad)] + [(0, 0)] * (row.ndim - 2))
-                pages = row.reshape((row.shape[0], n_src, ps) + row.shape[2:])
-                m = jnp.arange(n_src)
-                tgt = jnp.where(
-                    m < n_alloc, free_idx[jnp.clip(m, 0, n_alloc - 1)], n_pages
-                )
-                return dst.at[:, tgt].set(pages.astype(dst.dtype))
+            if state.scales is None:
+                def ins(dst, src):
+                    # dst [R, P+1, ps, ...]: ONE scatter of the chunk's pages
+                    pages, tgt = pack_pages(src)
+                    return dst.at[:, tgt].set(pages.astype(dst.dtype))
 
-            caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+                caches.append(jax.tree.map(ins, state.caches[i], single[i]))
+            else:
+                leaf, sc = {}, {}
+                for kk in state.caches[i]:
+                    pages, tgt = pack_pages(single[i][kk])
+                    qv, s = quantize_pages(pages)
+                    leaf[kk] = state.caches[i][kk].at[:, tgt].set(qv)
+                    sc[kk] = state.scales[i][kk].at[:, tgt].set(s)
+                caches.append(leaf)
+                new_scales.append(sc)
         else:
             caches.append(state.caches[i])
-    return state._replace(caches=caches, page_refs=refs), free_idx.astype(jnp.int32)
+            if new_scales is not None:
+                new_scales.append(None)
+    if new_scales is not None:
+        new_state = state._replace(caches=caches, page_refs=refs, scales=new_scales)
+    else:
+        new_state = state._replace(caches=caches, page_refs=refs)
+    return new_state, free_idx.astype(jnp.int32)
 
 
 def paged_fork(
@@ -520,6 +636,7 @@ def paged_fork(
         positions=state.positions.at[dst].set(pos),
         active=state.active.at[dst].set(True),
         key=state.key,
+        scales=state.scales,  # shared pages share their scales (COW copies both)
     )
 
 
@@ -637,13 +754,24 @@ def paged_extract_request(
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         c = state.caches[i]
         if mixer == "attn":
-            def ex(pool):
+            sc_i = None if state.scales is None else state.scales[i]
+
+            def ex(pool, sc=None):
                 rows = pool[:, bt]  # [R, n_pg - start_page, ps, ...]
+                if sc is not None:
+                    # int8 pool: the pack is the DEQUANTIZED fp32 values, so
+                    # re-admission requantizes bit-exactly (the absmax element
+                    # reconstructs to +/-127 * scale -> identical scale+payload)
+                    rows = dequantize_pages(rows, sc[:, bt])
                 flat = rows.reshape(
                     (rows.shape[0], (n_pg - start_page) * ps) + rows.shape[3:]
                 )
                 return flat[:, None, : length - start_page * ps]
-            out.append(jax.tree.map(ex, c))
+
+            if sc_i is None:
+                out.append(jax.tree.map(ex, c))
+            else:
+                out.append({kk: ex(c[kk], sc_i[kk]) for kk in c})
         else:
             out.append(jax.tree.map(lambda a: a[:, slot : slot + 1], c))
     return out
@@ -693,7 +821,7 @@ def paged_swap_in(
     )
 
 
-def gather_prefix_pack(caches: Cache, tables, cfg: ModelConfig) -> Cache:
+def gather_prefix_pack(caches: Cache, tables, cfg: ModelConfig, scales=None) -> Cache:
     """Gather cached prefix pages into a contiguous prefix-KV pack for
     tail-only prefill: attn pool leaves [R, P+1, ps, ...] + ``tables``
     [B, n_pg] int32 -> [R, B, n_pg * ps, ...].
@@ -704,17 +832,28 @@ def gather_prefix_pack(caches: Cache, tables, cfg: ModelConfig) -> Cache:
     mixers, so padding never perturbs the tail computation.  Mamba leaves
     yield None — SSM state is a whole-prompt function and is never shared
     (hybrid models take the full-recompute, pages-only sharing path).
+
+    With ``scales`` (int8 pools) the gathered pages are dequantized, so the
+    pack feeds the fp32 tail-prefill math unchanged.
     """
     B = tables.shape[0]
     out = []
     for i, (mixer, _) in enumerate(cfg.block_pattern):
         if mixer == "attn":
-            def g(pool):
+            sc_i = None if scales is None else scales[i]
+
+            def g(pool, sc=None):
                 rows = pool[:, tables]  # [R, B, n_pg, ps, ...]
+                if sc is not None:
+                    rows = dequantize_pages(rows, sc[:, tables])
                 return rows.reshape(
                     (rows.shape[0], B, rows.shape[2] * rows.shape[3]) + rows.shape[4:]
                 )
-            out.append(jax.tree.map(g, caches[i]))
+
+            if sc_i is None:
+                out.append(jax.tree.map(g, caches[i]))
+            else:
+                out.append({kk: g(caches[i][kk], sc_i[kk]) for kk in caches[i]})
         else:
             out.append(None)
     return out
@@ -759,6 +898,11 @@ def audit(
        admit-time hold mirror never exceeds the device truth
        (``href[p] <= refs[p]``; decode-growth pages legitimately have
        device refs with no mirror entry, never the reverse).
+    5. **scale-leaf liveness** (int8 pools, ``state.scales`` present) — every
+       attention scale leaf has the ``[R, n_pages + 1]`` shape, and every
+       LIVE page (``refs > 0``) carries a finite, non-negative scale in every
+       leaf.  The trash page's scale (index n_pages) is a write-only scratch
+       and is never checked — it is never read by construction.
 
     ``index_pages`` / ``chunk_holds`` are iterables of page ids WITH
     multiplicity (one occurrence per hold).  Pure read-only host math over
@@ -831,18 +975,47 @@ def audit(
                 f"page {int(p)}: host hold mirror {int(href[p])} exceeds "
                 f"device refs {int(refs[p])}"
             )
+    if state.scales is not None:
+        live = refs > 0
+        for i, sc_leaf in enumerate(state.scales):
+            if sc_leaf is None:
+                continue
+            for name in sorted(sc_leaf):
+                sc = np.asarray(sc_leaf[name])  # fastpath: allow[FP001] audit-cadence sync (small scale leaf)
+                if sc.ndim != 2 or sc.shape[1] != n_pages + 1:
+                    probs.append(
+                        f"scale leaf {i}/{name}: shape {sc.shape} != "
+                        f"[R, n_pages + 1 = {n_pages + 1}]"
+                    )
+                    continue
+                bad_sc = (~np.isfinite(sc[:, :n_pages])) | (sc[:, :n_pages] < 0)
+                for p in np.nonzero(bad_sc.any(axis=0) & live)[0][:4]:
+                    probs.append(
+                        f"scale leaf {i}/{name}: live page {int(p)} has a "
+                        f"non-finite or negative scale"
+                    )
     return AuditReport(ok=not probs, n_pages=n_pages, discrepancies=probs)
 
 
 def paged_kv_cache_bytes(
-    cfg: ModelConfig, max_slots: int, n_pages: int, page_size: int, max_len: int = 0
+    cfg: ModelConfig, max_slots: int, n_pages: int, page_size: int, max_len: int = 0,
+    kv_dtype: str = "fp32",
 ) -> int:
     """HBM footprint of the paged pools (incl. the trash page) + per-slot
-    mamba state + the block tables and allocator arrays."""
+    mamba state + the block tables and allocator arrays.
+
+    ``kv_dtype="int8"`` counts attention leaves at 1 byte per element plus
+    the ``[R, n_pages + 1]`` fp32 scale leaf each — the admission math the
+    scheduler and benches use to size int8 pools at fixed HBM."""
+    assert kv_dtype in KV_DTYPES, kv_dtype
     specs = M.init_paged_cache_specs(cfg, max_slots, n_pages + 1, page_size)
-    pool = sum(
-        int(jnp.prod(jnp.array(s.shape))) * jnp.dtype(s.dtype).itemsize
-        for s in jax.tree.leaves(specs)
-    )
+    pool = 0
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        for s in jax.tree.leaves(specs[i]):
+            n = int(jnp.prod(jnp.array(s.shape)))
+            if mixer == "attn" and kv_dtype == "int8":
+                pool += n * 1 + cfg.n_repeats * (n_pages + 1) * 4
+            else:
+                pool += n * jnp.dtype(s.dtype).itemsize
     tables = n_pages * 4 + (max_slots * (max_len // page_size)) * 4
     return pool + tables

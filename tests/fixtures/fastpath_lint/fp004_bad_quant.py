@@ -1,0 +1,14 @@
+"""FP004 bad (quant): a scale-leaf hold increment with no release path.
+
+The int8 KV path mirrors per-page scale holds in ``_scale_refs``; like
+``_href`` / ``_chunk_holds``, every increment must pair with a decrement
+reachable from the ``_forget`` funnel or quantized pages leak their scales.
+"""
+
+
+class QuantPool:
+    def __init__(self):
+        self._scale_refs = {}
+
+    def admit_quant(self, p):
+        self._scale_refs[p] = self._scale_refs.get(p, 0) + 1

@@ -1,0 +1,15 @@
+"""FP004 good (quant): the scale-leaf hold pairs with a funnel release."""
+
+
+class QuantPool:
+    def __init__(self):
+        self._scale_refs = {}
+
+    def admit_quant(self, p):
+        self._scale_refs[p] = self._scale_refs.get(p, 0) + 1
+
+    def _release_scales(self, p):
+        self._scale_refs[p] -= 1
+
+    def _forget(self, p):
+        self._release_scales(p)

@@ -44,7 +44,10 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
              rt_mism=0, rt_load=(4, 4),
              with_hbm=True, hbm_speedup=1.2,
              with_uni=True, uni_mism=0, uni_p99=0.002, uni_serial_p99=0.006,
-             uni_stalls=2, uni_rows=2, uni_util=2.0 / 3.0):
+             uni_stalls=2, uni_rows=2, uni_util=2.0 / 3.0,
+             with_quant=True, q_conc_ratio=2.0, q_err=0.25, q_mism=0,
+             q_spt_ratio=1.5, q_dd_mism=0, q_dd_audit=0, q_dd_saved=64,
+             q_dd_base=110, q_int8_pages=37):
     out = {
         "tokens_per_s": {"slab": 1000.0, "paged": 1000.0 * tps_ratio,
                          "ratio": tps_ratio},
@@ -110,6 +113,30 @@ def _metrics(tps_ratio=0.9, spt_ratio=1.1, saving=0.45, mism=0, smism=0,
             "tbt_p99_ratio": uni_p99 / uni_serial_p99,
             "tbt_p99_improved": uni_p99 < uni_serial_p99,
             "stream_mismatches": uni_mism,
+        }
+    if with_quant:
+        out["quantized_kv"] = {
+            "page_size": 16,
+            "hbm_budget_bytes": 100_000,
+            "pages_at_budget": {"fp32": 18, "int8": q_int8_pages,
+                                "capacity_ratio": q_int8_pages / 18},
+            "fixed_hbm_concurrency": {"fp32": 7,
+                                      "int8": int(7 * q_conc_ratio),
+                                      "ratio": q_conc_ratio},
+            "decode_s_per_token": {"fp32": 1e-4, "int8": 1e-4 * q_spt_ratio,
+                                   "ratio": q_spt_ratio},
+            "max_logit_err": q_err,
+            "logit_drive_mismatches": 0,
+            "stream_mismatches": q_mism,
+            "dedup": {
+                "requests": 4,
+                "prefill_tokens": {"baseline": q_dd_base,
+                                   "dedup": q_dd_base - q_dd_saved},
+                "groups": 1 if q_dd_saved else 0,
+                "saved_tokens": q_dd_saved,
+                "stream_mismatches": q_dd_mism,
+                "audit_discrepancies": q_dd_audit,
+            },
         }
     return out
 
@@ -310,3 +337,67 @@ def test_regression_compare_skips_unified_for_old_baselines():
     checks = compare(_metrics(), _metrics(with_uni=False))
     assert all(ok for _, ok, _ in checks)
     assert not any(n.startswith("unified_") for n, _, _ in checks)
+
+
+def test_regression_compare_quant_gates():
+    # fixed-HBM concurrency floor is HARD: a committed reference cannot
+    # lower it
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_conc_ratio=1.5),
+                                      _metrics(q_conc_ratio=1.5))
+    }
+    assert not checks["quant_concurrency_floor"]
+    # the per-step logit error gate is HARD too
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_err=0.9), _metrics())
+    }
+    assert not checks["quant_logit_error_gate"]
+    # int8 greedy streams must match fp32 at reduced scale
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_mism=1), _metrics())
+    }
+    assert not checks["quant_stream_mismatches"]
+    # decode walltime overhead compared as a ratio with tolerance
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_spt_ratio=1.5 * 1.3),
+                                      _metrics())
+    }
+    assert not checks["quant_decode_s_per_token_ratio"]
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_spt_ratio=1.5 * 1.2),
+                                      _metrics())
+    }
+    assert checks["quant_decode_s_per_token_ratio"]
+
+
+def test_regression_compare_dedup_gates():
+    # dedup streams must replay the dedup-free schedule bit for bit
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_dd_mism=1), _metrics())
+    }
+    assert not checks["dedup_stream_mismatches"]
+    # refcounts conserved after the dedup drain
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_dd_audit=2), _metrics())
+    }
+    assert not checks["dedup_audit_clean"]
+    # dispatched + saved must balance against the baseline, savings > 0
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_dd_saved=0), _metrics())
+    }
+    assert not checks["dedup_token_accounting"]
+    # the deterministic capacity/accounting shape compares exactly
+    checks = {
+        n: ok for n, ok, _ in compare(_metrics(q_int8_pages=30), _metrics())
+    }
+    assert not checks["quant_capacity_committed"]
+    assert checks["quant_concurrency_floor"]  # floors still independently ok
+
+
+def test_regression_compare_skips_quant_for_old_baselines():
+    """A pre-quantization committed reference must not fail the gate."""
+    checks = compare(_metrics(), _metrics(with_quant=False))
+    assert all(ok for _, ok, _ in checks)
+    assert not any(
+        n.startswith("quant_") or n.startswith("dedup_") for n, _, _ in checks
+    )

@@ -29,6 +29,7 @@ BAD_EXPECT = {
     "fp002_bad.py": [("fp002_bad.py", 9, "FP002")],
     "fp003_bad.py": [("fp003_bad.py", 12, "FP003")],
     "fp004_bad.py": [("fp004_bad.py", 9, "FP004")],
+    "fp004_bad_quant.py": [("fp004_bad_quant.py", 14, "FP004")],
     "fp005_bad_faults.py": [("fp005_bad_faults.py", 6, "FP005")],
 }
 
@@ -61,6 +62,7 @@ def test_cli_exits_nonzero_on_violation(name):
         "fp002_good.py",
         "fp003_good.py",
         "fp004_good.py",
+        "fp004_good_quant.py",
         "fp005_good_faults.py",
     ],
 )
